@@ -1,0 +1,99 @@
+"""Shared benchmark harness utilities: dataset prep + measure evaluation."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.classify import (knn_error, select_nu, select_radius,
+                            select_theta_gamma, svm_error)
+from repro.core import (Measure, make_measure, normalized_gram,
+                        pairwise_path_counts)
+from repro.data import load
+
+# benchmark dataset suite (offline synthetic UCR families, DESIGN.md §7.1)
+BENCH_DATASETS = ("CBF", "SyntheticControl", "TwoPatterns", "GunPoint",
+                  "Trace", "ECG", "Waves")
+
+
+def timed(fn, *args):
+    t0 = time.time()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    return out, (time.time() - t0)
+
+
+class DatasetBench:
+    """Per-dataset context: tuned meta-params + occupancy counts, cached."""
+
+    def __init__(self, name: str, fast: bool = False):
+        kw = {}
+        if fast:
+            kw = dict(n_train=24, n_test=40)
+        self.ds = load(name, **kw)
+        self.name = name
+        self.Xtr = jnp.asarray(self.ds.X_train)
+        self.Xte = jnp.asarray(self.ds.X_test)
+        self.T = self.ds.T
+        self.counts = pairwise_path_counts(self.Xtr)
+        # meta-parameter selection on train only (paper Sec. V-B)
+        self.sel_radius = select_radius(self.Xtr, self.ds.y_train)
+        self.sel_sp = select_theta_gamma(
+            self.Xtr, self.ds.y_train, name="spdtw", counts=self.counts,
+            thetas=(0, 1, 2, 4, 8), gammas=(0.0, 0.5))
+        self.nu = select_nu(self.Xtr, self.ds.y_train, name="krdtw",
+                            grid=(0.1, 0.5, 2.0)).nu
+        self.sel_spk = select_theta_gamma(
+            self.Xtr, self.ds.y_train, name="sp_krdtw", counts=self.counts,
+            thetas=(0, 1, 2, 4, 8), nu=self.nu)
+
+    def measure(self, name: str) -> Measure:
+        sp = {"spdtw": self.sel_sp.sp, "sp_krdtw": self.sel_spk.sp}.get(name)
+        return make_measure(name, self.T, sp=sp, nu=self.nu,
+                            radius=self.sel_radius.radius)
+
+    def knn_err(self, name: str):
+        m = self.measure(name)
+        cross, dt = timed(m.cross, self.Xte, self.Xtr)
+        return (knn_error(cross, self.ds.y_train, self.ds.y_test),
+                m.visited_cells, dt)
+
+    def svm_err(self, name: str):
+        m = self.measure(name)
+        lg_tt, _ = timed(m.gram_log, self.Xtr, self.Xtr)
+        lg_et, dt = timed(m.gram_log, self.Xte, self.Xtr)
+        d_tt = jnp.diag(lg_tt)
+        d_ee = jnp.asarray([float(m.logk_fn(x, x)) for x in self.Xte])
+        Ktr = normalized_gram(lg_tt, d_tt, d_tt)
+        Kte = normalized_gram(lg_et, d_ee, d_tt)
+        return (svm_error(Ktr, Kte, self.ds.y_train, self.ds.y_test,
+                          self.ds.n_classes), m.visited_cells, dt)
+
+
+def wilcoxon_signed_rank(a: np.ndarray, b: np.ndarray) -> float:
+    """Two-sided Wilcoxon signed-rank p-value (normal approximation;
+    scipy-free). Ties/zeros handled by the standard reductions."""
+    d = np.asarray(a, float) - np.asarray(b, float)
+    d = d[d != 0]
+    n = len(d)
+    if n < 6:
+        return 1.0
+    ranks = np.argsort(np.argsort(np.abs(d))) + 1.0
+    # average ranks for ties
+    order = np.abs(d)
+    for v in np.unique(order):
+        sel = order == v
+        if sel.sum() > 1:
+            ranks[sel] = ranks[sel].mean()
+    w_pos = ranks[d > 0].sum()
+    w_neg = ranks[d < 0].sum()
+    w = min(w_pos, w_neg)
+    mu = n * (n + 1) / 4
+    sigma = np.sqrt(n * (n + 1) * (2 * n + 1) / 24)
+    z = (w - mu + 0.5) / sigma
+    from math import erf, sqrt
+    p = 2 * 0.5 * (1 + erf(z / sqrt(2)))
+    return min(max(p, 0.0), 1.0)

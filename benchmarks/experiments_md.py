@@ -1,0 +1,187 @@
+"""Render EXPERIMENTS.md sections from artifacts (dry-run + bench JSONs).
+
+  PYTHONPATH=src python -m benchmarks.experiments_md > EXPERIMENTS.generated.md
+
+The checked-in EXPERIMENTS.md = this output + the hand-written §Perf
+hypothesis log (kept in benchmarks/perf_log.md).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from . import roofline
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def _load(name):
+    p = os.path.join(ART, "bench", f"{name}.json")
+    if os.path.exists(p):
+        with open(p) as f:
+            return json.load(f)
+    return None
+
+
+def dryrun_section(cells):
+    cells = {k: v for k, v in cells.items() if k[3] == "base"}
+    n_ok = sum(1 for d in cells.values() if d["status"] == "ok")
+    n_skip = sum(1 for d in cells.values() if d["status"] == "skipped")
+    n_err = sum(1 for d in cells.values() if d["status"] == "error")
+    lines = ["## §Dry-run", "",
+             f"Cells compiled: **{n_ok} ok**, {n_skip} skipped "
+             f"(documented long_500k rules), {n_err} errors. "
+             "Every cell = `.lower().compile()` of the real scanned step on "
+             "the production mesh with explicit in/out shardings; memory = "
+             "`compiled.memory_analysis()` per device.", "",
+             "",
+             "`fits` uses the raw CPU-backend buffer totals, which include "
+             "f32 copies of bf16 weights/caches that native-bf16 TPUs never "
+             "allocate — §Perf attributes every overage (e.g. the 236B "
+             "train cell is ~13-14 GB TPU-side). The paper-plane Gram job "
+             "(launch/gram.py) also compiles on the 2x16x16 mesh "
+             "(artifacts/gram_dryrun.json).", "",
+             "| arch | shape | mesh | compile_s | peak GB/dev | fits 16GB |",
+             "|---|---|---|---|---|---|"]
+    for key in sorted(cells):
+        d = cells[key]
+        if d["status"] != "ok":
+            continue
+        peak = d["memory"]["peak_bytes_est"] / 1e9
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+            f"| {d.get('compile_s', '-')} | {peak:.2f} "
+            f"| {'yes' if d['memory']['fits_16GB'] else 'NO'} |")
+    skips = [d for d in cells.values() if d["status"] == "skipped"]
+    if skips:
+        lines += ["", "Skipped cells (per assignment rules):", ""]
+        seen = set()
+        for d in skips:
+            k = (d["arch"], d["shape"])
+            if k in seen:
+                continue
+            seen.add(k)
+            lines.append(f"* {d['arch']} x {d['shape']}: {d['reason']}")
+    return "\n".join(lines)
+
+
+def roofline_section(cells):
+    lines = ["## §Roofline", "",
+             "Terms per (arch x shape) on the single-pod 16x16 mesh, from "
+             "the exact G=1/G=2 cost-probe extrapolation (dryrun.py "
+             "docstring): `compute = FLOPs_dev / 197e12`, `memory = "
+             "bytes_dev / 819e9`, `collective = wire_bytes_dev / 50e9`. "
+             "`useful` = MODEL_FLOPS (6*N_active*D train, 2*N_active*D "
+             "inference) / HLO FLOPs.", "",
+             roofline.table(cells), ""]
+    # per-cell one-liners: what moves the dominant term
+    lines.append("Dominant-term notes (what would move it down):")
+    lines.append("")
+    notes = []
+    for key in sorted(cells):
+        d = cells[key]
+        if d.get("status") != "ok" or "roofline" not in d or \
+                d["mesh"] != "16x16":
+            continue
+        rl = d["roofline"]
+        dom = rl["dominant"]
+        if d["arch"] in ("minicpm-2b", "gemma3-4b"):
+            notes.append(
+                f"* {d['arch']} x {d['shape']}: dominant={dom}, "
+                f"useful={d.get('useful_flops_ratio', 0):.2f} — the low "
+                "ratio is the replicated-attention TP fallback (head "
+                "counts indivisible by the 16-way model axis, DESIGN §5): "
+                "16x redundant attention FLOPs. Fix: head_dim-sharded "
+                "attention (hd divides 16) at the cost of per-chunk score "
+                "psums — the quantified trade left on the table.")
+            continue
+        if dom == "memory":
+            fix = ("flash-attention custom-VJP (drop stacked softmax "
+                   "residuals) + bf16 activation collectives"
+                   if d["kind"] == "train" else
+                   "KV-cache quantization (int8) halves cache reads")
+        elif dom == "collective":
+            fix = ("reduce-scatter/all-gather sequence-sharded TP "
+                   "(halves all-reduce wire) + bf16 collectives")
+        else:
+            fix = ("larger per-device batch or milder remat policy "
+                   "(recompute is the compute overhead)")
+        notes.append(f"* {d['arch']} x {d['shape']}: dominant={dom}, "
+                     f"useful={d.get('useful_flops_ratio', 0):.2f} — {fix}")
+    return "\n".join(lines + notes)
+
+
+def paper_tables_section():
+    out = ["## Paper-table reproductions (offline synthetic UCR suite)", ""]
+    t2 = _load("table2_knn")
+    if t2:
+        ms = list(next(iter(t2["errors"].values())).keys())
+        out += ["### Table II — 1-NN error", "",
+                "| dataset | " + " | ".join(ms) + " |",
+                "|---|" + "---|" * len(ms)]
+        for d, errs in t2["errors"].items():
+            out.append(f"| {d} | " + " | ".join(
+                f"{errs[m]:.3f}" for m in ms) + " |")
+        out.append("| **mean rank** | " + " | ".join(
+            f"{t2['mean_rank'][m]:.2f}" for m in ms) + " |")
+        out += ["", "Wilcoxon signed-rank p-values (Table III analogue): " +
+                ", ".join(f"{k}={v:.3f}" for k, v in sorted(
+                    t2["wilcoxon"].items())
+                    if "sp" in k or "dtw_sc" in k)][:2]
+    t4 = _load("table4_svm")
+    if t4:
+        ks = list(next(iter(t4["errors"].values())).keys())
+        out += ["", "### Table IV — SVM error", "",
+                "| dataset | " + " | ".join(ks) + " |",
+                "|---|" + "---|" * len(ks)]
+        for d, errs in t4["errors"].items():
+            out.append(f"| {d} | " + " | ".join(
+                f"{errs[k]:.3f}" for k in ks) + " |")
+        out.append("| **mean rank** | " + " | ".join(
+            f"{t4['mean_rank'][k]:.2f}" for k in ks) + " |")
+    t6 = _load("table6_speedup")
+    if t6:
+        out += ["", "### Table VI — visited cells / speed-up", "",
+                "| dataset | T^2 | SC cells | SC S% | SP cells | SP S% | "
+                "tile S% (TPU) | theta |",
+                "|---|---|---|---|---|---|---|---|"]
+        for d, r in t6["rows"].items():
+            out.append(
+                f"| {d} | {r['T2_cells']} | {r['dtw_sc_cells']} "
+                f"| {r['dtw_sc_S%']:.1f} | {r['spdtw_cells']} "
+                f"| {r['spdtw_S%']:.1f} | {r['tile_S%']:.1f} "
+                f"| {r['theta']} |")
+        avg = t6["average_speedup"]
+        out.append("| **avg** |  |  | {:.1f} |  | {:.1f} | {:.1f} |  |"
+                   .format(avg["dtw_sc_S%"], avg["spdtw_S%"],
+                           avg["tile_S%"]))
+    kw = _load("kernel_walltime")
+    if kw:
+        out += ["", "### Kernel wall-clock (CPU reference backend, "
+                "us/pair, structural)", ""]
+        out += [f"* {k}: {v:.0f} us" for k, v in kw.items()
+                if not k.endswith("fraction")]
+    return "\n".join(out)
+
+
+def main():
+    cells = roofline.load_artifacts()
+    print("# EXPERIMENTS")
+    print()
+    print("Generated by `python -m benchmarks.experiments_md` from "
+          "artifacts/. Hardware constants and formulas: DESIGN.md §9.")
+    print()
+    print(dryrun_section(cells))
+    print()
+    print(roofline_section(cells))
+    print()
+    print(paper_tables_section())
+    print()
+    perf_log = os.path.join(os.path.dirname(__file__), "perf_log.md")
+    if os.path.exists(perf_log):
+        print(open(perf_log).read())
+
+
+if __name__ == "__main__":
+    main()

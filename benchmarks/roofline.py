@@ -1,0 +1,107 @@
+"""Assignment deliverable (g): roofline table from the dry-run artifacts.
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and renders
+EXPERIMENTS.md-ready tables: per (arch x shape) the three roofline terms,
+the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, memory fit, and the
+multi-pod compile status.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from collections import defaultdict
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def load_artifacts(directory: str = ART):
+    cells = {}
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        key = (d["arch"], d["shape"], d["mesh"],
+               d.get("variant", "base"))
+        cells[key] = d
+    return cells
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def table(cells, variant="base"):
+    lines = ["| arch | shape | compute | memory | collective | dominant | "
+             "useful | mem_fit | multi-pod |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    archs = sorted({k[0] for k in cells})
+    for arch in archs:
+        for shape in SHAPE_ORDER:
+            single = cells.get((arch, shape, "16x16", variant))
+            multi = cells.get((arch, shape, "2x16x16", variant))
+            if single is None:
+                continue
+            if single["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | — | — | — | skipped | "
+                             f"— | — | — |")
+                continue
+            if single["status"] == "error":
+                lines.append(f"| {arch} | {shape} | ERR | | | | | | |")
+                continue
+            rl = single.get("roofline", {})
+            mp = "-"
+            if multi is not None:
+                mp = {"ok": "ok", "skipped": "skip",
+                      "error": "ERR"}[multi["status"]]
+            lines.append(
+                f"| {arch} | {shape} "
+                f"| {fmt_s(rl.get('compute_s'))} "
+                f"| {fmt_s(rl.get('memory_s'))} "
+                f"| {fmt_s(rl.get('collective_s'))} "
+                f"| {rl.get('dominant', '-')} "
+                f"| {single.get('useful_flops_ratio', 0):.2f} "
+                f"| {'yes' if single['memory']['fits_16GB'] else 'NO'} "
+                f"| {mp} |")
+    return "\n".join(lines)
+
+
+def summary(cells, variant="base"):
+    n_ok = n_skip = n_err = 0
+    worst = []
+    for (arch, shape, mesh, var), d in cells.items():
+        if var != variant or mesh != "16x16":
+            continue
+        if d["status"] == "ok":
+            n_ok += 1
+            if "roofline" in d:
+                rl = d["roofline"]
+                frac = (rl["compute_s"] / rl["bound_time_s"]
+                        if rl["bound_time_s"] else 0)
+                worst.append((frac, arch, shape, rl["dominant"]))
+        elif d["status"] == "skipped":
+            n_skip += 1
+        else:
+            n_err += 1
+    worst.sort()
+    return {"ok": n_ok, "skipped": n_skip, "errors": n_err,
+            "worst_roofline_fraction": worst[:5],
+            "best_roofline_fraction": worst[-5:]}
+
+
+def main():
+    cells = load_artifacts()
+    print(table(cells))
+    print()
+    print(json.dumps(summary(cells), indent=1, default=str))
+    return cells
+
+
+if __name__ == "__main__":
+    main()

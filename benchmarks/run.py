@@ -1,0 +1,129 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One function per paper table/figure + the kernel wall-clock micro-bench +
+the roofline table (from dry-run artifacts, if present). Prints a final
+``name,us_per_call,derived`` CSV summary per the harness contract.
+
+Full-protocol runs: ``python -m benchmarks.run --full`` (slower, bigger
+test splits). Artifacts land in artifacts/bench/*.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def bench_kernel_walltime():
+    """Wall-clock of the batched DP paths on CPU (jnp reference backend):
+    full vs corridor vs learned-sparse, same pair batch."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import learn_sparse_paths
+    from repro.kernels import ref
+
+    rng = np.random.default_rng(0)
+    B, T = 64, 128
+    x = jnp.asarray(rng.normal(size=(B, T)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(B, T)).astype(np.float32))
+    base = np.sin(np.linspace(0, 3 * np.pi, T))
+    Xtr = jnp.asarray((base[None] + 0.3 * rng.normal(size=(12, T))
+                       ).astype(np.float32))
+    sp = learn_sparse_paths(Xtr, theta=1.0)
+
+    out = {}
+    for name, fn in [
+        ("dtw_full", lambda: ref.dtw_batch(x, y)),
+        ("dtw_sc_r8", lambda: ref.dtw_band_batch(x, y, 8)),
+        ("spdtw", lambda: ref.wdtw_batch(x, y, sp.weights)),
+        ("log_krdtw", lambda: ref.log_krdtw_batch(x, y, 0.5)),
+        ("sp_log_krdtw",
+         lambda: ref.log_krdtw_masked_batch(x, y, 0.5, sp.support)),
+    ]:
+        fn()  # compile
+        t0 = time.time()
+        reps = 3
+        for _ in range(reps):
+            jax.block_until_ready(fn())
+        out[name] = (time.time() - t0) / reps / B * 1e6  # us per pair
+    out["sp_cells_fraction"] = sp.n_cells / (T * T)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full-size dataset splits (slow)")
+    ap.add_argument("--skip", default="",
+                    help="comma-separated benches to skip")
+    args, _ = ap.parse_known_args()
+    fast = not args.full
+    skip = set(args.skip.split(",")) if args.skip else set()
+    os.makedirs(ART, exist_ok=True)
+
+    results = {}
+    timings = {}
+
+    def run_bench(name, fn):
+        if name in skip:
+            return
+        print(f"\n================ {name} ================", flush=True)
+        t0 = time.time()
+        results[name] = fn()
+        timings[name] = time.time() - t0
+        with open(os.path.join(ART, f"{name}.json"), "w") as f:
+            json.dump(results[name], f, indent=1, default=str)
+
+    run_bench("kernel_walltime", bench_kernel_walltime)
+
+    from . import table2_knn, table4_svm, table6_speedup, occupancy_fig
+    run_bench("table6_speedup", lambda: table6_speedup.run(fast=fast))
+    run_bench("table2_knn", lambda: table2_knn.run(fast=fast))
+    run_bench("table4_svm", lambda: table4_svm.run(fast=fast))
+    run_bench("occupancy_fig", lambda: occupancy_fig.run(fast=fast))
+
+    def roofline_bench():
+        from . import roofline
+        cells = roofline.load_artifacts()
+        if not cells:
+            return {"note": "no dry-run artifacts; run repro.launch.dryrun"}
+        print(roofline.table(cells))
+        return roofline.summary(cells)
+
+    run_bench("roofline", roofline_bench)
+
+    # ---- harness contract: name,us_per_call,derived ----
+    print("\nname,us_per_call,derived")
+    kw = results.get("kernel_walltime", {})
+    for k, v in kw.items():
+        if k.endswith("fraction"):
+            continue
+        print(f"kernel/{k},{v:.1f},us_per_pair")
+    if "table6_speedup" in results:
+        avg = results["table6_speedup"]["average_speedup"]
+        for k, v in avg.items():
+            print(f"table6/{k},{timings.get('table6_speedup', 0)*1e6:.0f},"
+                  f"{v:.1f}")
+    if "table2_knn" in results:
+        for m, r in results["table2_knn"]["mean_rank"].items():
+            print(f"table2/mean_rank/{m},"
+                  f"{timings.get('table2_knn', 0)*1e6:.0f},{r:.2f}")
+    if "table4_svm" in results:
+        for m, r in results["table4_svm"]["mean_rank"].items():
+            print(f"table4/mean_rank/{m},"
+                  f"{timings.get('table4_svm', 0)*1e6:.0f},{r:.2f}")
+    if "roofline" in results and "ok" in results.get("roofline", {}):
+        r = results["roofline"]
+        print(f"roofline/cells_ok,{r['ok']},count")
+        print(f"roofline/cells_skipped,{r['skipped']},count")
+        print(f"roofline/cells_error,{r['errors']},count")
+    print("\nall benchmark artifacts: artifacts/bench/*.json")
+
+
+if __name__ == "__main__":
+    main()

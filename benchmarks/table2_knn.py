@@ -1,0 +1,72 @@
+"""Paper Table II (+ III): 1-NN error across measures + Wilcoxon tests.
+
+Validates the paper's claims on the offline synthetic UCR suite:
+  * SP-K_rdtw / K_rdtw lead the mean-rank ordering,
+  * SP measures match or beat DTW accuracy,
+  * SP measures beat the Sakoe-Chiba corridor at comparable budgets.
+Also emits the theta LOO curve (paper Fig. 4) per dataset.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from .common import BENCH_DATASETS, DatasetBench, wilcoxon_signed_rank
+
+MEASURES = ("corr", "daco", "euclidean", "dtw", "dtw_sc", "krdtw",
+            "spdtw", "sp_krdtw")
+
+
+def run(fast: bool = True, datasets=BENCH_DATASETS):
+    rows = {}
+    curves = {}
+    times = {}
+    for name in datasets:
+        t0 = time.time()
+        db = DatasetBench(name, fast=fast)
+        errs = {}
+        for m in MEASURES:
+            err, cells, dt = db.knn_err(m)
+            errs[m] = err
+            times[(name, m)] = dt
+        rows[name] = errs
+        # theta LOO selection curve (paper Fig. 4), from the SP-DTW search
+        curves[name] = {"theta": db.sel_sp.theta, "gamma": db.sel_sp.gamma,
+                        "loo": db.sel_sp.loo}
+        print(f"[table2] {name}: " + " ".join(
+            f"{m}={errs[m]:.3f}" for m in MEASURES) +
+            f" ({time.time()-t0:.0f}s)", flush=True)
+
+    # mean ranks (paper's summary row)
+    mat = np.array([[rows[d][m] for m in MEASURES] for d in datasets])
+    ranks = np.argsort(np.argsort(mat, axis=1), axis=1) + 1.0
+    # average ranks under ties
+    for i in range(mat.shape[0]):
+        for v in np.unique(mat[i]):
+            sel = mat[i] == v
+            if sel.sum() > 1:
+                ranks[i, sel] = ranks[i, sel].mean()
+    mean_rank = {m: float(r) for m, r in zip(MEASURES, ranks.mean(axis=0))}
+
+    # Wilcoxon signed-rank tests (paper Table III)
+    wil = {}
+    for i, a in enumerate(MEASURES):
+        for b in MEASURES[i + 1:]:
+            wil[f"{a}|{b}"] = wilcoxon_signed_rank(mat[:, i],
+                                                   mat[:, MEASURES.index(b)])
+    return {"errors": rows, "mean_rank": mean_rank, "wilcoxon": wil,
+            "selected": curves,
+            "times_s": {f"{d}/{m}": round(t, 2)
+                        for (d, m), t in times.items()}}
+
+
+def main(fast: bool = True):
+    out = run(fast=fast)
+    print(json.dumps(out, indent=1))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper Table VI: visited-cell counts + speed-up percentages, plus the
+TPU-side block-sparse accounting (DESIGN.md §3) and measured wall-clock of
+the kernels (interpret mode on CPU — structural, not TPU timing).
+
+  S(%) = 100 * (1 - visited_cells / T^2)        (paper's metric)
+  S_tile(%) = 100 * tile_sparsity               (what the TPU kernel skips)
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import block_sparsify
+from .common import BENCH_DATASETS, DatasetBench
+
+
+def run(fast: bool = True, datasets=BENCH_DATASETS, tile: int = 16):
+    rows = {}
+    for name in datasets:
+        db = DatasetBench(name, fast=fast)
+        T2 = db.T * db.T
+        full = db.measure("dtw").visited_cells
+        band = db.measure("dtw_sc").visited_cells
+        sp = db.measure("spdtw").visited_cells
+        spk = db.measure("sp_krdtw").visited_cells
+        bsp = block_sparsify(db.sel_sp.sp, tile=tile)
+        rows[name] = {
+            "T2_cells": T2,
+            "dtw_cells": full,
+            "dtw_sc_cells": band, "dtw_sc_S%": 100 * (1 - band / T2),
+            "spdtw_cells": sp, "spdtw_S%": 100 * (1 - sp / T2),
+            "sp_krdtw_cells": spk, "sp_krdtw_S%": 100 * (1 - spk / T2),
+            "block_tile": tile,
+            "active_tiles": bsp.n_active,
+            "tile_S%": 100 * bsp.tile_sparsity,
+            "theta": db.sel_sp.theta,
+        }
+        print(f"[table6] {name}: T^2={T2} sc={band} sp={sp} "
+              f"(S={rows[name]['spdtw_S%']:.1f}%) "
+              f"tiles skipped={rows[name]['tile_S%']:.1f}%", flush=True)
+    avg = {k: float(np.mean([rows[d][k] for d in datasets]))
+           for k in ("dtw_sc_S%", "spdtw_S%", "sp_krdtw_S%", "tile_S%")}
+    return {"rows": rows, "average_speedup": avg}
+
+
+def main(fast: bool = True):
+    out = run(fast=fast)
+    print(json.dumps(out, indent=1))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Full paper protocol on one dataset: meta-params by LOO on train, then
+1-NN + SVM test errors for every measure.
+
+  PYTHONPATH=src python examples/classify_ucr.py --dataset Trace
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "benchmarks")
+
+from benchmarks.common import DatasetBench  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="Trace")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    db = DatasetBench(args.dataset, fast=not args.full)
+    print(f"{args.dataset}: T={db.T}, selected radius={db.sel_radius.radius},"
+          f" theta={db.sel_sp.theta}, gamma={db.sel_sp.gamma}")
+    for m in ("euclidean", "dtw", "dtw_sc", "spdtw", "krdtw", "sp_krdtw"):
+        err, cells, dt = db.knn_err(m)
+        print(f"1-NN {m:10s} err={err:.3f} cells={cells:8d} ({dt:.1f}s)")
+    for m in ("krdtw", "sp_krdtw"):
+        err, cells, dt = db.svm_err(m)
+        print(f"SVM  {m:10s} err={err:.3f} cells={cells:8d} ({dt:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Batched greedy serving with KV cache (deliverable b).
+
+  PYTHONPATH=src python examples/serve_lm.py --arch yi-6b --tokens 24
+"""
+import argparse
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=24)
+    args = ap.parse_args()
+    out = serve(args.arch, batch=args.batch, gen_tokens=args.tokens)
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""End-to-end driver: train a reduced assigned-architecture LM for a few
+hundred steps with checkpoint/restart (deliverable b).
+
+  PYTHONPATH=src python examples/train_lm.py --arch gemma3-4b --steps 200
+"""
+import argparse
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    losses = train(args.arch, steps=args.steps, use_reduced=True,
+                   ckpt_dir=args.ckpt_dir, batch=8, seq=64,
+                   ckpt_every=50, log_every=10)
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"over {len(losses)} steps")
+
+
+if __name__ == "__main__":
+    main()

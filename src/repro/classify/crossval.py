@@ -1,0 +1,94 @@
+"""Meta-parameter selection (paper Section V-B, Fig. 4).
+
+theta (occupancy threshold), gamma (weight exponent), the Sakoe-Chiba
+radius and nu (local-kernel bandwidth) are all picked by leave-one-out 1-NN
+error on the *train* set through a grid/line search — exactly the paper's
+protocol. The occupancy counts are computed once per dataset and shared by
+every theta candidate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (SparsePaths, learn_sparse_paths, make_measure,
+                        pairwise_path_counts)
+from .knn import loo_error
+
+THETA_GRID = tuple(range(0, 16))             # paper Fig. 4 searches [0, 15]
+GAMMA_GRID = (0.0, 0.25, 0.5, 1.0)
+NU_GRID = (0.01, 0.1, 0.5, 1.0, 5.0)
+RADIUS_FRACS = (0.0, 0.02, 0.05, 0.1, 0.2)   # of T
+
+
+@dataclasses.dataclass
+class Selected:
+    theta: float = 0.0
+    gamma: float = 0.0
+    nu: float = 1.0
+    radius: int = 0
+    loo: float = 1.0
+    sp: Optional[SparsePaths] = None
+
+
+def select_radius(X_train, y_train, fracs=RADIUS_FRACS) -> Selected:
+    """Sakoe-Chiba corridor width by LOO (the paper's DTW_sc protocol)."""
+    T = X_train.shape[1]
+    best = Selected()
+    for fr in fracs:
+        r = max(int(round(fr * T)), 0)
+        m = make_measure("dtw_sc", T, radius=r)
+        err = loo_error(m.cross(X_train, X_train), y_train)
+        if err < best.loo:
+            best = Selected(radius=r, loo=err)
+    return best
+
+
+def select_nu(X_train, y_train, name="krdtw", radius=0,
+              grid=NU_GRID, sp=None) -> Selected:
+    T = X_train.shape[1]
+    best = Selected()
+    for nu in grid:
+        m = make_measure(name, T, nu=nu, radius=radius, sp=sp)
+        err = loo_error(m.cross(X_train, X_train), y_train)
+        if err < best.loo:
+            best = Selected(nu=nu, radius=radius, loo=err)
+    return best
+
+
+def select_theta_gamma(X_train, y_train, name="spdtw",
+                       thetas: Sequence[float] = THETA_GRID,
+                       gammas: Sequence[float] = GAMMA_GRID,
+                       nu: float = 1.0,
+                       counts=None,
+                       return_curve: bool = False):
+    """Joint theta (and gamma for SP-DTW) line/grid search by LOO 1-NN.
+
+    Returns a Selected with the learned SparsePaths baked in; optionally the
+    (theta, loo-error) curve of the best gamma (paper Fig. 4).
+    """
+    X_train = jnp.asarray(X_train)
+    T = X_train.shape[1]
+    if counts is None:
+        counts = pairwise_path_counts(X_train)
+    if name == "sp_krdtw":
+        gammas = (0.0,)  # kernel variant uses the support only (Sec. IV)
+    best = Selected()
+    curve = []
+    for theta in thetas:
+        for gamma in gammas:
+            sp = learn_sparse_paths(X_train, theta=theta, gamma=gamma,
+                                    counts=counts)
+            m = make_measure(name, T, sp=sp, nu=nu)
+            err = loo_error(m.cross(X_train, X_train), y_train)
+            curve.append((theta, gamma, err, sp.n_cells))
+            if err < best.loo or (err == best.loo and best.sp is not None
+                                  and sp.n_cells < best.sp.n_cells):
+                best = Selected(theta=theta, gamma=gamma, nu=nu,
+                                loo=err, sp=sp)
+    if return_curve:
+        return best, curve
+    return best

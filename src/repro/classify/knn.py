@@ -1,0 +1,29 @@
+"""1-NN classification on precomputed (dis)similarity matrices."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def knn_predict(cross: jnp.ndarray, y_train: jnp.ndarray) -> jnp.ndarray:
+    """cross: (N_test, N_train) dissimilarities -> predicted labels."""
+    nn = jnp.argmin(cross, axis=1)
+    return y_train[nn]
+
+
+def error_rate(pred: jnp.ndarray, truth: jnp.ndarray) -> float:
+    return float(jnp.mean((pred != truth).astype(jnp.float32)))
+
+
+def knn_error(cross: jnp.ndarray, y_train, y_test) -> float:
+    return error_rate(knn_predict(cross, jnp.asarray(y_train)),
+                      jnp.asarray(y_test))
+
+
+def loo_error(train_cross: jnp.ndarray, y_train) -> float:
+    """Leave-one-out 1-NN error on the train set (Fig. 4's criterion)."""
+    y = jnp.asarray(y_train)
+    n = train_cross.shape[0]
+    d = train_cross + jnp.eye(n) * 1e30  # exclude self-matches
+    return error_rate(knn_predict(d, y), y)

@@ -1,0 +1,52 @@
+"""Behaviour- and value-based baseline measures (paper Section II).
+
+CORR (Pearson), DACO (difference of auto-correlation operators), and the
+Euclidean distance. All vectorized over series sets.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def euclidean(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """d_E(x, y) (paper Eq. 3). Works on (T,) or (T, d)."""
+    return jnp.sqrt(jnp.sum((x - y) ** 2))
+
+
+def corr(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Pearson correlation coefficient (paper Eq. 1)."""
+    xc = x - jnp.mean(x)
+    yc = y - jnp.mean(y)
+    denom = jnp.sqrt(jnp.sum(xc * xc)) * jnp.sqrt(jnp.sum(yc * yc))
+    return jnp.sum(xc * yc) / jnp.where(denom > 0, denom, 1.0)
+
+
+def corr_dissimilarity(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """1 - CORR, so that lower = more similar (1-NN convention)."""
+    return 1.0 - corr(x, y)
+
+
+def autocorr_operator(x: jnp.ndarray, lags: int) -> jnp.ndarray:
+    """rho_tau(x) for tau = 1..lags (paper Eq. 2's tilde-x vector)."""
+    xc = x - jnp.mean(x)
+    denom = jnp.sum(xc * xc)
+    T = x.shape[0]
+
+    def rho(tau):
+        prod = xc[:T - tau] * xc[tau:]
+        return jnp.sum(prod) / jnp.where(denom > 0, denom, 1.0)
+
+    return jnp.stack([rho(t) for t in range(1, lags + 1)])
+
+
+def daco(x: jnp.ndarray, y: jnp.ndarray, lags: int = 10) -> jnp.ndarray:
+    """DACO(x, y) = ||tilde-x - tilde-y||^2 (paper Eq. 2)."""
+    return jnp.sum((autocorr_operator(x, lags) - autocorr_operator(y, lags)) ** 2)
+
+
+def znormalize(X: jnp.ndarray, axis: int = -1, eps: float = 1e-8) -> jnp.ndarray:
+    """Standardize series to zero mean / unit variance (UCR convention)."""
+    mu = jnp.mean(X, axis=axis, keepdims=True)
+    sd = jnp.std(X, axis=axis, keepdims=True)
+    return (X - mu) / (sd + eps)

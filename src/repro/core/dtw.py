@@ -1,0 +1,134 @@
+"""Dynamic Time Warping core: dense, banded (Sakoe-Chiba) and masked/weighted DP.
+
+All functions are pure JAX (jit/vmap friendly) and double as the numerical
+oracles for the Pallas kernels in ``repro.kernels``.
+
+The DP recurrence (paper Eq. 4 / Algorithm 1):
+
+    D(i,j) = w(i,j) * phi(x_i, y_j) + min(D(i-1,j), D(i-1,j-1), D(i,j-1))
+
+is evaluated row-by-row. The in-row dependency ``D(i,j-1)`` is resolved with a
+min-plus associative scan (see DESIGN.md section 3): with
+
+    u_j = c_j + min(top_j, topleft_j)        (c_j = weighted local cost)
+    D_j = min(u_j, D_{j-1} + c_j)
+
+the row is the scan of the semiring elements (u_j, c_j) under
+
+    (m1, s1) o (m2, s2) = (min(m2, m1 + s2), s1 + s2)
+
+which turns the O(T) sequential row update into O(log T) vector steps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Large-but-finite stand-in for +inf: summing a few of these stays < f32 max.
+INF = jnp.float32(1.0e30)
+
+
+def local_cost(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise squared-Euclidean local cost matrix phi(x_i, y_j).
+
+    x: (Tx,) or (Tx, d);  y: (Ty,) or (Ty, d)  ->  (Tx, Ty) float32.
+    """
+    if x.ndim == 1:
+        x = x[:, None]
+    if y.ndim == 1:
+        y = y[:, None]
+    diff = x[:, None, :] - y[None, :, :]
+    return jnp.sum(diff * diff, axis=-1).astype(jnp.float32)
+
+
+def _minplus_combine(a, b):
+    m1, s1 = a
+    m2, s2 = b
+    return jnp.minimum(m2, m1 + s2), s1 + s2
+
+
+def minplus_scan(u: jnp.ndarray, c: jnp.ndarray, axis: int = -1):
+    """Solve D_j = min(u_j, D_{j-1} + c_j) (D_{-1} = +inf) along ``axis``."""
+    m, _ = jax.lax.associative_scan(_minplus_combine, (u, c), axis=axis)
+    return m
+
+
+def _dp_rows(cost: jnp.ndarray) -> jnp.ndarray:
+    """Run the DTW DP over a (possibly +INF-masked) local cost matrix.
+
+    Returns the full accumulated matrix D of shape (Tx, Ty).
+    Cells whose cost is >= INF are unreachable (propagate as +INF).
+    """
+    Tx, Ty = cost.shape
+
+    def row_step(carry, c_row):
+        d_prev, tl0 = carry
+        top = d_prev
+        topleft = jnp.concatenate([tl0[None], d_prev[:-1]])
+        u = c_row + jnp.minimum(top, topleft)
+        # Forbidden cells: c_row >= INF already forces u, and the scan's
+        # additive term c_j >= INF kills the left-to-right propagation too.
+        d_row = minplus_scan(u, c_row)
+        d_row = jnp.minimum(d_row, INF)  # clamp inf accumulation
+        return (d_row, INF), d_row
+
+    init = (jnp.full((Ty,), INF, cost.dtype), jnp.float32(0.0))
+    (_, _), d = jax.lax.scan(row_step, init, cost)
+    return d
+
+
+def dtw_matrix(x: jnp.ndarray, y: jnp.ndarray,
+               weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Accumulated-cost matrix for (weighted) DTW.
+
+    weights: optional (Tx, Ty) matrix; 0-entries mark cells *outside* the
+    admissible support (paper's sparsified search space), positive entries
+    multiply the local cost (paper's f(p(m_tt'))).
+    """
+    cost = local_cost(x, y)
+    if weights is not None:
+        weights = weights.astype(cost.dtype)
+        cost = jnp.where(weights > 0, cost * weights, INF)
+    return _dp_rows(cost)
+
+
+@jax.jit
+def dtw(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Standard DTW dissimilarity (squared-Euclidean local cost)."""
+    return dtw_matrix(x, y)[-1, -1]
+
+
+def band_mask(Tx: int, Ty: int, radius: int) -> jnp.ndarray:
+    """Sakoe-Chiba corridor mask of half-width ``radius`` (True = admissible).
+
+    The corridor follows the resampled main diagonal for Tx != Ty.
+    """
+    i = jnp.arange(Tx)[:, None]
+    j = jnp.arange(Ty)[None, :]
+    # Exact integer form of |j - i*(Ty-1)/(Tx-1)| <= radius: float boundary
+    # ties constant-fold differently under jit vs eager, so stay integral.
+    sx = max(Tx - 1, 1)
+    return jnp.abs(j * sx - i * (Ty - 1)) <= radius * sx
+
+
+@functools.partial(jax.jit, static_argnames=("radius",))
+def dtw_sc(x: jnp.ndarray, y: jnp.ndarray, radius: int) -> jnp.ndarray:
+    """Sakoe-Chiba banded DTW with corridor half-width ``radius``."""
+    Tx = x.shape[0]
+    Ty = y.shape[0]
+    w = band_mask(Tx, Ty, radius).astype(jnp.float32)
+    return dtw_matrix(x, y, weights=w)[-1, -1]
+
+
+@jax.jit
+def wdtw(x: jnp.ndarray, y: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Weighted, support-masked DTW (the SP-DTW DP core, paper Eq. 9)."""
+    return dtw_matrix(x, y, weights=weights)[-1, -1]
+
+
+def band_cells(Tx: int, Ty: int, radius: int) -> int:
+    """Number of DP cells visited by the Sakoe-Chiba corridor (Table VI)."""
+    return int(jnp.sum(band_mask(Tx, Ty, radius)))

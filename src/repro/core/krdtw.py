@@ -1,0 +1,166 @@
+"""K_rdtw and SP-K_rdtw: positive-definite time-elastic kernels (paper Sec. IV).
+
+Implements Marteau & Gibet's K_rdtw = K1 + K2 recursions exactly as the
+paper's Algorithm 2, over three supports:
+  * full grid          (K_rdtw),
+  * Sakoe-Chiba band   (K_rdtw_sc),
+  * learned sparse set (SP-K_rdtw; support only, *no* weights, so the kernel
+    stays positive definite -- paper Section IV).
+
+Products of T local-kernel values underflow float32 quickly, so the default
+evaluator ``log_krdtw`` carries a per-row rescaling factor (mathematically
+exact, DESIGN.md section 7.4) and returns log K. The in-row dependency is a
+*linear* recurrence  x_j = a_j x_{j-1} + b_j  solved with an associative scan:
+
+    (a1, b1) o (a2, b2) = (a1*a2, b1*a2 + b2)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def local_kernel(x: jnp.ndarray, y: jnp.ndarray, nu: float) -> jnp.ndarray:
+    """kappa_nu(x_i, y_j) = exp(-nu * ||x_i - y_j||^2), (Tx, Ty) matrix."""
+    if x.ndim == 1:
+        x = x[:, None]
+    if y.ndim == 1:
+        y = y[:, None]
+    diff = x[:, None, :] - y[None, :, :]
+    return jnp.exp(-nu * jnp.sum(diff * diff, axis=-1)).astype(jnp.float32)
+
+
+def _linrec_combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, b1 * a2 + b2
+
+
+def linrec_scan(a: jnp.ndarray, b: jnp.ndarray, axis: int = -1):
+    """Solve x_j = a_j * x_{j-1} + b_j with x_{-1} irrelevant (set a_0 = 0)."""
+    _, x = jax.lax.associative_scan(_linrec_combine, (a, b), axis=axis)
+    return x
+
+
+def _krdtw_rows(kappa: jnp.ndarray, dkap: jnp.ndarray,
+                mask: Optional[jnp.ndarray]):
+    """Shared K1/K2 row recursion with per-row rescaling.
+
+    kappa: (T, T) local kernel matrix kappa(x_i, y_j)
+    dkap:  (T,)  diagonal local kernel dx_i = kappa(x_i, y_i)
+    mask:  optional (T, T) bool support (True = admissible cell)
+    Returns (log K1[T-1,T-1], log K2[T-1,T-1]).
+    """
+    T = kappa.shape[0]
+    if mask is None:
+        mask = jnp.ones((T, T), bool)
+    maskf = mask.astype(jnp.float32)
+    j_idx = jnp.arange(T)
+
+    def rescale(row, ls):
+        s = jnp.max(row)
+        ok = s > 0
+        row = jnp.where(ok, row / jnp.where(ok, s, 1.0), row)
+        ls = ls + jnp.where(ok, jnp.log(jnp.where(ok, s, 1.0)), 0.0)
+        return row, ls
+
+    def row_step(carry, inputs):
+        k1p, k2p, ls1, ls2, is_first = carry
+        krow, mrow, dx_i = inputs
+        third = 1.0 / 3.0
+
+        # previous-row neighbours (same scale as k1p/k2p)
+        top1 = k1p
+        tl1 = jnp.concatenate([jnp.zeros((1,), k1p.dtype), k1p[:-1]])
+        top2 = k2p
+        tl2 = jnp.concatenate([jnp.zeros((1,), k2p.dtype), k2p[:-1]])
+
+        # ---- K1 row ----
+        a1 = mrow * krow * third
+        b1 = mrow * krow * third * (top1 + tl1)
+        # j = 0 border: only the top neighbour contributes (Alg. 2 line 15)
+        b1 = b1.at[0].set(mrow[0] * krow[0] * third * top1[0])
+        a1 = a1.at[0].set(0.0)
+
+        # ---- K2 row ----  (dx_j = dkap[j], dx_i scalar for this row)
+        dxj = dkap
+        a2 = mrow * dxj * third
+        b2 = mrow * third * ((dx_i + dxj) * 0.5 * tl2 + dx_i * top2)
+        b2 = b2.at[0].set(mrow[0] * dx_i * third * top2[0])
+        a2 = a2.at[0].set(0.0)
+
+        # first row: K(0,0) = kappa(x0,y0); K(0,j) = 1/3 K(0,j-1) kappa-term
+        def first_row():
+            fa1 = (mrow * krow * third).at[0].set(0.0)
+            fb1 = jnp.zeros_like(b1).at[0].set(mrow[0] * krow[0])
+            fa2 = (mrow * dxj * third).at[0].set(0.0)
+            fb2 = jnp.zeros_like(b2).at[0].set(mrow[0] * krow[0])
+            return fa1, fb1, fa2, fb2
+
+        fa1, fb1, fa2, fb2 = first_row()
+        a1 = jnp.where(is_first, fa1, a1)
+        b1 = jnp.where(is_first, fb1, b1)
+        a2 = jnp.where(is_first, fa2, a2)
+        b2 = jnp.where(is_first, fb2, b2)
+
+        k1 = linrec_scan(a1, b1)
+        k2 = linrec_scan(a2, b2)
+        k1, ls1 = rescale(k1, ls1)
+        k2, ls2 = rescale(k2, ls2)
+        return (k1, k2, ls1, ls2, jnp.bool_(False)), None
+
+    init = (jnp.zeros((T,), jnp.float32), jnp.zeros((T,), jnp.float32),
+            jnp.float32(0.0), jnp.float32(0.0), jnp.bool_(True))
+    (k1, k2, ls1, ls2, _), _ = jax.lax.scan(
+        row_step, init, (kappa, maskf, dkap))
+
+    def safe_log(v):
+        return jnp.where(v > 0, jnp.log(jnp.where(v > 0, v, 1.0)), -jnp.inf)
+
+    return safe_log(k1[-1]) + ls1, safe_log(k2[-1]) + ls2
+
+
+@functools.partial(jax.jit, static_argnames=())
+def log_krdtw(x: jnp.ndarray, y: jnp.ndarray, nu: float,
+              mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """log K_rdtw(x, y) (full grid if mask is None, else masked support)."""
+    kappa = local_kernel(x, y, nu)
+    T = kappa.shape[0]
+    dkap = jnp.exp(-nu * jnp.sum(
+        (jnp.atleast_2d(x.T).T - jnp.atleast_2d(y.T).T) ** 2, axis=-1)
+    ).astype(jnp.float32)
+    l1, l2 = _krdtw_rows(kappa, dkap, mask)
+    return jnp.logaddexp(l1, l2)
+
+
+def krdtw(x, y, nu, mask=None):
+    """Linear-space K_rdtw (may underflow for long series; prefer log)."""
+    return jnp.exp(log_krdtw(x, y, nu, mask))
+
+
+def log_krdtw_sc(x, y, nu, radius: int):
+    """Sakoe-Chiba corridor K_rdtw (the paper's K_rdtw_sc)."""
+    from .dtw import band_mask
+    m = band_mask(x.shape[0], y.shape[0], radius)
+    return log_krdtw(x, y, nu, m)
+
+
+def log_sp_krdtw(x, y, nu, support: jnp.ndarray):
+    """SP-K_rdtw: K_rdtw restricted to the learned sparse support.
+
+    Support only -- no weights -- so positive definiteness is preserved
+    (paper Section IV)."""
+    return log_krdtw(x, y, nu, support)
+
+
+def normalized_gram(logk_xy: jnp.ndarray, logk_xx: jnp.ndarray,
+                    logk_yy: jnp.ndarray) -> jnp.ndarray:
+    """Cosine-normalized kernel matrix from log-kernel blocks.
+
+    K~(x,y) = exp(logK(x,y) - (logK(x,x) + logK(y,y)) / 2). Keeps the Gram
+    matrix p.d. and numerically in [0, 1]-ish range for the SVM.
+    """
+    return jnp.exp(logk_xy - 0.5 * (logk_xx[:, None] + logk_yy[None, :]))

@@ -1,0 +1,98 @@
+"""Measure registry: uniform API over all (dis)similarity measures.
+
+Every measure exposes ``cross(A, B) -> (Na, Nb)`` dissimilarity matrix
+(for 1-NN) and kernels additionally expose ``gram_log(A, B)`` (for SVM).
+Construction happens once per dataset (meta-parameters baked in), evaluation
+is vmapped + chunked.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import baselines
+from .dtw import band_cells as _band_cells
+from .dtw import dtw as _dtw
+from .dtw import dtw_sc as _dtw_sc
+from .dtw import wdtw as _wdtw
+from .krdtw import log_krdtw as _log_krdtw
+from .krdtw import log_krdtw_sc as _log_krdtw_sc
+from .krdtw import log_sp_krdtw as _log_sp_krdtw
+from .occupancy import SparsePaths
+
+
+def _chunked_cross(fn: Callable, A: jnp.ndarray, B: jnp.ndarray,
+                   block: int = 128) -> jnp.ndarray:
+    f = jax.jit(jax.vmap(jax.vmap(fn, in_axes=(None, 0)), in_axes=(0, None)))
+    rows = []
+    for s in range(0, A.shape[0], block):
+        rows.append(f(A[s:s + block], B))
+    return jnp.concatenate(rows, axis=0)
+
+
+@dataclasses.dataclass
+class Measure:
+    name: str
+    pair_fn: Callable          # (x, y) -> scalar dissimilarity
+    logk_fn: Optional[Callable] = None  # (x, y) -> log kernel value
+    visited_cells: Optional[int] = None  # Table VI accounting
+
+    def cross(self, A, B, block: int = 128):
+        return _chunked_cross(self.pair_fn, A, B, block)
+
+    def gram_log(self, A, B, block: int = 128):
+        assert self.logk_fn is not None, f"{self.name} is not a kernel"
+        return _chunked_cross(self.logk_fn, A, B, block)
+
+
+def make_measure(name: str, T: int, *,
+                 sp: Optional[SparsePaths] = None,
+                 radius: int = 10, nu: float = 1.0,
+                 lags: int = 10) -> Measure:
+    """Factory. ``T`` is the series length (for visited-cell accounting)."""
+    full = T * T
+    if name == "euclidean":
+        return Measure(name, baselines.euclidean, visited_cells=T)
+    if name == "corr":
+        return Measure(name, baselines.corr_dissimilarity, visited_cells=T)
+    if name == "daco":
+        return Measure(name, lambda x, y: baselines.daco(x, y, lags),
+                       visited_cells=T * lags)
+    if name == "dtw":
+        return Measure(name, _dtw, visited_cells=full)
+    if name == "dtw_sc":
+        return Measure(name, lambda x, y: _dtw_sc(x, y, radius),
+                       visited_cells=_band_cells(T, T, radius))
+    if name == "spdtw":
+        assert sp is not None
+        w = sp.weights
+        return Measure(name, lambda x, y: _wdtw(x, y, w),
+                       visited_cells=sp.n_cells)
+    if name == "krdtw":
+        return Measure(
+            name,
+            pair_fn=lambda x, y: -_log_krdtw(x, y, nu),
+            logk_fn=lambda x, y: _log_krdtw(x, y, nu),
+            visited_cells=full)
+    if name == "krdtw_sc":
+        return Measure(
+            name,
+            pair_fn=lambda x, y: -_log_krdtw_sc(x, y, nu, radius),
+            logk_fn=lambda x, y: _log_krdtw_sc(x, y, nu, radius),
+            visited_cells=_band_cells(T, T, radius))
+    if name == "sp_krdtw":
+        assert sp is not None
+        supp = sp.support
+        return Measure(
+            name,
+            pair_fn=lambda x, y: -_log_sp_krdtw(x, y, nu, supp),
+            logk_fn=lambda x, y: _log_sp_krdtw(x, y, nu, supp),
+            visited_cells=sp.n_cells)
+    raise ValueError(f"unknown measure {name!r}")
+
+
+ALL_MEASURES = ("corr", "daco", "euclidean", "dtw", "dtw_sc",
+                "krdtw", "spdtw", "sp_krdtw")

@@ -1,0 +1,176 @@
+"""Occupancy-grid learning and sparsification (paper Section III, Fig. 3).
+
+Strategy (Fig. 3 a-f):
+  (a) take the training set X = {x_i},
+  (b) compute the optimal DTW path mask for every pair i < j,
+  (c) sum the boolean masks into a global absolute-frequency grid
+      (symmetrized: path(i,j) == path(j,i)^T),
+  (d) scale into [0, 1),
+  (e) zero every cell whose *absolute* frequency is below theta
+      (theta picked by leave-one-out on train, Fig. 4 searches [0, 15]),
+  (f) keep a sparse representation.
+
+Two sparse representations are produced:
+  * the paper's LOC list (row-major sorted (row, col, weight) triples) used by
+    the Algorithm-1/2 faithful evaluators and for reporting visited cells,
+  * a TPU-native block-sparse layout (DESIGN.md section 3): the grid is cut in
+    ``tile`` x ``tile`` blocks, a block survives iff any of its cells does and
+    surviving blocks are stored compressed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dtw import INF
+from .paths import optimal_path_mask, path_is_feasible
+
+
+def pairwise_path_counts(X: jnp.ndarray, batch_pairs: int = 256) -> jnp.ndarray:
+    """Absolute occupancy counts over all N(N-1)/2 training pairs.
+
+    X: (N, T) or (N, T, d). Returns float32 (T, T) counts, symmetrized.
+    Pairs are processed in vmapped chunks to bound memory.
+    """
+    N = X.shape[0]
+    T = X.shape[1]
+    iu, ju = np.triu_indices(N, k=1)
+    counts = jnp.zeros((T, T), jnp.float32)
+
+    masked = jax.jit(jax.vmap(lambda a, b: optimal_path_mask(a, b)))
+    for s in range(0, len(iu), batch_pairs):
+        ii = jnp.asarray(iu[s:s + batch_pairs])
+        jj = jnp.asarray(ju[s:s + batch_pairs])
+        m = masked(X[ii], X[jj])
+        counts = counts + jnp.sum(m.astype(jnp.float32), axis=0)
+    # symmetrize: the (j, i) alignment is the transpose of (i, j)
+    counts = counts + counts.T
+    return counts
+
+
+def normalize_grid(counts: jnp.ndarray) -> jnp.ndarray:
+    """Scale the absolute-frequency grid into [0, 1) (Fig. 3-d)."""
+    return counts / (jnp.max(counts) + 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsePaths:
+    """Learned sparsified alignment-path search space.
+
+    weights: (T, T) float32; 0 outside the support, f(p) = p^-gamma inside
+             (gamma = 0 -> unit weights, pure support sparsification).
+    support: (T, T) bool, cells surviving the theta threshold.
+    counts:  raw absolute frequencies (kept for Table VI reporting).
+    theta, gamma: the meta-parameters that produced this grid.
+    """
+    weights: jnp.ndarray
+    support: jnp.ndarray
+    counts: jnp.ndarray
+    theta: float
+    gamma: float
+
+    @property
+    def n_cells(self) -> int:
+        """Visited-cell count (paper Table VI's '# visited cells')."""
+        return int(jnp.sum(self.support))
+
+    def loc_list(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Paper's LOC interchange format: row-major (rows, cols, weights)."""
+        sup = np.asarray(self.support)
+        w = np.asarray(self.weights)
+        rows, cols = np.nonzero(sup)
+        order = np.lexsort((cols, rows))
+        rows, cols = rows[order], cols[order]
+        return rows.astype(np.int32), cols.astype(np.int32), w[rows, cols]
+
+
+def learn_sparse_paths(
+    X: jnp.ndarray,
+    theta: float = 1.0,
+    gamma: float = 0.0,
+    counts: Optional[jnp.ndarray] = None,
+    repair: bool = True,
+) -> SparsePaths:
+    """Learn the sparsified path search space from training series X.
+
+    theta thresholds the *absolute* occupancy counts (paper Fig. 4 searches
+    theta in [0, 15]). gamma is the weighting exponent of Eq. 9.
+    If ``repair`` and thresholding disconnected the corners, the main diagonal
+    is re-added so every query keeps at least one admissible path.
+    """
+    if counts is None:
+        counts = pairwise_path_counts(X)
+    T = counts.shape[0]
+    support = counts > theta
+    # the corners are always on every path; keep them regardless of theta
+    support = support.at[0, 0].set(True).at[T - 1, T - 1].set(True)
+    if repair and not bool(path_is_feasible(support)):
+        eye = jnp.eye(T, dtype=bool)
+        support = support | eye
+    p = normalize_grid(counts)
+    # f(p) = p^-gamma on the support (Eq. 9); gamma=0 gives unit weights.
+    safe_p = jnp.where(support & (p > 0), p, 1.0)
+    weights = jnp.where(support, safe_p ** (-gamma), 0.0)
+    weights = jnp.minimum(weights, 1e6).astype(jnp.float32)
+    return SparsePaths(weights=weights, support=support, counts=counts,
+                       theta=float(theta), gamma=float(gamma))
+
+
+# ---------------------------------------------------------------------------
+# TPU block-sparse layout
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockSparsePaths:
+    """Compressed block-sparse view of a SparsePaths grid.
+
+    tile:        block edge (lanes-aligned, typically 128 on TPU).
+    active:      (Ti, Tj) bool block bitmap.
+    slot:        (Ti, Tj) int32 index into ``blocks`` (0 for inactive blocks,
+                 which point at a shared all-masked dummy slot).
+    blocks:      (n_slots, tile, tile) float32 compressed weights; slot 0 is
+                 the all-zero dummy.
+    T:           original (padded) grid edge; grids are padded to tile mult.
+    """
+    tile: int
+    active: np.ndarray
+    slot: np.ndarray
+    blocks: np.ndarray
+    T: int
+
+    @property
+    def n_active(self) -> int:
+        return int(self.active.sum())
+
+    @property
+    def tile_sparsity(self) -> float:
+        """Fraction of blocks *skipped* (the TPU kernel's speed-up lever)."""
+        return 1.0 - self.n_active / self.active.size
+
+
+def block_sparsify(sp: SparsePaths, tile: int = 128) -> BlockSparsePaths:
+    """Re-blockify a learned sparse grid for the TPU kernel (DESIGN section 3)."""
+    w = np.asarray(sp.weights)
+    T = w.shape[0]
+    Tp = ((T + tile - 1) // tile) * tile
+    wp = np.zeros((Tp, Tp), np.float32)
+    wp[:T, :T] = w
+    Ti = Tp // tile
+    wt = wp.reshape(Ti, tile, Ti, tile).transpose(0, 2, 1, 3)
+    active = (wt > 0).any(axis=(2, 3))
+    n_active = int(active.sum())
+    blocks = np.zeros((n_active + 1, tile, tile), np.float32)  # slot 0 dummy
+    slot = np.zeros((Ti, Ti), np.int32)
+    k = 1
+    for i in range(Ti):
+        for j in range(Ti):
+            if active[i, j]:
+                blocks[k] = wt[i, j]
+                slot[i, j] = k
+                k += 1
+    return BlockSparsePaths(tile=tile, active=active, slot=slot,
+                            blocks=blocks, T=Tp)

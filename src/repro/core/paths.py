@@ -1,0 +1,59 @@
+"""Optimal alignment-path extraction (backtracking) for occupancy learning.
+
+The paper's occupancy grid (Section III, Fig. 3-b) needs, for every training
+pair, the set of cells visited by *the* optimal DTW path. We backtrack the
+accumulated-cost matrix with a fixed-length ``lax.scan`` (2T-1 steps max) so
+the whole thing jits and vmaps over pairs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .dtw import INF, dtw_matrix
+
+
+def backtrack(D: jnp.ndarray) -> jnp.ndarray:
+    """Boolean (Tx, Ty) mask of the optimal path through accumulated costs D.
+
+    Ties resolve in the order diag > up > left (diagonal preferred), matching
+    the usual DTW convention.
+    """
+    Tx, Ty = D.shape
+    n_steps = Tx + Ty - 2  # max path length minus the start cell
+
+    def step(carry, _):
+        i, j = carry
+        up = jnp.where(i > 0, D[i - 1, j], INF)
+        left = jnp.where(j > 0, D[i, j - 1], INF)
+        diag = jnp.where((i > 0) & (j > 0), D[i - 1, j - 1], INF)
+        best = jnp.minimum(jnp.minimum(diag, up), left)
+        ni = jnp.where(best == diag, i - 1, jnp.where(best == up, i - 1, i))
+        nj = jnp.where(best == diag, j - 1, jnp.where(best == up, j, j - 1))
+        done = (i == 0) & (j == 0)
+        ni = jnp.where(done, 0, ni)
+        nj = jnp.where(done, 0, nj)
+        return (ni, nj), (ni, nj)
+
+    (_, _), (ii, jj) = jax.lax.scan(
+        step, (jnp.int32(Tx - 1), jnp.int32(Ty - 1)), None, length=n_steps)
+    ii = jnp.concatenate([jnp.int32(Tx - 1)[None], ii])
+    jj = jnp.concatenate([jnp.int32(Ty - 1)[None], jj])
+    mask = jnp.zeros((Tx, Ty), bool).at[ii, jj].set(True)
+    return mask
+
+
+@jax.jit
+def optimal_path_mask(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """(Tx, Ty) bool mask of the optimal DTW path between x and y."""
+    return backtrack(dtw_matrix(x, y))
+
+
+def path_is_feasible(support: jnp.ndarray) -> jnp.ndarray:
+    """True iff the boolean ``support`` admits a monotone (0,0)->(T,T) path.
+
+    Runs the masked DP with unit costs and checks the corner is reachable.
+    """
+    cost = jnp.where(support, 1.0, INF).astype(jnp.float32)
+    from .dtw import _dp_rows
+    return _dp_rows(cost)[-1, -1] < INF

@@ -1,0 +1,3 @@
+"""repro.data — offline synthetic UCR-like datasets + sequence pipeline."""
+from .synthetic_ucr import DATASETS, TSDataset, load
+from .pipeline import dedup_by_spdtw, pad_to, znorm_batch

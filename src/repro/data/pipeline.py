@@ -1,0 +1,57 @@
+"""Sequence data pipeline utilities.
+
+The framework-level integration of the paper's technique (DESIGN.md §2):
+near-duplicate filtering of training sequences by SP-DTW distance. The
+learned sparse search space makes the N^2 dedup sweep cheap enough to run
+inside a data-prep job.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SparsePaths, learn_sparse_paths, spdtw_pairwise
+
+
+def znorm_batch(X: np.ndarray) -> np.ndarray:
+    mu = X.mean(axis=-1, keepdims=True)
+    sd = X.std(axis=-1, keepdims=True) + 1e-8
+    return ((X - mu) / sd).astype(np.float32)
+
+
+def pad_to(X: np.ndarray, T: int, mode: str = "edge") -> np.ndarray:
+    if X.shape[1] >= T:
+        return X[:, :T]
+    return np.pad(X, ((0, 0), (0, T - X.shape[1])), mode=mode)
+
+
+def dedup_by_spdtw(X: np.ndarray, threshold: float,
+                   sp: SparsePaths | None = None,
+                   sample_for_grid: int = 32,
+                   seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Greedy near-duplicate removal under SP-DTW distance.
+
+    Learns the sparse search space on a subsample (cost control), computes
+    the pairwise SP-DTW matrix, then greedily keeps the first element of
+    every near-duplicate cluster. Returns (kept_X, kept_idx).
+    """
+    X = jnp.asarray(znorm_batch(np.asarray(X)))
+    if sp is None:
+        rng = np.random.default_rng(seed)
+        sub = rng.choice(len(X), size=min(sample_for_grid, len(X)),
+                         replace=False)
+        sp = learn_sparse_paths(X[jnp.asarray(sub)], theta=1.0)
+    D = np.asarray(spdtw_pairwise(X, X, sp.weights))
+    keep = []
+    dropped = np.zeros(len(X), bool)
+    for i in range(len(X)):
+        if dropped[i]:
+            continue
+        keep.append(i)
+        dupes = (D[i] < threshold)
+        dupes[:i + 1] = False
+        dropped |= dupes
+    kept_idx = np.asarray(keep, np.int64)
+    return np.asarray(X)[kept_idx], kept_idx

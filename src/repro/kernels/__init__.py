@@ -1,0 +1,11 @@
+"""repro.kernels — Pallas TPU kernels for the paper's DP hot loops.
+
+Each kernel has a pure-jnp oracle in ref.py; ops.py is the dispatching
+public API (pallas on TPU, reference path elsewhere, interpret in tests).
+"""
+from .ops import (dtw_pairs, dtw_banded_pairs, spdtw_pairs, log_krdtw_pairs)
+from .dtw_wavefront import wavefront_dtw
+from .dtw_banded import banded_dtw
+from .spdtw_block import spdtw_block
+from .krdtw_wavefront import mask_to_diagonal_major, wavefront_log_krdtw
+from . import ref

@@ -1,0 +1,92 @@
+"""Anti-diagonal wavefront DTW — Pallas TPU kernel.
+
+TPU-native layout (DESIGN.md section 3): batch pairs ride the sublanes, the
+T DP cells of one anti-diagonal ride the lanes. With y pre-reversed, the
+local costs of anti-diagonal k are an *elementwise* op between x and a
+dynamic slice of padded reversed-y — no gathers:
+
+    cell (i, j), j = k - i:   c_k[i] = (x[i] - y[k-i])^2
+    y_rev[j'] = y[T-1-j']  =>  y[k-i] = y_rev[i + (T-1-k)]
+
+Recurrence on diagonals (positions indexed by i):
+
+    D_k[i] = c_k[i] + min(D_{k-1}[i-1], D_{k-1}[i], D_{k-2}[i-1])
+
+2T-1 sequential steps, each O(B*T) pure vector work in VMEM.
+An optional Sakoe-Chiba radius masks cells with |2i - k| > r — the corridor
+test is pure lane arithmetic on the diagonal.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INF = 1.0e30  # python float: weak-typed, safe to close over in pallas kernels
+
+
+def _wavefront_kernel(x_ref, yr_ref, out_ref, *, T: int, radius: int | None):
+    bt = x_ref.shape[0]
+    x = x_ref[...]          # (bt, T)
+    yr = yr_ref[...]        # (bt, T) reversed y
+    big = jnp.full((bt, T), INF, jnp.float32)
+    yr_pad = jnp.concatenate([big, yr, big], axis=1)  # (bt, 3T)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (bt, T), 1)
+
+    def cost_diag(k):
+        # shift s = T-1-k; slice yr_pad[:, T+s : T+s+T]
+        start = 2 * T - 1 - k
+        ysh = jax.lax.dynamic_slice_in_dim(yr_pad, start, T, axis=1)
+        c = (x - ysh) ** 2
+        # invalid positions (outside the diagonal's i-range) -> +INF
+        valid = (lane <= k) & (lane > k - T)
+        if radius is not None:
+            valid &= jnp.abs(2 * lane - k) <= radius
+        return jnp.where(valid & (ysh < INF), c, INF)
+
+    def shift1(d):
+        # position i-1 -> i along lanes, INF in at lane 0
+        return jnp.concatenate([jnp.full((bt, 1), INF, jnp.float32),
+                                d[:, :-1]], axis=1)
+
+    c0 = cost_diag(0)
+    d_km1 = jnp.where(lane == 0, c0, INF)   # D_0
+    d_km2 = jnp.full((bt, T), INF, jnp.float32)
+
+    def body(k, carry):
+        d_km1, d_km2 = carry
+        c = cost_diag(k)
+        best = jnp.minimum(jnp.minimum(shift1(d_km1), d_km1),
+                           shift1(d_km2))
+        d_k = jnp.minimum(c + best, INF)
+        return d_k, d_km1
+
+    d_last, _ = jax.lax.fori_loop(1, 2 * T - 1, body, (d_km1, d_km2))
+    out_ref[...] = jax.lax.dynamic_slice_in_dim(d_last, T - 1, 1, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("radius", "block_b", "interpret"))
+def wavefront_dtw(x: jnp.ndarray, y: jnp.ndarray, radius: int | None = None,
+                  block_b: int = 8, interpret: bool = False) -> jnp.ndarray:
+    """Batched (Sakoe-Chiba-optional) DTW. x, y: (B, T) f32 -> (B,) f32."""
+    B, T = x.shape
+    Bp = ((B + block_b - 1) // block_b) * block_b
+    if Bp != B:
+        pad = ((0, Bp - B), (0, 0))
+        x = jnp.pad(x, pad)
+        y = jnp.pad(y, pad)
+    yr = y[:, ::-1]
+    out = pl.pallas_call(
+        functools.partial(_wavefront_kernel, T=T, radius=radius),
+        grid=(Bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, T), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, T), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), yr.astype(jnp.float32))
+    return out[:B, 0]

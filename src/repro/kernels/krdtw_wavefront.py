@@ -1,0 +1,151 @@
+"""Anti-diagonal wavefront K_rdtw — Pallas TPU kernel (paper Algorithm 2).
+
+Same diagonal-major layout as dtw_wavefront (batch on sublanes, diagonal
+cells on lanes), but sum-product recursions for the p.d. kernel K1 + K2:
+
+  K1_k[i] = kap_k[i]/3 * (K1_{k-1}[i-1] + K1_{k-1}[i] + K1_{k-2}[i-1])
+  K2_k[i] = 1/3 * ( (dx[i]+dy_k[i])/2 * K2_{k-2}[i-1]
+                    + dx[i]   * K2_{k-1}[i-1]
+                    + dy_k[i] * K2_{k-1}[i] )
+
+where dx[i] = kappa(x_i, y_i) and dy_k[i] = kappa(x_{k-i}, y_{k-i}) is the
+same reversed-shift trick applied to the diagonal local-kernel vector.
+Out-of-range / masked cells are 0 — the additive identity — so borders need
+no special-casing beyond the k=0 seed.
+
+Products of T kappa-values underflow f32, so both carries share a per-batch
+running log-scale: each step renormalizes by the current diagonal max
+(exact, DESIGN.md §7.4). Output is log(K1+K2). An optional Sakoe-Chiba
+radius masks |2i - k| > r; an optional diagonal-major mask input supports
+the learned SP-K_rdtw sparsification.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG = -1.0e30  # python float: weak-typed, safe to close over in pallas kernels
+
+
+def _krdtw_kernel(x_ref, yr_ref, dxr_ref, mask_ref, out_ref,
+                  *, T: int, nu: float, radius: int | None,
+                  use_mask: bool):
+    bt = x_ref.shape[0]
+    x = x_ref[...]
+    yr = yr_ref[...]                      # reversed y
+    dx = (x - yr[:, ::-1]) ** 2           # |x_i - y_i|^2
+    dx = jnp.exp(-nu * dx)                # kappa(x_i, y_i), index i
+    dxr = dxr_ref[...]                    # reversed diagonal kernel (lane j')
+    zeros = jnp.zeros((bt, T), jnp.float32)
+    yr_pad = jnp.concatenate([zeros, yr, zeros], axis=1)
+    dxr_pad = jnp.concatenate([zeros, dxr, zeros], axis=1)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (bt, T), 1)
+
+    def diag_vecs(k):
+        start = 2 * T - 1 - k
+        ysh = jax.lax.dynamic_slice_in_dim(yr_pad, start, T, axis=1)
+        dyk = jax.lax.dynamic_slice_in_dim(dxr_pad, start, T, axis=1)
+        kap = jnp.exp(-nu * (x - ysh) ** 2)
+        valid = (lane <= k) & (lane > k - T)
+        if radius is not None:
+            valid &= jnp.abs(2 * lane - k) <= radius
+        if use_mask:
+            mrow = jax.lax.dynamic_slice_in_dim(
+                mask_ref[...], k, 1, axis=0)  # (1, T) diagonal-major support
+            valid &= mrow > 0
+        kap = jnp.where(valid, kap, 0.0)
+        dyk = jnp.where(valid, dyk, 0.0)
+        return kap, dyk, valid.astype(jnp.float32)
+
+    def shift1(d):
+        return jnp.concatenate([jnp.zeros((bt, 1), jnp.float32), d[:, :-1]],
+                               axis=1)
+
+    kap0, _, _ = diag_vecs(0)
+    k1_m1 = jnp.where(lane == 0, kap0, 0.0)
+    k2_m1 = k1_m1
+    k1_m2 = zeros
+    k2_m2 = zeros
+    ls = jnp.zeros((bt, 1), jnp.float32)
+    third = jnp.float32(1.0 / 3.0)
+
+    def body(k, carry):
+        k1_m1, k1_m2, k2_m1, k2_m2, ls = carry
+        kap, dyk, validf = diag_vecs(k)
+        k1 = kap * third * (shift1(k1_m1) + k1_m1 + shift1(k1_m2))
+        # validf zeroes masked cells (dx alone is not masked)
+        k2 = validf * third * ((dx + dyk) * 0.5 * shift1(k2_m2)
+                               + dx * shift1(k2_m1) + dyk * k2_m1)
+        # shared rescale (both K1/K2 and both live diagonals must shift
+        # together so ratios stay exact)
+        m = jnp.maximum(jnp.max(k1, axis=1, keepdims=True),
+                        jnp.max(k2, axis=1, keepdims=True))
+        m = jnp.maximum(m, jnp.max(k1_m1, axis=1, keepdims=True))
+        m = jnp.maximum(m, jnp.max(k2_m1, axis=1, keepdims=True))
+        ok = m > 0
+        inv = jnp.where(ok, 1.0 / jnp.where(ok, m, 1.0), 1.0)
+        ls = ls + jnp.where(ok, jnp.log(jnp.where(ok, m, 1.0)), 0.0)
+        return (k1 * inv, k1_m1 * inv, k2 * inv, k2_m1 * inv, ls)
+
+    k1, _, k2, _, ls = jax.lax.fori_loop(
+        1, 2 * T - 1, body, (k1_m1, k1_m2, k2_m1, k2_m2, ls))
+    tot = (jax.lax.dynamic_slice_in_dim(k1, T - 1, 1, axis=1)
+           + jax.lax.dynamic_slice_in_dim(k2, T - 1, 1, axis=1))
+    out_ref[...] = jnp.where(tot > 0, jnp.log(jnp.maximum(tot, 1e-37)) + ls,
+                             NEG)
+
+
+def mask_to_diagonal_major(mask: np.ndarray) -> np.ndarray:
+    """(T, T) support -> (2T-1, T) diagonal-major layout (row k, lane i)."""
+    T = mask.shape[0]
+    out = np.zeros((2 * T - 1, T), np.float32)
+    for k in range(2 * T - 1):
+        i0, i1 = max(0, k - T + 1), min(k, T - 1)
+        for i in range(i0, i1 + 1):
+            out[k, i] = float(mask[i, k - i])
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("nu", "radius", "block_b",
+                                             "interpret"))
+def wavefront_log_krdtw(x: jnp.ndarray, y: jnp.ndarray, nu: float,
+                        radius: int | None = None,
+                        mask_diag: jnp.ndarray | None = None,
+                        block_b: int = 8,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Batched log K_rdtw (optionally corridor- or support-masked).
+
+    x, y: (B, T) f32; mask_diag: optional (2T-1, T) diagonal-major support
+    from ``mask_to_diagonal_major``. Returns (B,) log-kernel values.
+    """
+    B, T = x.shape
+    Bp = ((B + block_b - 1) // block_b) * block_b
+    if Bp != B:
+        x = jnp.pad(x, ((0, Bp - B), (0, 0)))
+        y = jnp.pad(y, ((0, Bp - B), (0, 0)))
+    yr = y[:, ::-1].astype(jnp.float32)
+    dxr = jnp.exp(-nu * (x[:, ::-1].astype(jnp.float32) - yr) ** 2)
+    use_mask = mask_diag is not None
+    if not use_mask:
+        mask_diag = jnp.ones((1, T), jnp.float32)
+    kernel = functools.partial(_krdtw_kernel, T=T, nu=nu, radius=radius,
+                               use_mask=use_mask)
+    mrows = mask_diag.shape[0]
+    out = pl.pallas_call(
+        kernel,
+        grid=(Bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, T), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, T), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, T), lambda b: (b, 0)),
+            pl.BlockSpec((mrows, T), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), yr, dxr, mask_diag.astype(jnp.float32))
+    return out[:B, 0]

@@ -1,0 +1,85 @@
+"""Public jit'd entry points for the alignment kernels.
+
+Backend policy: on TPU the Pallas kernels run compiled (interpret=False); on
+CPU/GPU the default is the pure-jnp reference path (faster than interpreting
+Pallas cell-by-cell), with ``impl="pallas"`` forcing interpret mode — that is
+what the correctness tests sweep.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.occupancy import BlockSparsePaths, SparsePaths, block_sparsify
+from . import ref
+from .dtw_wavefront import wavefront_dtw
+from .dtw_banded import banded_dtw
+from .spdtw_block import spdtw_block
+from .krdtw_wavefront import mask_to_diagonal_major, wavefront_log_krdtw
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return impl
+
+
+def dtw_pairs(x: jnp.ndarray, y: jnp.ndarray, impl: str = "auto",
+              radius: Optional[int] = None) -> jnp.ndarray:
+    """Batched DTW (optionally Sakoe-Chiba banded). x, y: (B, T) -> (B,)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        if radius is None:
+            return ref.dtw_batch(x, y)
+        return ref.dtw_band_batch(x, y, radius)
+    interp = not _on_tpu()
+    return wavefront_dtw(x, y, radius=radius, interpret=interp)
+
+
+def dtw_banded_pairs(x: jnp.ndarray, y: jnp.ndarray, radius: int,
+                     impl: str = "auto") -> jnp.ndarray:
+    """Batched banded DTW via the slanted-strip kernel (O(T*(2r+1)) work)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.dtw_band_batch(x, y, radius)
+    return banded_dtw(x, y, radius, interpret=not _on_tpu())
+
+
+def spdtw_pairs(x: jnp.ndarray, y: jnp.ndarray, sp: SparsePaths,
+                bsp: Optional[BlockSparsePaths] = None,
+                impl: str = "auto", tile: int = 128) -> jnp.ndarray:
+    """Batched SP-DTW over a learned sparse search space. (B, T) -> (B,)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.wdtw_batch(x, y, sp.weights)
+    if bsp is None:
+        bsp = block_sparsify(sp, tile=tile)
+    return spdtw_block(x, y, bsp, T_orig=x.shape[1],
+                       interpret=not _on_tpu())
+
+
+def log_krdtw_pairs(x: jnp.ndarray, y: jnp.ndarray, nu: float,
+                    radius: Optional[int] = None,
+                    support: Optional[jnp.ndarray] = None,
+                    impl: str = "auto") -> jnp.ndarray:
+    """Batched log K_rdtw / K_rdtw_sc / SP-K_rdtw. (B, T) -> (B,)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        if support is not None:
+            return ref.log_krdtw_masked_batch(x, y, nu, support)
+        if radius is not None:
+            return ref.log_krdtw_band_batch(x, y, nu, radius)
+        return ref.log_krdtw_batch(x, y, nu)
+    mask_diag = None
+    if support is not None:
+        mask_diag = jnp.asarray(mask_to_diagonal_major(np.asarray(support)))
+    return wavefront_log_krdtw(x, y, nu, radius=radius, mask_diag=mask_diag,
+                               interpret=not _on_tpu())

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (batched via vmap of repro.core).
+
+The Pallas kernels must match these bit-for-bit-ish (allclose) across shape
+and dtype sweeps; tests/test_kernels.py enforces it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dtw import dtw as _dtw_pair, dtw_sc as _dtw_sc, wdtw as _wdtw
+from repro.core.krdtw import log_krdtw as _log_krdtw, log_krdtw_sc as _log_krdtw_sc
+
+
+@jax.jit
+def dtw_batch(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Batched DTW. x, y: (B, T) -> (B,) float32."""
+    return jax.vmap(_dtw_pair)(x, y)
+
+
+@functools.partial(jax.jit, static_argnames=("radius",))
+def dtw_band_batch(x: jnp.ndarray, y: jnp.ndarray, radius: int) -> jnp.ndarray:
+    """Batched Sakoe-Chiba DTW. (B, T) x (B, T) -> (B,)."""
+    return jax.vmap(lambda a, b: _dtw_sc(a, b, radius))(x, y)
+
+
+@jax.jit
+def wdtw_batch(x: jnp.ndarray, y: jnp.ndarray,
+               weights: jnp.ndarray) -> jnp.ndarray:
+    """Batched weighted/masked DTW (shared weights). -> (B,)."""
+    return jax.vmap(lambda a, b: _wdtw(a, b, weights))(x, y)
+
+
+@functools.partial(jax.jit, static_argnames=("nu",))
+def log_krdtw_batch(x: jnp.ndarray, y: jnp.ndarray, nu: float) -> jnp.ndarray:
+    """Batched log K_rdtw. -> (B,)."""
+    return jax.vmap(lambda a, b: _log_krdtw(a, b, nu))(x, y)
+
+
+@functools.partial(jax.jit, static_argnames=("nu", "radius"))
+def log_krdtw_band_batch(x, y, nu: float, radius: int) -> jnp.ndarray:
+    return jax.vmap(lambda a, b: _log_krdtw_sc(a, b, nu, radius))(x, y)
+
+
+@functools.partial(jax.jit, static_argnames=("nu",))
+def log_krdtw_masked_batch(x, y, nu: float, mask: jnp.ndarray) -> jnp.ndarray:
+    return jax.vmap(lambda a, b: _log_krdtw(a, b, nu, mask))(x, y)

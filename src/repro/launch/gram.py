@@ -1,0 +1,116 @@
+"""Distributed SP-DTW / K_rdtw Gram-matrix job (the paper's production
+workload: 1-NN and SVM need all-pairs (dis)similarity over big series sets).
+
+shard_map over the flattened ("pod","data","model") device grid: the N x M
+pair-block matrix is tiled row-wise across every chip; each chip runs the
+batched wavefront DP (Pallas kernel on TPU, jnp reference elsewhere) over
+its row stripe against the full (replicated) second set. One all_gather
+reassembles the Gram matrix. Work is embarrassingly parallel, so the
+roofline is pure compute — the collective term is the final gather only.
+
+``--dryrun`` lowers + compiles the job on the 512-chip production mesh
+(ShapeDtypeStructs only), proving the paper plane shards, same as the LM
+cells (EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.dtw import band_mask
+from repro.kernels import ref
+
+
+def _pair_block(xs, ys, weights, nu, kind):
+    """xs: (nb, T), ys: (M, T) -> (nb, M) measure values."""
+    nb, T = xs.shape
+    M = ys.shape[0]
+    xx = jnp.repeat(xs, M, axis=0)
+    yy = jnp.tile(ys, (nb, 1))
+    if kind == "spdtw":
+        vals = ref.wdtw_batch(xx, yy, weights)
+    elif kind == "dtw":
+        vals = ref.dtw_batch(xx, yy)
+    else:  # sp_krdtw
+        vals = ref.log_krdtw_masked_batch(xx, yy, nu, weights > 0)
+    return vals.reshape(nb, M)
+
+
+def gram_job(mesh, X: jnp.ndarray, Y: jnp.ndarray, weights: jnp.ndarray,
+             kind: str = "spdtw", nu: float = 1.0):
+    """Build the jitted distributed Gram computation for the given mesh."""
+    axes = tuple(mesh.axis_names)
+
+    def local(xs, ys, w):
+        vals = _pair_block(xs, ys, w, nu, kind)
+        return vals
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axes, None), P(None, None), P(None, None)),
+        out_specs=P(axes, None),
+        check_vma=False)
+    return jax.jit(fn)
+
+
+def run(n: int = 64, t: int = 64, kind: str = "spdtw",
+        dryrun: bool = False, mesh=None):
+    if mesh is None:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(jax.device_count(), 1)
+    n_dev = mesh.size
+    n = ((n + n_dev - 1) // n_dev) * n_dev   # pad rows to device count
+    w = jnp.asarray(np.asarray(band_mask(t, t, max(t // 8, 1)),
+                               np.float32))
+    with jax.set_mesh(mesh):
+        job = gram_job(mesh, None, None, w, kind=kind)
+        if dryrun:
+            xs = jax.ShapeDtypeStruct((n, t), jnp.float32)
+            ys = jax.ShapeDtypeStruct((n, t), jnp.float32)
+            ws = jax.ShapeDtypeStruct((t, t), jnp.float32)
+            sh = (NamedSharding(mesh, P(tuple(mesh.axis_names), None)),
+                  NamedSharding(mesh, P(None, None)),
+                  NamedSharding(mesh, P(None, None)))
+            lowered = jax.jit(job.__wrapped__, in_shardings=sh).lower(
+                xs, ys, ws)
+            compiled = lowered.compile()
+            ca = compiled.cost_analysis() or {}
+            ma = compiled.memory_analysis()
+            return {"flops_per_device": float(ca.get("flops", 0.0)),
+                    "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+                    "temp_bytes": ma.temp_size_in_bytes,
+                    "devices": n_dev, "pairs": n * n}
+        rng = np.random.default_rng(0)
+        X = jnp.asarray(rng.normal(size=(n, t)).astype(np.float32))
+        G = job(X, X, w)
+        return np.asarray(G)
+
+
+if __name__ == "__main__":
+    import argparse
+    import os
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--t", type=int, default=128)
+    ap.add_argument("--kind", default="spdtw",
+                    choices=("spdtw", "dtw", "sp_krdtw"))
+    args = ap.parse_args()
+    if args.dryrun:
+        # production mesh needs the fake-device env BEFORE jax init;
+        # re-exec pattern documented in dryrun.py — here we require the
+        # caller set it (launch/dryrun_gram.sh does)
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        out = run(args.n, args.t, args.kind, dryrun=True, mesh=mesh)
+    else:
+        out = run(args.n, args.t, args.kind)
+        out = {"shape": out.shape, "sym_err": float(
+            np.abs(out - out.T).max())}
+    print(out)

@@ -1,0 +1,125 @@
+"""Compiled-HLO analysis: collective inventory + roofline terms.
+
+collective_bytes is not in cost_analysis(), so we parse the post-SPMD
+optimized HLO (compiled.as_text()) and sum the bytes moved by every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Wire-byte model (per participating device, ring algorithms):
+  all-gather:          out_bytes * (g-1)/g        (receives all but own shard)
+  reduce-scatter:      in_bytes  * (g-1)/g
+  all-reduce:          2 * out_bytes * (g-1)/g    (RS + AG)
+  all-to-all:          out_bytes * (g-1)/g
+  collective-permute:  out_bytes
+where g = replica group size parsed from the op. The HLO text is the
+per-partition module, so shapes are already per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter, defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^=]*?\))|(?:\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict:
+    """Inventory of collectives with wire-byte estimates (per device)."""
+    per_op = defaultdict(lambda: {"count": 0, "result_bytes": 0,
+                                  "wire_bytes": 0.0})
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _COLL_RE.search(ln)
+        if not m:
+            continue
+        shapes_txt, op = m.group(1), m.group(2)
+        if "-done" in ln:
+            continue
+        size = _shape_bytes(shapes_txt)
+        g = None
+        mg = _GROUPS_RE.search(ln)
+        if mg:
+            g = len([x for x in mg.group(1).split(",") if x.strip() != ""])
+        else:
+            mi = _GROUPS_IOTA_RE.search(ln)
+            if mi:
+                g = int(mi.group(2))
+        if not g or g <= 1:
+            g = 2  # conservative default when groups are unparseable
+        frac = (g - 1) / g
+        if op == "all-reduce":
+            wire = 2 * size * frac
+        elif op == "collective-permute":
+            wire = size
+        else:
+            wire = size * frac
+        d = per_op[op]
+        d["count"] += 1
+        d["result_bytes"] += size
+        d["wire_bytes"] += wire
+    total = sum(d["wire_bytes"] for d in per_op.values())
+    return {"per_op": dict(per_op), "wire_bytes_per_device": total}
+
+
+# TPU v5e-like hardware constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def roofline_terms(flops_dev: float, bytes_dev: float,
+                   coll_bytes_dev: float) -> Roofline:
+    """All inputs are per-device (the HLO module is the partitioned one)."""
+    return Roofline(
+        compute_s=flops_dev / PEAK_FLOPS,
+        memory_s=bytes_dev / HBM_BW,
+        collective_s=coll_bytes_dev / ICI_BW,
+        flops_per_device=flops_dev,
+        bytes_per_device=bytes_dev,
+        coll_bytes_per_device=coll_bytes_dev)

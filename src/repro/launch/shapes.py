@@ -1,0 +1,162 @@
+"""Assigned input shapes and their ShapeDtypeStruct stand-ins + shardings.
+
+Every (arch x shape) cell resolves here to (kind, abstract inputs,
+in_shardings) for the dry-run and the roofline harness. No device
+allocation ever happens (assignment requirement).
+
+  train_4k     seq 4096,   batch 256  -> train_step
+  prefill_32k  seq 32768,  batch 32   -> prefill
+  decode_32k   seq 32768,  batch 128  -> serve_step (cache of seq_len)
+  long_500k    seq 524288, batch 1    -> serve_step; only sub-quadratic
+                                         archs run it (DESIGN.md §6)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+SHAPES: Dict[str, Tuple[int, int, str]] = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """Is this (arch x shape) cell runnable? (assignment skip rules)."""
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, ("skip: pure full-attention arch; long_500k requires "
+                       "sub-quadratic attention (DESIGN.md §6)")
+    return True, ""
+
+
+def _dp(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _dp_size(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in _dp(mesh)]))
+
+
+def _sds(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _ns(mesh, *spec):
+    return NamedSharding(mesh, P(*spec))
+
+
+def specs_to_shardings(tree, mesh):
+    """Recursively convert PartitionSpec leaves to NamedShardings.
+
+    (PartitionSpec subclasses tuple, so jax.tree.map would wrongly recurse
+    into it — hence the explicit walk.)"""
+    if isinstance(tree, P):
+        return NamedSharding(mesh, tree)
+    if isinstance(tree, dict):
+        return {k: specs_to_shardings(v, mesh) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(specs_to_shardings(v, mesh) for v in tree)
+    raise TypeError(f"unexpected node {type(tree)}")
+
+
+def cache_pspecs(cfg: ModelConfig, B: int, mesh):
+    """Decode-cache shardings: sequence over "model" (flash-decode, head-
+    count agnostic); batch over dp when divisible; batch=1 long-context
+    additionally spreads the sequence/state over "data" (SP)."""
+    dp = _dp(mesh)
+    b = dp if B % _dp_size(mesh) == 0 else None
+    seq = ("data", "model") if B == 1 else ("model",)
+    if cfg.family == "audio":
+        return {"self": {"k": P(None, b, seq, None, None),
+                         "v": P(None, b, seq, None, None)},
+                "cross": {"k": P(None, b, None, "model", None),
+                          "v": P(None, b, None, "model", None)}}
+    specs = []
+    for spec in cfg.pattern:
+        if spec.mixer == "attn":
+            # ring caches of window length may not divide (data, model);
+            # shard them over "model" only
+            s = seq if spec.window is None else ("model",)
+            specs.append({"k": P(None, b, s, None, None),
+                          "v": P(None, b, s, None, None)})
+        elif spec.mixer == "mla":
+            specs.append({"ckv": P(None, b, seq, None),
+                          "krope": P(None, b, seq, None)})
+        elif spec.mixer == "mamba":
+            di_ax = ("data", "model") if B == 1 else ("model",)
+            specs.append({"h": P(None, b, di_ax, None),
+                          "conv": P(None, b, None, di_ax)})
+        else:
+            specs.append({})
+    return specs
+
+
+@dataclasses.dataclass
+class Cell:
+    kind: str                  # train | prefill | decode
+    args: tuple                # abstract inputs (ShapeDtypeStructs)
+    in_shardings: tuple
+    seq_len: int
+    batch: int
+    tokens_per_step: int
+
+
+def input_specs(cfg: ModelConfig, shape: str, mesh, api=None) -> Cell:
+    """Abstract inputs + shardings for one (arch x shape) cell."""
+    S, B, kind = SHAPES[shape]
+    dp = _dp(mesh)
+    b_spec = dp if B % _dp_size(mesh) == 0 else None
+
+    if kind == "train":
+        batch: Dict[str, Any] = {}
+        shard: Dict[str, Any] = {}
+        s_text = S
+        if cfg.family == "vlm":
+            s_text = S - cfg.n_patches
+            batch["patches"] = _sds((B, cfg.n_patches, cfg.d_model),
+                                    jnp.bfloat16)
+            shard["patches"] = _ns(mesh, b_spec, None, None)
+        if cfg.family == "audio":
+            batch["frames"] = _sds((B, cfg.n_frames, cfg.d_model),
+                                   jnp.bfloat16)
+            shard["frames"] = _ns(mesh, b_spec, None, None)
+        batch["tokens"] = _sds((B, s_text + 1))
+        shard["tokens"] = _ns(mesh, b_spec, None)
+        return Cell("train", (batch,), (shard,), S, B, B * S)
+
+    if kind == "prefill":
+        batch, shard = {}, {}
+        s_text = S
+        if cfg.family == "vlm":
+            s_text = S - cfg.n_patches
+            batch["patches"] = _sds((B, cfg.n_patches, cfg.d_model),
+                                    jnp.bfloat16)
+            shard["patches"] = _ns(mesh, b_spec, None, None)
+        if cfg.family == "audio":
+            batch["frames"] = _sds((B, cfg.n_frames, cfg.d_model),
+                                   jnp.bfloat16)
+            shard["frames"] = _ns(mesh, b_spec, None, None)
+        batch["tokens"] = _sds((B, s_text))
+        shard["tokens"] = _ns(mesh, b_spec, None)
+        return Cell("prefill", (batch,), (shard,), S, B, B * S)
+
+    # decode: token + cache + pos
+    assert api is not None
+    cache = jax.eval_shape(lambda: api.init_cache(B, S))
+    cspecs = cache_pspecs(cfg, B, mesh)
+    cache_sh = specs_to_shardings(cspecs, mesh)
+    token = _sds((B, 1))
+    token_sh = _ns(mesh, b_spec, None)
+    pos = _sds((), jnp.int32)
+    pos_sh = _ns(mesh)
+    return Cell("decode", (token, cache, pos),
+                (token_sh, cache_sh, pos_sh), S, B, B)

@@ -1,0 +1,4 @@
+"""repro.models — assigned-architecture model zoo (scan-over-groups JAX)."""
+from .config import LayerSpec, ModelConfig
+from .registry import ModelAPI, build
+from .lm import Ctx

@@ -1,0 +1,143 @@
+"""Flash attention with a custom VJP (beyond-paper §Perf optimization).
+
+The plain chunked-softmax attention in layers.py is memory-correct in the
+forward pass, but its backward saves the per-chunk probability tensors
+(and f32-upcast K/V chunks) as scan residuals — stacked across the group
+scan that's ~134 MB x n_layers per device (EXPERIMENTS.md §Perf, H1).
+
+This version saves only (q, k, v, out, lse): the backward recomputes p per
+KV chunk and accumulates dq/dk/dv — the standard flash-attention backward,
+expressed in pure JAX so the SPMD partitioner still shards it.
+
+Supports GQA (Hq % Hkv == 0), MLA's dv != hd, causal + sliding-window
+masks. Decode paths (kv_len masking) keep using layers.attention — no
+gradients there.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import FLAGS, NEG_INF, _unroll
+
+
+def _bias(Sq, ck, ci, q_offset, causal, window, dtype=jnp.float32):
+    q_pos = q_offset + jnp.arange(Sq)
+    kv_pos = ci * ck + jnp.arange(ck)
+    mask = jnp.ones((Sq, ck), bool)
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - kv_pos[None, :] < window
+    return jnp.where(mask, 0.0, NEG_INF).astype(dtype)
+
+
+def _chunks(x, ck):
+    B, S, H, d = x.shape
+    n = S // ck
+    return x.reshape(B, n, ck, H, d).transpose(1, 0, 2, 3, 4)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, causal=True, window=None, q_offset=0,
+                    kv_chunk=1024, scale=None):
+    """q: (B,Sq,Hq,hd); k: (B,Skv,Hkv,hd); v: (B,Skv,Hkv,dv) -> (B,Sq,Hq,dv)."""
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, q_offset, kv_chunk,
+                             scale)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_offset, kv_chunk, scale):
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    G = Hq // Hkv
+    sc = scale if scale is not None else hd ** -0.5
+    if FLAGS["kv_chunk"]:
+        kv_chunk = FLAGS["kv_chunk"]
+    ck = kv_chunk if Skv % kv_chunk == 0 else Skv
+    n = Skv // ck
+    qh = (q * sc).reshape(B, Sq, Hkv, G, hd)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ci, kci, vci = inp
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qh, kci,
+                       preferred_element_type=jnp.float32)
+        s = s + _bias(Sq, ck, ci, q_offset, causal,
+                      window)[None, :, None, None, :]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p.astype(vci.dtype), vci,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, G, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (jnp.arange(n), _chunks(k, ck),
+                                   _chunks(v, ck)), unroll=_unroll())
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    out = (acc / jnp.maximum(l[..., None], 1e-30)
+           ).reshape(B, Sq, Hq, dv).astype(q.dtype)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, kv_chunk, scale):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, q_offset, kv_chunk,
+                               scale)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, q_offset, kv_chunk, scale, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    G = Hq // Hkv
+    sc = scale if scale is not None else hd ** -0.5
+    if FLAGS["kv_chunk"]:
+        kv_chunk = FLAGS["kv_chunk"]
+    ck = kv_chunk if Skv % kv_chunk == 0 else Skv
+    n = Skv // ck
+    qh = (q * sc).reshape(B, Sq, Hkv, G, hd)
+    og = out.reshape(B, Sq, Hkv, G, dv)
+    dog = dout.reshape(B, Sq, Hkv, G, dv).astype(jnp.float32)
+    # delta = rowsum(dout * out)  (f32)
+    delta = jnp.sum(dog * og.astype(jnp.float32), axis=-1)
+
+    def step(dq, inp):
+        ci, kci, vci = inp
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qh, kci,
+                       preferred_element_type=jnp.float32)
+        s = s + _bias(Sq, ck, ci, q_offset, causal,
+                      window)[None, :, None, None, :]
+        p = jnp.exp(s - lse[..., None])                       # (B,Sq,h,G,ck)
+        dp = jnp.einsum("bqhgd,bkhd->bqhgk", dog,
+                        vci.astype(jnp.float32))
+        ds = p * (dp - delta[..., None])                      # f32
+        dq_c = jnp.einsum("bqhgk,bkhd->bqhgd", ds,
+                          kci.astype(jnp.float32)) * sc
+        # qh already carries the scale, so dk needs no extra factor
+        dk_c = jnp.einsum("bqhgk,bqhgd->bkhd", ds, qh.astype(jnp.float32))
+        dv_c = jnp.einsum("bqhgk,bqhgd->bkhd", p, dog)
+        return dq + dq_c, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((B, Sq, Hkv, G, hd), jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(
+        step, dq0, (jnp.arange(n), _chunks(k, ck), _chunks(v, ck)),
+        unroll=_unroll())
+    dk = dk_c.transpose(1, 0, 2, 3, 4).reshape(B, Skv, Hkv, hd)
+    dv_ = dv_c.transpose(1, 0, 2, 3, 4).reshape(B, Skv, Hkv, dv)
+    return (dq.reshape(B, Sq, Hq, hd).astype(q.dtype),
+            dk.astype(k.dtype), dv_.astype(v.dtype))
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

@@ -1,0 +1,181 @@
+"""Shared building blocks: norms, RoPE, chunked attention, gated MLP.
+
+Everything is pure-functional (params passed explicitly) and shaped for
+scan-over-groups stacking. Attention streams KV in chunks with an online
+softmax so the (S x S) score matrix never materializes (memory roofline —
+DESIGN.md §5); sliding-window locality is a mask on the same loop.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+# Trace-time flags for the dry-run cost probes (DESIGN.md §9): XLA's
+# cost_analysis counts loop bodies ONCE, so the probes fully unroll every
+# inner scan (attention KV chunks, CE chunks, mamba chunks) and the roofline
+# harness extrapolates exactly over the homogeneous group dimension.
+FLAGS = {"unroll_inner": False, "mamba_chunk": 16, "kv_chunk": None,
+         "flash": True, "remat_policy": "minimal"}
+
+
+def set_probe_mode(on: bool, mamba_chunk: int = 512, kv_chunk: int = 4096):
+    FLAGS["unroll_inner"] = bool(on)
+    FLAGS["mamba_chunk"] = mamba_chunk if on else 16
+    FLAGS["kv_chunk"] = kv_chunk if on else None
+
+
+def _unroll():
+    return True if FLAGS["unroll_inner"] else 1
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale + bias).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """Interleaved (rotate-every-two) RoPE.
+
+    Interleaved pairing keeps rotated pairs adjacent, so a head_dim-sharded
+    layout (attn_shard="head_dim", DESIGN §5) never splits a pair across
+    model shards. x: (..., S, H, hd); positions: (..., S).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # ang: (..., S, 1, half) — broadcasts over the heads axis
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x2 = x.reshape(x.shape[:-1] + (half, 2))
+    xe, xo = x2[..., 0], x2[..., 1]
+    re = xe * cos - xo * sin
+    ro = xe * sin + xo * cos
+    return jnp.stack([re, ro], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+class AttnOut(NamedTuple):
+    out: jnp.ndarray
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              *, causal: bool = True,
+              window: Optional[int] = None,
+              q_offset: jnp.ndarray | int = 0,
+              kv_chunk: int = 1024,
+              kv_len: Optional[jnp.ndarray] = None,
+              scale: Optional[float] = None) -> jnp.ndarray:
+    """Online-softmax chunked attention with GQA and optional sliding window.
+
+    q: (B, Sq, Hq, hd);  k: (B, Skv, Hkv, hd);  v: (B, Skv, Hkv, dv)
+    (dv may differ from hd — MLA). Hq % Hkv == 0.
+    q_offset: absolute position of q[0] (decode: current position).
+    kv_len: optional (B,) valid KV length (decode with ring/partial cache).
+    Returns (B, Sq, Hq, dv).
+    """
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else hd ** -0.5
+    qh = (q * scale).reshape(B, Sq, Hkv, G, hd)
+    if FLAGS["kv_chunk"]:
+        kv_chunk = FLAGS["kv_chunk"]  # probe mode: fewer, fatter chunks
+    ck = kv_chunk if Skv % kv_chunk == 0 else Skv  # odd lengths: one chunk
+    n_chunks = Skv // ck
+    q_pos = q_offset + jnp.arange(Sq)
+
+    kc = k.reshape(B, n_chunks, ck, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, ck, Hkv, dv).transpose(1, 0, 2, 3, 4)
+
+    def chunk_step(carry, inputs):
+        m, l, acc = carry
+        ci, kci, vci = inputs
+        kv_pos = ci * ck + jnp.arange(ck)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qh, kci,
+                       preferred_element_type=jnp.float32)
+        # additive mask: where(mask, s, -inf) would force XLA to stash the
+        # boolean mask as a backward residual per group (d(where) routes
+        # through pred); s + bias has an identity backward instead
+        mask = jnp.ones((Sq, ck), bool)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if window is not None:
+            mask &= q_pos[:, None] - kv_pos[None, :] < window
+        if kv_len is not None:
+            mask = mask[None] & (kv_pos[None, None, :] <
+                                 kv_len[:, None, None])
+            bias = jnp.where(mask[:, :, None, None, :], 0.0, NEG_INF)
+        else:
+            bias = jnp.where(mask[None, :, None, None, :], 0.0, NEG_INF)
+        s = s + jax.lax.stop_gradient(bias)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p.astype(vci.dtype), vci,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, G, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        chunk_step, (m0, l0, a0),
+        (jnp.arange(n_chunks), kc, vc), unroll=_unroll())
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, Hq, dv).astype(q.dtype)
+
+
+def gated_mlp(x: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def chunked_cross_entropy(hidden: jnp.ndarray, emb: jnp.ndarray,
+                          targets: jnp.ndarray, mask: jnp.ndarray,
+                          s_chunk: int = 512) -> jnp.ndarray:
+    """Mean next-token CE without materializing full (B, S, V) logits.
+
+    hidden: (B, S, d); emb: (V, d) tied unembedding; targets/mask: (B, S).
+    The sequence axis is processed in chunks so the transient logits tensor
+    is (B, s_chunk, V) (memory roofline, DESIGN §5).
+    """
+    B, S, d = hidden.shape
+    ck = min(s_chunk, S)
+    while S % ck:          # largest divisor of S <= s_chunk (VLM: S=3840)
+        ck -= 1
+    n = S // ck
+
+    hc = hidden.reshape(B, n, ck, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, n, ck).transpose(1, 0, 2)
+    mc = mask.reshape(B, n, ck).transpose(1, 0, 2)
+
+    def step(carry, inp):
+        tot, cnt = carry
+        h, t, m = inp
+        logits = (h @ emb.T).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m
+        return (tot + jnp.sum(nll), cnt + jnp.sum(m)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        step, (jnp.float32(0), jnp.float32(0)), (hc, tc, mc),
+        unroll=_unroll())
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,108 @@
+"""Mamba-1 selective SSM block (falcon-mamba / jamba mixers).
+
+The selective scan h_t = Abar_t h_{t-1} + Bbar_t x_t is evaluated in
+*chunks*: an associative scan inside each chunk (log-depth, vectorized over
+the model-sharded d_inner axis) and a sequential lax.scan carrying h across
+chunks — the (B, S, d_inner, d_state) discretized tensors only ever
+materialize per-chunk (DESIGN.md §5). TP: d_inner is sharded over "model";
+the only cross-shard reductions are the small B/C/dt projections and the
+output projection, handled by the SPMD partitioner from the weight specs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _ssm_combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+def _conv1d_causal(x, w, b, state=None):
+    """Depthwise causal conv. x: (B, S, di); w: (dc, di); b: (di,).
+
+    state: optional (B, dc-1, di) left context (decode); returns y and the
+    new state (last dc-1 inputs).
+    """
+    dc = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, k:k + x.shape[1], :] * w[k] for k in range(dc))
+    new_state = xp[:, -(dc - 1):, :]
+    return y + b, new_state
+
+
+def mamba_mixer(x: jnp.ndarray, p: dict, *, d_state: int,
+                chunk: int | None = None,
+                h0: jnp.ndarray | None = None,
+                conv0: jnp.ndarray | None = None,
+                return_state: bool = False):
+    """x: (B, S, d) -> (B, S, d). Params p (specs in sharding.py):
+
+      in_x (d, di), in_z (d, di), conv_w (dc, di), conv_b (di,),
+      w_B (di, ds), w_C (di, ds), dt_down (di, dtr), dt_up (dtr, di),
+      dt_bias (di,), A_log (di, ds), D (di,), out (di, d)
+    """
+    B, S, d = x.shape
+    di = p["in_x"].shape[1]
+    xs = x @ p["in_x"]                       # (B, S, di)
+    z = x @ p["in_z"]
+    xs, conv_state = _conv1d_causal(xs, p["conv_w"], p["conv_b"], conv0)
+    xs = jax.nn.silu(xs)
+
+    from .layers import FLAGS, _unroll
+    if chunk is None:
+        chunk = FLAGS["mamba_chunk"]
+    Bt = xs @ p["w_B"]                       # (B, S, ds)
+    Ct = xs @ p["w_C"]
+    dt = jax.nn.softplus((xs @ p["dt_down"]) @ p["dt_up"]
+                         + p["dt_bias"])     # (B, S, di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))     # (di, ds)
+
+    ck = chunk if S % chunk == 0 else S
+    n = S // ck
+    xs_c = xs.reshape(B, n, ck, di).transpose(1, 0, 2, 3)
+    dt_c = dt.reshape(B, n, ck, di).transpose(1, 0, 2, 3)
+    B_c = Bt.reshape(B, n, ck, d_state).transpose(1, 0, 2, 3)
+    C_c = Ct.reshape(B, n, ck, d_state).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, inp):
+        xc, dtc, bc, cc = inp
+        dtf = dtc.astype(jnp.float32)
+        abar = jnp.exp(dtf[..., None] * A)                   # (B,ck,di,ds)
+        bbar = (dtf[..., None] * bc[:, :, None, :].astype(jnp.float32)
+                * xc[..., None].astype(jnp.float32))
+        aa, bb = jax.lax.associative_scan(_ssm_combine, (abar, bbar), axis=1)
+        hs = aa * h[:, None] + bb                            # (B,ck,di,ds)
+        y = jnp.einsum("bcds,bcs->bcd", hs, cc.astype(jnp.float32))
+        return hs[:, -1], y
+
+    h = (jnp.zeros((B, di, d_state), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+    h, ys = jax.lax.scan(chunk_step, h, (xs_c, dt_c, B_c, C_c),
+                         unroll=_unroll())
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+    y = (y + xs.astype(jnp.float32) * p["D"]).astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ p["out"]
+    if return_state:
+        return out, (h, conv_state)
+    return out
+
+
+def mamba_decode_step(x: jnp.ndarray, p: dict, state, *, d_state: int):
+    """Single-token decode. x: (B, 1, d); state = (h (B,di,ds), conv (B,dc-1,di))."""
+    out, new_state = mamba_mixer(x, p, d_state=d_state, chunk=1,
+                                 h0=state[0], conv0=state[1],
+                                 return_state=True)
+    return out, new_state
+
+
+def init_mamba_state(B: int, di: int, d_state: int, d_conv: int, dtype):
+    return (jnp.zeros((B, di, d_state), jnp.float32),
+            jnp.zeros((B, d_conv - 1, di), dtype))

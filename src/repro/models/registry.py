@@ -1,0 +1,50 @@
+"""Uniform model API over the decoder-LM and encoder-decoder families."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+from .config import ModelConfig
+from . import lm, whisper
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init_params: Callable
+    abstract_params: Callable
+    param_pspecs: Callable
+    train_loss: Callable      # (params, batch, ctx) -> scalar
+    prefill: Callable         # (params, batch, ctx, S_cache) -> (h, cache)
+    decode_step: Callable     # (params, cache, token, pos, ctx)
+    init_cache: Callable      # (B, S_max) -> cache pytree
+
+
+def build(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family == "audio":
+        return ModelAPI(
+            cfg=cfg,
+            init_params=lambda rng: whisper.init_params(cfg, rng),
+            abstract_params=lambda: whisper.abstract_params(cfg),
+            param_pspecs=lambda: whisper.param_pspecs(cfg),
+            train_loss=lambda p, b, ctx: whisper.train_loss(p, b, cfg, ctx),
+            prefill=lambda p, b, ctx, S: whisper.prefill(
+                p, b["frames"], b["tokens"], cfg, ctx, S),
+            decode_step=lambda p, c, t, pos, ctx: whisper.decode_step(
+                p, c, t, pos, cfg, ctx),
+            init_cache=lambda B, S: whisper.init_cache(cfg, B, S),
+        )
+    return ModelAPI(
+        cfg=cfg,
+        init_params=lambda rng: lm.init_params(cfg, rng),
+        abstract_params=lambda: lm.abstract_params(cfg),
+        param_pspecs=lambda: lm.param_pspecs(cfg),
+        train_loss=lambda p, b, ctx: lm.train_loss(p, b, cfg, ctx),
+        prefill=lambda p, b, ctx, S: lm.prefill(
+            p, b["tokens"], cfg, ctx, S, patches=b.get("patches")),
+        decode_step=lambda p, c, t, pos, ctx: lm.decode_step(
+            p, c, t, pos, cfg, ctx),
+        init_cache=lambda B, S: lm.init_cache(cfg, B, S),
+    )

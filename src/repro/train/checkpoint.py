@@ -1,0 +1,182 @@
+"""Sharded checkpointing with atomic commits, async writes, keep-last-k,
+integrity hashes and ELASTIC restore (mesh-shape-independent).
+
+Layout:  <dir>/step_<n>/
+           manifest.json   {step, tree structure, shapes, dtypes, sha256}
+           <leaf-id>.npy   one file per pytree leaf (full, unsharded)
+
+Restore takes the *target* mesh + shardings: arrays are device_put straight
+into the new layout, so a checkpoint written on a 16x16 mesh restores onto
+2x16x16 (or a single host) unchanged — the elastic-scaling path
+(DESIGN.md §5). Integrity: per-leaf sha256 verified on load; half-written
+checkpoints are invisible (tmp-dir + atomic rename); auto_resume picks the
+newest complete step.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree, prefix=""):
+    """Stable (path, leaf) enumeration for dict/list/(named)tuple pytrees.
+    None nodes are recorded (and restored) as None."""
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _leaf_paths(tree[k], f"{prefix}.{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _leaf_paths(v, f"{prefix}[{i}]")
+    else:
+        yield prefix, tree
+
+
+def _make_container(node, children):
+    if isinstance(node, tuple) and hasattr(node, "_fields"):
+        return type(node)(*children)      # namedtuple (e.g. AdamState)
+    return type(node)(children)
+
+
+def _set_path(tree, path, value):
+    # rebuild-free: used via _map_restore instead
+    raise NotImplementedError
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    """Blocking save. Returns the committed path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {"step": step, "leaves": []}
+    for i, (path, leaf) in enumerate(_leaf_paths(tree)):
+        if leaf is None:
+            manifest["leaves"].append({"path": path, "none": True})
+            continue
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        with open(os.path.join(tmp, fname), "rb") as f:
+            digest = hashlib.sha256(f.read()).hexdigest()
+        manifest["leaves"].append({
+            "path": path, "file": fname, "shape": list(arr.shape),
+            "dtype": str(arr.dtype), "sha256": digest})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)            # atomic commit
+    return final
+
+
+def list_checkpoints(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name,
+                                           "manifest.json")):
+                steps.append(int(name.split("_")[1]))
+    return sorted(steps)
+
+
+def restore_checkpoint(directory: str, step: int, like: Any,
+                       shardings: Any = None, verify: bool = True) -> Any:
+    """Restore into the structure of ``like`` (arrays or SDS), placing each
+    leaf with the matching ``shardings`` leaf (None = host arrays)."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_path = {l["path"]: l for l in manifest["leaves"]}
+
+    flat_like = list(_leaf_paths(like))
+    flat_sh = (list(_leaf_paths(shardings)) if shardings is not None
+               else [(p, None) for p, _ in flat_like])
+    out_leaves = []
+    for (lpath, leaf), (_, sh) in zip(flat_like, flat_sh):
+        meta = by_path[lpath]
+        if meta.get("none"):
+            out_leaves.append(None)
+            continue
+        fpath = os.path.join(path, meta["file"])
+        if verify:
+            with open(fpath, "rb") as f:
+                if hashlib.sha256(f.read()).hexdigest() != meta["sha256"]:
+                    raise IOError(f"checksum mismatch for {lpath}")
+        arr = np.load(fpath)
+        if str(arr.dtype) != meta["dtype"]:
+            # np.save round-trips ml_dtypes (bfloat16, ...) as raw void;
+            # re-view with the manifest's logical dtype
+            import ml_dtypes  # noqa: F401  (registers the dtypes)
+            arr = arr.view(np.dtype(meta["dtype"]))
+        if sh is not None:
+            out_leaves.append(jax.device_put(arr, sh))
+        else:
+            out_leaves.append(arr)
+
+    it = iter(out_leaves)
+
+    def rebuild(node):
+        if isinstance(node, dict):
+            return {k: rebuild(node[k]) for k in sorted(node)}
+        if isinstance(node, (list, tuple)):
+            return _make_container(node, [rebuild(v) for v in node])
+        return next(it)
+
+    rebuilt = rebuild(like)
+    # restore original (insertion) dict ordering
+    def reorder(orig, new):
+        if isinstance(orig, dict):
+            return {k: reorder(orig[k], new[k]) for k in orig}
+        if isinstance(orig, (list, tuple)):
+            return _make_container(
+                orig, [reorder(o, n) for o, n in zip(orig, new)])
+        return new
+    return reorder(like, rebuilt)
+
+
+class CheckpointManager:
+    """Async writer + retention. save() returns immediately; the previous
+    write is joined first (at most one in flight — bounded memory)."""
+
+    def __init__(self, directory: str, keep_last: int = 3):
+        self.directory = directory
+        self.keep_last = keep_last
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree: Any):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+
+        def work():
+            save_checkpoint(self.directory, step, host_tree)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = list_checkpoints(self.directory)
+        for s in steps[:-self.keep_last]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def latest_step(self) -> Optional[int]:
+        steps = list_checkpoints(self.directory)
+        return steps[-1] if steps else None

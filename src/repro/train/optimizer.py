@@ -1,0 +1,116 @@
+"""AdamW, in-house (no optax offline).
+
+Memory policy knobs (per-arch overrides in launch/dryrun.py):
+  * keep_master: f32 master copy of bf16 params (default on);
+  * moment_dtype: f32 (default) or bf16 m/v (halves optimizer HBM — used by
+    the 236B-class configs where even fully-sharded f32 moments don't fit);
+  * ZeRO-1 via state_pspecs(zero1=True): every state leaf's largest
+    still-unsharded (and data-divisible) dim is sharded over "data"; the
+    SPMD partitioner then emits the reduce-scatter(grads) -> sharded
+    update -> all-gather(params) schedule — textbook ZeRO from sharding
+    specs alone (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+    master: Any            # f32 master params, or None (keep_master=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: Any = jnp.float32
+    keep_master: bool = True
+
+    def init(self, params) -> AdamState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, self.moment_dtype), params)
+        master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+                  if self.keep_master else None)
+        return AdamState(jnp.zeros((), jnp.int32), zeros,
+                         jax.tree.map(jnp.copy, zeros), master)
+
+    def update(self, grads, state: AdamState, params) -> tuple:
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, mast):
+            g = g.astype(jnp.float32)
+            mf = m.astype(jnp.float32)
+            vf = v.astype(jnp.float32)
+            mf = self.b1 * mf + (1 - self.b1) * g
+            vf = self.b2 * vf + (1 - self.b2) * g * g
+            mh = mf / b1c
+            vh = vf / b2c
+            new_mast = mast - lr * (mh / (jnp.sqrt(vh) + self.eps)
+                                    + self.weight_decay * mast)
+            return (mf.astype(self.moment_dtype),
+                    vf.astype(self.moment_dtype), new_mast)
+
+        masters = (state.master if self.keep_master
+                   else jax.tree.map(lambda p: p.astype(jnp.float32),
+                                     params))
+        out = jax.tree.map(upd, grads, state.m, state.v, masters)
+        is_t = lambda t: isinstance(t, tuple)
+        m = jax.tree.map(lambda t: t[0], out, is_leaf=is_t)
+        v = jax.tree.map(lambda t: t[1], out, is_leaf=is_t)
+        master = jax.tree.map(lambda t: t[2], out, is_leaf=is_t)
+        new_params = jax.tree.map(
+            lambda mast, p: mast.astype(p.dtype), master, params)
+        return new_params, AdamState(
+            step, m, v, master if self.keep_master else None)
+
+    def state_pspecs(self, param_pspecs, zero1: bool = False,
+                     shapes=None, data_size: int = 16):
+        """Optimizer-state shardings; see module docstring for zero1."""
+        def z1(ps, shp):
+            used = set(a for axes in ps if axes
+                       for a in (axes if isinstance(axes, tuple)
+                                 else (axes,)))
+            if "data" in used:
+                return ps
+            dims = list(ps) + [None] * (len(shp) - len(ps))
+            best, best_sz = -1, 0
+            for i, (axes, sz) in enumerate(zip(dims, shp)):
+                if axes is None and sz % data_size == 0 and sz > best_sz:
+                    best, best_sz = i, sz
+            if best < 0:
+                return ps
+            dims[best] = "data"
+            return P(*dims)
+
+        if zero1:
+            assert shapes is not None
+            mv = jax.tree.map(
+                lambda ps, sds: z1(ps, sds.shape), param_pspecs, shapes,
+                is_leaf=lambda x: isinstance(x, P))
+        else:
+            mv = param_pspecs
+        return AdamState(P(), mv, mv, mv if self.keep_master else None)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return lr

@@ -1,0 +1,98 @@
+"""Brute-force numpy oracles shared by the test suite.
+
+Deliberately dumb: O(T^2) python loops, float64, no JAX — the ground truth
+everything else (core JAX DP, Pallas kernels) is compared against.
+"""
+import numpy as np
+
+BIG = 1e30
+
+
+def phi(a, b):
+    d = np.atleast_1d(a) - np.atleast_1d(b)
+    return float(np.dot(d, d))
+
+
+def dtw_full(x, y, weights=None):
+    """Weighted/masked DTW; weights None => all-ones. Returns (dist, D)."""
+    x, y = np.asarray(x, np.float64), np.asarray(y, np.float64)
+    Tx, Ty = x.shape[0], y.shape[0]
+    D = np.full((Tx, Ty), BIG)
+    for i in range(Tx):
+        for j in range(Ty):
+            w = 1.0 if weights is None else float(weights[i, j])
+            if w <= 0:
+                continue
+            c = phi(x[i], y[j]) * w
+            if i == 0 and j == 0:
+                D[i, j] = c
+            elif i == 0:
+                D[i, j] = D[i, j - 1] + c
+            elif j == 0:
+                D[i, j] = D[i - 1, j] + c
+            else:
+                D[i, j] = c + min(D[i - 1, j], D[i - 1, j - 1], D[i, j - 1])
+    return D[-1, -1], D
+
+
+def dtw_path(x, y):
+    """Optimal path cells via backtracking (ties: diag > up > left)."""
+    _, D = dtw_full(x, y)
+    i, j = D.shape[0] - 1, D.shape[1] - 1
+    cells = [(i, j)]
+    while (i, j) != (0, 0):
+        cands = []
+        if i > 0 and j > 0:
+            cands.append((D[i - 1, j - 1], 0, (i - 1, j - 1)))
+        if i > 0:
+            cands.append((D[i - 1, j], 1, (i - 1, j)))
+        if j > 0:
+            cands.append((D[i, j - 1], 2, (i, j - 1)))
+        cands.sort(key=lambda t: (t[0], t[1]))
+        i, j = cands[0][2]
+        cells.append((i, j))
+    m = np.zeros(D.shape, bool)
+    for (a, b) in cells:
+        m[a, b] = True
+    return m
+
+
+def krdtw_log(x, y, nu, mask=None):
+    """Paper Algorithm 2 in float64 log-safe form. Returns log(K1+K2)."""
+    x = np.atleast_2d(np.asarray(x, np.float64).T).T
+    y = np.atleast_2d(np.asarray(y, np.float64).T).T
+    T = x.shape[0]
+    if mask is None:
+        mask = np.ones((T, T), bool)
+
+    def kap(a, b):
+        d = a - b
+        return np.exp(-nu * np.dot(d, d))
+
+    K1 = np.zeros((T, T))
+    K2 = np.zeros((T, T))
+    for i in range(T):
+        for j in range(T):
+            if not mask[i, j]:
+                continue
+            kij = kap(x[i], y[j])
+            dxi = kap(x[i], y[i])
+            dxj = kap(x[j], y[j])
+            if i == 0 and j == 0:
+                K1[0, 0] = kij
+                K2[0, 0] = kij
+            elif j == 0:
+                K1[i, 0] = K1[i - 1, 0] * kij / 3.0
+                K2[i, 0] = K2[i - 1, 0] * dxi / 3.0
+            elif i == 0:
+                K1[0, j] = K1[0, j - 1] * kij / 3.0
+                K2[0, j] = K2[0, j - 1] * dxj / 3.0
+            else:
+                K1[i, j] = kij / 3.0 * (
+                    K1[i - 1, j - 1] + K1[i - 1, j] + K1[i, j - 1])
+                K2[i, j] = (1.0 / 3.0) * (
+                    (dxi + dxj) / 2.0 * K2[i - 1, j - 1]
+                    + dxi * K2[i - 1, j]
+                    + dxj * K2[i, j - 1])
+    val = K1[-1, -1] + K2[-1, -1]
+    return np.log(val) if val > 0 else -np.inf

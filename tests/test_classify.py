@@ -1,0 +1,99 @@
+"""Classification stack: 1-NN, SVM, meta-parameter selection, datasets."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.classify import (knn_error, loo_error, select_radius,
+                            select_theta_gamma, svm_error, svm_fit,
+                            svm_predict)
+from repro.core import make_measure, normalized_gram
+from repro.data import DATASETS, dedup_by_spdtw, load
+
+
+def test_all_generators_produce_sane_datasets():
+    for name in DATASETS:
+        ds = load(name)
+        assert ds.X_train.ndim == 2 and ds.X_test.ndim == 2
+        assert ds.X_train.shape[1] == ds.X_test.shape[1]
+        assert len(ds.y_train) == len(ds.X_train)
+        assert ds.n_classes >= 2
+        # z-normalized
+        np.testing.assert_allclose(ds.X_train.mean(axis=1), 0, atol=1e-4)
+        np.testing.assert_allclose(ds.X_train.std(axis=1), 1, atol=1e-3)
+        # every class present in train
+        assert len(np.unique(ds.y_train)) == ds.n_classes
+
+
+def test_knn_euclidean_beats_chance_on_cbf():
+    ds = load("CBF", n_train=24, n_test=60)
+    m = make_measure("euclidean", ds.T)
+    cross = m.cross(jnp.asarray(ds.X_test), jnp.asarray(ds.X_train))
+    err = knn_error(cross, ds.y_train, ds.y_test)
+    assert err < 0.67  # 3 classes, chance = 0.67
+
+
+def test_knn_dtw_beats_euclidean_on_warped_data():
+    """The paper's core motivation: elasticity helps under warping."""
+    ds = load("Waves", n_train=30, n_test=80)
+    Xtr, Xte = jnp.asarray(ds.X_train), jnp.asarray(ds.X_test)
+    e_ed = knn_error(make_measure("euclidean", ds.T).cross(Xte, Xtr),
+                     ds.y_train, ds.y_test)
+    e_dtw = knn_error(make_measure("dtw", ds.T).cross(Xte, Xtr),
+                      ds.y_train, ds.y_test)
+    assert e_dtw <= e_ed
+
+
+def test_loo_error_excludes_self():
+    ds = load("Trace", n_train=20, n_test=10)
+    m = make_measure("euclidean", ds.T)
+    tr = jnp.asarray(ds.X_train)
+    err = loo_error(m.cross(tr, tr), ds.y_train)
+    assert 0.0 <= err <= 1.0
+
+
+def test_select_radius_and_theta():
+    ds = load("SyntheticControl", n_train=24, n_test=12, T=40)
+    Xtr = jnp.asarray(ds.X_train)
+    sel_r = select_radius(Xtr, ds.y_train, fracs=(0.0, 0.1, 0.2))
+    assert sel_r.radius >= 0 and sel_r.loo <= 1.0
+    sel_t, curve = select_theta_gamma(Xtr, ds.y_train, name="spdtw",
+                                      thetas=(0, 2, 4), gammas=(0.0, 0.5),
+                                      return_curve=True)
+    assert sel_t.sp is not None
+    assert len(curve) == 6
+    # sparsification really prunes cells as theta grows
+    cells = {t: c for (t, g, e, c) in curve if g == 0.0}
+    assert cells[4] <= cells[2] <= cells[0]
+
+
+def test_svm_separable_sanity():
+    """SVM with an ideal kernel (block structure) must classify perfectly."""
+    n, k = 30, 3
+    y = jnp.asarray(np.arange(n) % k)
+    K = jnp.where(y[:, None] == y[None, :], 1.0, 0.1)
+    al = svm_fit(K, y, k, C=10.0)
+    pred = svm_predict(al, K, y, k)
+    assert (np.asarray(pred) == np.asarray(y)).all()
+
+
+def test_svm_krdtw_on_dataset():
+    ds = load("GunPoint", n_train=24, n_test=30, T=48)
+    Xtr, Xte = jnp.asarray(ds.X_train), jnp.asarray(ds.X_test)
+    m = make_measure("krdtw", ds.T, nu=1.0)
+    lg_tt = m.gram_log(Xtr, Xtr)
+    lg_et = m.gram_log(Xte, Xtr)
+    d_tt = jnp.diag(lg_tt)
+    d_ee = jnp.asarray([float(m.logk_fn(x, x)) for x in Xte])
+    Ktr = normalized_gram(lg_tt, d_tt, d_tt)
+    Kte = normalized_gram(lg_et, d_ee, d_tt)
+    err = svm_error(Ktr, Kte, ds.y_train, ds.y_test, ds.n_classes)
+    assert err < 0.5
+
+
+def test_dedup_pipeline():
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(5, 32)).astype(np.float32)
+    X = np.concatenate([base, base + 1e-4 * rng.normal(size=base.shape)])
+    kept, idx = dedup_by_spdtw(X, threshold=0.05)
+    assert len(kept) == 5  # exact near-dupes removed
+    assert set(idx.tolist()) == set(range(5))

@@ -1,0 +1,246 @@
+"""Core DTW / SP-DTW / K_rdtw correctness vs brute-force numpy oracles."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (band_mask, dtw, dtw_matrix, dtw_sc, wdtw,
+                        optimal_path_mask, learn_sparse_paths,
+                        pairwise_path_counts, spdtw_loc, log_krdtw,
+                        log_krdtw_sc, log_sp_krdtw, corr, euclidean,
+                        znormalize, path_is_feasible, minplus_scan)
+from oracles import dtw_full, dtw_path, krdtw_log
+
+RNG = np.random.default_rng(0)
+
+
+def series(T, d=None, rng=RNG):
+    shape = (T,) if d is None else (T, d)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- plain DTW
+@pytest.mark.parametrize("T,d", [(5, None), (17, None), (32, 3), (48, None)])
+def test_dtw_matches_oracle(T, d):
+    x, y = series(T, d), series(T, d)
+    ref, _ = dtw_full(np.asarray(x), np.asarray(y))
+    np.testing.assert_allclose(float(dtw(x, y)), ref, rtol=1e-5)
+
+
+def test_dtw_different_lengths():
+    x, y = series(20), series(33)
+    ref, _ = dtw_full(np.asarray(x), np.asarray(y))
+    np.testing.assert_allclose(float(dtw(x, y)), ref, rtol=1e-5)
+
+
+def test_dtw_triangle_counterexample():
+    """Paper footnote 2: DTW is not a metric."""
+    xi = jnp.asarray([0.0])
+    xj = jnp.asarray([1.0, 2.0])
+    xk = jnp.asarray([2.0, 3.0, 3.0])
+    dij, djk, dik = float(dtw(xi, xj)), float(dtw(xj, xk)), float(dtw(xi, xk))
+    assert (dij, djk, dik) == (5.0, 3.0, 22.0)  # squared-euclid local cost
+    assert dij + djk < dik
+
+
+def test_minplus_scan_matches_sequential():
+    rng = np.random.default_rng(3)
+    u = jnp.asarray(rng.normal(size=37).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=37).astype(np.float32))
+    got = np.asarray(minplus_scan(u, c))
+    ref = np.empty(37, np.float32)
+    acc = np.inf
+    for j in range(37):
+        acc = min(float(u[j]), acc + float(c[j]))
+        ref[j] = acc
+    np.testing.assert_allclose(got, ref, rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(3, 24), st.integers(0, 10_000))
+def test_property_dtw_identity_and_symmetry(T, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=T).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=T).astype(np.float32))
+    assert float(dtw(x, x)) == pytest.approx(0.0, abs=1e-5)
+    assert float(dtw(x, y)) == pytest.approx(float(dtw(y, x)), rel=1e-5)
+    assert float(dtw(x, y)) >= -1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 20), st.integers(1, 8), st.integers(0, 10_000))
+def test_property_band_widens_monotonically(T, r, seed):
+    """Widening the Sakoe-Chiba corridor can only lower the distance."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=T).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=T).astype(np.float32))
+    d_small = float(dtw_sc(x, y, r))
+    d_large = float(dtw_sc(x, y, r + 3))
+    assert d_large <= d_small + 1e-4
+    assert float(dtw_sc(x, y, T)) == pytest.approx(float(dtw(x, y)), rel=1e-5)
+
+
+# ------------------------------------------------------------- banded DTW
+@pytest.mark.parametrize("T,r", [(16, 2), (30, 5), (21, 0)])
+def test_dtw_sc_matches_masked_oracle(T, r):
+    x, y = series(T), series(T)
+    w = np.asarray(band_mask(T, T, r)).astype(np.float64)
+    ref, _ = dtw_full(np.asarray(x), np.asarray(y), weights=w)
+    np.testing.assert_allclose(float(dtw_sc(x, y, r)), ref, rtol=1e-5)
+
+
+# ----------------------------------------------------------------- paths
+@pytest.mark.parametrize("T", [6, 13, 29])
+def test_backtracked_path_matches_oracle(T):
+    x, y = series(T), series(T)
+    got = np.asarray(optimal_path_mask(x, y))
+    ref = dtw_path(np.asarray(x), np.asarray(y))
+    assert (got == ref).all()
+
+
+def test_path_mask_is_valid_warping_path():
+    x, y = series(31), series(31)
+    m = np.asarray(optimal_path_mask(x, y))
+    assert m[0, 0] and m[-1, -1]
+    # monotone, connected: every row has >= 1 cell and column ranges overlap
+    cols = [np.nonzero(m[i])[0] for i in range(m.shape[0])]
+    assert all(len(c) > 0 for c in cols)
+    for i in range(1, m.shape[0]):
+        assert cols[i].min() >= cols[i - 1].min()
+        assert cols[i].min() <= cols[i - 1].max() + 1
+
+
+# -------------------------------------------------------- occupancy / SP-DTW
+def _toy_dataset(N=8, T=24, seed=1):
+    rng = np.random.default_rng(seed)
+    base = np.sin(np.linspace(0, 2 * np.pi, T))
+    X = base[None] + 0.25 * rng.normal(size=(N, T))
+    return jnp.asarray(X.astype(np.float32))
+
+
+def test_occupancy_counts_match_bruteforce():
+    X = _toy_dataset(N=5, T=12)
+    counts = np.asarray(pairwise_path_counts(X))
+    ref = np.zeros((12, 12))
+    for i in range(5):
+        for j in range(i + 1, 5):
+            m = dtw_path(np.asarray(X[i]), np.asarray(X[j]))
+            ref += m.astype(float) + m.T.astype(float)
+    np.testing.assert_allclose(counts, ref)
+
+
+def test_learn_sparse_paths_and_feasibility():
+    X = _toy_dataset()
+    sp = learn_sparse_paths(X, theta=1.0)
+    assert bool(sp.support[0, 0]) and bool(sp.support[-1, -1])
+    assert bool(path_is_feasible(sp.support))
+    assert 0 < sp.n_cells <= X.shape[1] ** 2
+    # absurd threshold: repair falls back to (at least) the diagonal
+    sp_hi = learn_sparse_paths(X, theta=1e9)
+    assert bool(path_is_feasible(sp_hi.support))
+
+
+def test_spdtw_dense_equals_algorithm1_loc():
+    X = _toy_dataset(N=6, T=16)
+    sp = learn_sparse_paths(X, theta=1.0, gamma=0.5)
+    rows, cols, w = sp.loc_list()
+    x, y = _toy_dataset(N=2, T=16, seed=9)
+    ref = spdtw_loc(np.asarray(x), np.asarray(y), rows, cols, w)
+    got = float(wdtw(x, y, sp.weights))
+    if ref >= 1e29:  # no admissible path: both must agree on "infeasible"
+        assert got >= 1e29
+    else:
+        np.testing.assert_allclose(got, ref, rtol=1e-5)
+
+
+def test_spdtw_gamma0_fullsupport_is_dtw():
+    X = _toy_dataset(N=6, T=14)
+    sp = learn_sparse_paths(X, theta=-1.0, gamma=0.0)  # keep everything
+    assert sp.n_cells == 14 * 14
+    x, y = series(14), series(14)
+    np.testing.assert_allclose(float(wdtw(x, y, sp.weights)),
+                               float(dtw(x, y)), rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_spdtw_upper_bounds_dtw(seed):
+    """Restricting the search space can only increase the optimal cost
+    (gamma = 0 => same weights on a subset of paths)."""
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(6, 15)).astype(np.float32))
+    sp = learn_sparse_paths(X, theta=1.0, gamma=0.0)
+    x = jnp.asarray(rng.normal(size=15).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=15).astype(np.float32))
+    assert float(wdtw(x, y, sp.weights)) >= float(dtw(x, y)) - 1e-4
+
+
+# ----------------------------------------------------------------- krdtw
+@pytest.mark.parametrize("T,nu", [(6, 1.0), (14, 0.5), (23, 2.0)])
+def test_log_krdtw_matches_oracle(T, nu):
+    x, y = series(T), series(T)
+    ref = krdtw_log(np.asarray(x), np.asarray(y), nu)
+    got = float(log_krdtw(x, y, nu))
+    np.testing.assert_allclose(got, ref, rtol=1e-4)
+
+
+def test_log_krdtw_banded_and_sparse_match_oracle():
+    T, nu = 18, 1.0
+    x, y = series(T), series(T)
+    m = np.asarray(band_mask(T, T, 4))
+    ref = krdtw_log(np.asarray(x), np.asarray(y), nu, mask=m)
+    got = float(log_krdtw_sc(x, y, nu, 4))
+    np.testing.assert_allclose(got, ref, rtol=1e-4)
+
+    X = _toy_dataset(N=6, T=T)
+    sp = learn_sparse_paths(X, theta=1.0)
+    ref = krdtw_log(np.asarray(x), np.asarray(y), nu,
+                    mask=np.asarray(sp.support))
+    got = float(log_sp_krdtw(x, y, nu, sp.support))
+    np.testing.assert_allclose(got, ref, rtol=1e-4)
+
+
+def test_log_krdtw_long_series_no_underflow():
+    """float32 linear space underflows ~T>200; log-space must survive."""
+    T = 400
+    x, y = series(T), series(T)
+    v = float(log_krdtw(x, y, nu=1.0))
+    assert np.isfinite(v)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(3, 16), st.integers(0, 10_000))
+def test_property_krdtw_symmetry(T, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=T).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=T).astype(np.float32))
+    a = float(log_krdtw(x, y, 1.0))
+    b = float(log_krdtw(y, x, 1.0))
+    np.testing.assert_allclose(a, b, rtol=1e-4)
+
+
+def test_sp_krdtw_gram_positive_definite():
+    """Paper Section IV: any support subset keeps K_rdtw p.d."""
+    X = _toy_dataset(N=10, T=16)
+    sp = learn_sparse_paths(X, theta=1.0)
+    f = jax.vmap(jax.vmap(
+        lambda a, b: log_sp_krdtw(a, b, 1.0, sp.support),
+        in_axes=(None, 0)), in_axes=(0, None))
+    logG = np.asarray(f(X, X), np.float64)
+    G = np.exp(logG - 0.5 * (np.diag(logG)[:, None] + np.diag(logG)[None, :]))
+    evals = np.linalg.eigvalsh((G + G.T) / 2)
+    assert evals.min() > -1e-6
+
+
+# -------------------------------------------------------------- baselines
+def test_corr_euclid_theorem():
+    """Appendix A: corr = 1 - d_E^2 / (2T) for standardized series."""
+    rng = np.random.default_rng(5)
+    x = znormalize(jnp.asarray(rng.normal(size=64).astype(np.float32)))
+    y = znormalize(jnp.asarray(rng.normal(size=64).astype(np.float32)))
+    # exact standardization (ddof=0), rescale to unit variance:
+    T = 64
+    c = float(corr(x, y))
+    d2 = float(euclidean(x, y)) ** 2
+    np.testing.assert_allclose(c, 1 - d2 / (2 * T), atol=1e-3)
