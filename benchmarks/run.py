@@ -81,7 +81,9 @@ def main():
 
     run_bench("kernel_walltime", bench_kernel_walltime)
 
-    from . import table2_knn, table4_svm, table6_speedup, occupancy_fig
+    from . import (gram_speedup, occupancy_fig, table2_knn, table4_svm,
+                   table6_speedup)
+    run_bench("gram_speedup", lambda: gram_speedup.run(fast=fast))
     run_bench("table6_speedup", lambda: table6_speedup.run(fast=fast))
     run_bench("table2_knn", lambda: table2_knn.run(fast=fast))
     run_bench("table4_svm", lambda: table4_svm.run(fast=fast))
@@ -104,6 +106,12 @@ def main():
         if k.endswith("fraction"):
             continue
         print(f"kernel/{k},{v:.1f},us_per_pair")
+    if "gram_speedup" in results:
+        g = results["gram_speedup"]
+        print(f"gram/dense,{g['dense_us_per_pair']:.1f},us_per_pair")
+        print(f"gram/fused,{g['fused_us_per_pair']:.1f},us_per_pair")
+        print(f"gram/speedup,{g['fused_us_per_pair']:.1f},"
+              f"{g['speedup']:.2f}x")
     if "table6_speedup" in results:
         avg = results["table6_speedup"]["average_speedup"]
         for k, v in avg.items():

@@ -1,4 +1,6 @@
-"""1-NN classification on precomputed (dis)similarity matrices."""
+"""1-NN classification on precomputed (dis)similarity matrices, plus a
+series-level entry point that routes the all-pairs computation through the
+fused block-sparse Gram engine (``repro.core.measures.pairwise``)."""
 from __future__ import annotations
 
 import jax
@@ -19,6 +21,24 @@ def error_rate(pred: jnp.ndarray, truth: jnp.ndarray) -> float:
 def knn_error(cross: jnp.ndarray, y_train, y_test) -> float:
     return error_rate(knn_predict(cross, jnp.asarray(y_train)),
                       jnp.asarray(y_test))
+
+
+def knn_error_series(X_test, X_train, y_train, y_test, *,
+                     kind: str = "spdtw", sp=None, nu: float = 1.0,
+                     impl: str = "auto") -> float:
+    """1-NN error straight from raw series via the fused Gram engine.
+
+    Builds the (N_test, N_train) cross matrix with ``pairwise`` (block-sparse
+    Pallas kernel on TPU, active-tile scan elsewhere — never a repeat/tile
+    pair expansion) and scores it. Kernel kinds are negated into
+    dissimilarities.
+    """
+    from repro.core.measures import pairwise
+    cross = pairwise(jnp.asarray(X_test), jnp.asarray(X_train), kind,
+                     sp=sp, nu=nu, impl=impl)
+    if kind in ("krdtw", "sp_krdtw"):
+        cross = -cross
+    return knn_error(cross, y_train, y_test)
 
 
 def loo_error(train_cross: jnp.ndarray, y_train) -> float:

@@ -1,0 +1,50 @@
+"""jax version compatibility shims.
+
+The launch/train code targets the modern public API (``jax.shard_map``,
+``jax.set_mesh``, ``check_vma``); the pinned container image ships
+jax 0.4.x where those live under ``jax.experimental.shard_map`` /
+``Mesh.__enter__`` and the replication-check kwarg is ``check_rep``.
+Nothing may be pip-installed, so bridge here instead.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+              axis_names=None):
+    """``axis_names`` restricts the manual axes (new API); 0.4.x spells the
+    same thing as ``auto`` = the complement set of mesh axes."""
+    if hasattr(jax, "shard_map"):
+        kw = {} if axis_names is None else {"axis_names": axis_names}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    kw = {}
+    if axis_names is not None:
+        kw = {"auto": frozenset(mesh.axis_names) - frozenset(axis_names)}
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma, **kw)
+
+
+@jax.custom_jvp
+def optimization_barrier(x):
+    """``jax.lax.optimization_barrier`` with an identity differentiation
+    rule — 0.4.x has no grad rule for the primitive (added later); the
+    barrier is a scheduling hint, so the tangent passes straight through."""
+    return jax.lax.optimization_barrier(x)
+
+
+@optimization_barrier.defjvp
+def _optimization_barrier_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return optimization_barrier(x), t
+
+
+def set_mesh(mesh):
+    """Context manager form of ``jax.set_mesh`` (0.4.x: the Mesh itself)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return contextlib.nullcontext(mesh) if mesh is None else mesh

@@ -12,10 +12,10 @@ from .dtw import (INF, band_cells, band_mask, dtw, dtw_matrix, dtw_sc,
                   local_cost, minplus_scan, wdtw)
 from .paths import backtrack, optimal_path_mask, path_is_feasible
 from .occupancy import (BlockSparsePaths, SparsePaths, block_sparsify,
-                        learn_sparse_paths, normalize_grid,
+                        default_tile, learn_sparse_paths, normalize_grid,
                         pairwise_path_counts)
 from .spdtw import spdtw, spdtw_loc, spdtw_pairwise
 from .krdtw import (krdtw, local_kernel, log_krdtw, log_krdtw_sc,
                     log_sp_krdtw, normalized_gram)
 from .baselines import corr, corr_dissimilarity, daco, euclidean, znormalize
-from .measures import ALL_MEASURES, Measure, make_measure
+from .measures import ALL_MEASURES, Measure, make_measure, pairwise

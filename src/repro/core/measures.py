@@ -2,8 +2,13 @@
 
 Every measure exposes ``cross(A, B) -> (Na, Nb)`` dissimilarity matrix
 (for 1-NN) and kernels additionally expose ``gram_log(A, B)`` (for SVM).
-Construction happens once per dataset (meta-parameters baked in), evaluation
-is vmapped + chunked.
+Construction happens once per dataset (meta-parameters baked in).
+
+All-pairs evaluation of the elastic measures routes through ``pairwise`` —
+the unified dispatch over the fused Gram engines in ``repro.kernels``
+(block-sparse Pallas kernel on TPU, active-tile jnp scan elsewhere, chunked
+nested vmap for the dense measures). Nothing on this path materializes the
+``jnp.repeat``/``jnp.tile`` pair expansion.
 """
 from __future__ import annotations
 
@@ -21,7 +26,43 @@ from .dtw import wdtw as _wdtw
 from .krdtw import log_krdtw as _log_krdtw
 from .krdtw import log_krdtw_sc as _log_krdtw_sc
 from .krdtw import log_sp_krdtw as _log_sp_krdtw
-from .occupancy import SparsePaths
+from .occupancy import (BlockSparsePaths, SparsePaths, block_sparsify,
+                        default_tile)
+
+
+def pairwise(A: jnp.ndarray, B: jnp.ndarray, kind: str = "spdtw", *,
+             sp: Optional[SparsePaths] = None,
+             bsp: Optional[BlockSparsePaths] = None,
+             weights: Optional[jnp.ndarray] = None,
+             nu: float = 1.0, radius: Optional[int] = None,
+             impl: str = "auto", block_a: int = 64) -> jnp.ndarray:
+    """Unified all-pairs engine: (Na, T) x (Nb, T) -> (Na, Nb) values.
+
+    kind: "spdtw" / "dtw" return dissimilarities; "krdtw" / "sp_krdtw"
+    return *log kernel* values (callers negate for 1-NN). impl: "auto"
+    picks the fused Pallas Gram kernel on TPU and the jnp engines elsewhere;
+    "pallas" forces the kernel (interpret mode off-TPU, as in tests); "ref"
+    forces the jnp engines; "dense" is the historical dense nested-vmap
+    baseline kept for benchmarking.
+    """
+    from repro.kernels import ops  # deferred: kernels package imports core
+    if kind == "spdtw":
+        return ops.spdtw_gram(A, B, sp=sp, bsp=bsp, weights=weights,
+                              impl=impl, block_a=block_a)
+    if kind == "dtw":
+        return ops.dtw_gram(A, B, impl=impl, block_a=block_a)
+    if kind in ("krdtw", "sp_krdtw"):
+        support = None
+        if kind == "sp_krdtw":
+            if sp is not None:
+                support = sp.support
+            elif weights is not None:
+                support = weights > 0
+            else:
+                raise ValueError("sp_krdtw needs sp or weights")
+        return ops.log_krdtw_gram(A, B, nu, support=support, radius=radius,
+                                  impl=impl, block_a=block_a)
+    raise ValueError(f"pairwise does not support kind {kind!r}")
 
 
 def _chunked_cross(fn: Callable, A: jnp.ndarray, B: jnp.ndarray,
@@ -39,11 +80,17 @@ class Measure:
     pair_fn: Callable          # (x, y) -> scalar dissimilarity
     logk_fn: Optional[Callable] = None  # (x, y) -> log kernel value
     visited_cells: Optional[int] = None  # Table VI accounting
+    cross_fn: Optional[Callable] = None  # (A, B, block) -> (Na, Nb) override
+    gram_fn: Optional[Callable] = None   # (A, B, block) -> (Na, Nb) override
 
     def cross(self, A, B, block: int = 128):
+        if self.cross_fn is not None:
+            return self.cross_fn(A, B, block)
         return _chunked_cross(self.pair_fn, A, B, block)
 
     def gram_log(self, A, B, block: int = 128):
+        if self.gram_fn is not None:
+            return self.gram_fn(A, B, block)
         assert self.logk_fn is not None, f"{self.name} is not a kernel"
         return _chunked_cross(self.logk_fn, A, B, block)
 
@@ -62,21 +109,31 @@ def make_measure(name: str, T: int, *,
         return Measure(name, lambda x, y: baselines.daco(x, y, lags),
                        visited_cells=T * lags)
     if name == "dtw":
-        return Measure(name, _dtw, visited_cells=full)
+        return Measure(name, _dtw, visited_cells=full,
+                       cross_fn=lambda A, B, block: pairwise(
+                           A, B, "dtw", block_a=block))
     if name == "dtw_sc":
         return Measure(name, lambda x, y: _dtw_sc(x, y, radius),
                        visited_cells=_band_cells(T, T, radius))
     if name == "spdtw":
         assert sp is not None
         w = sp.weights
-        return Measure(name, lambda x, y: _wdtw(x, y, w),
-                       visited_cells=sp.n_cells)
+        bsp = block_sparsify(sp, tile=default_tile(T))  # plan built once
+        return Measure(
+            name, lambda x, y: _wdtw(x, y, w),
+            visited_cells=sp.n_cells,
+            cross_fn=lambda A, B, block: pairwise(
+                A, B, "spdtw", sp=sp, bsp=bsp, block_a=block))
     if name == "krdtw":
         return Measure(
             name,
             pair_fn=lambda x, y: -_log_krdtw(x, y, nu),
             logk_fn=lambda x, y: _log_krdtw(x, y, nu),
-            visited_cells=full)
+            visited_cells=full,
+            cross_fn=lambda A, B, block: -pairwise(
+                A, B, "krdtw", nu=nu, block_a=block),
+            gram_fn=lambda A, B, block: pairwise(
+                A, B, "krdtw", nu=nu, block_a=block))
     if name == "krdtw_sc":
         return Measure(
             name,
@@ -90,7 +147,11 @@ def make_measure(name: str, T: int, *,
             name,
             pair_fn=lambda x, y: -_log_sp_krdtw(x, y, nu, supp),
             logk_fn=lambda x, y: _log_sp_krdtw(x, y, nu, supp),
-            visited_cells=sp.n_cells)
+            visited_cells=sp.n_cells,
+            cross_fn=lambda A, B, block: -pairwise(
+                A, B, "sp_krdtw", sp=sp, nu=nu, block_a=block),
+            gram_fn=lambda A, B, block: pairwise(
+                A, B, "sp_krdtw", sp=sp, nu=nu, block_a=block))
     raise ValueError(f"unknown measure {name!r}")
 
 

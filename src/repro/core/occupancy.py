@@ -33,7 +33,12 @@ from .paths import optimal_path_mask, path_is_feasible
 def pairwise_path_counts(X: jnp.ndarray, batch_pairs: int = 256) -> jnp.ndarray:
     """Absolute occupancy counts over all N(N-1)/2 training pairs.
 
-    X: (N, T) or (N, T, d). Returns float32 (T, T) counts, symmetrized.
+    X: (N, T) or (N, T, d). Returns float32 (T, T) counts. Each unordered
+    pair contributes its *symmetrized* path mask ``m | m.T`` once, so every
+    cell count is exactly the number of training pairs whose optimal
+    alignment (in either orientation) visits it — at most N(N-1)/2. (The
+    earlier ``counts + counts.T`` post-hoc symmetrization double-counted
+    cells lying on both a path and its transpose, e.g. the corners.)
     Pairs are processed in vmapped chunks to bound memory.
     """
     N = X.shape[0]
@@ -41,14 +46,13 @@ def pairwise_path_counts(X: jnp.ndarray, batch_pairs: int = 256) -> jnp.ndarray:
     iu, ju = np.triu_indices(N, k=1)
     counts = jnp.zeros((T, T), jnp.float32)
 
-    masked = jax.jit(jax.vmap(lambda a, b: optimal_path_mask(a, b)))
+    masked = jax.jit(jax.vmap(
+        lambda a, b: (lambda m: m | m.T)(optimal_path_mask(a, b))))
     for s in range(0, len(iu), batch_pairs):
         ii = jnp.asarray(iu[s:s + batch_pairs])
         jj = jnp.asarray(ju[s:s + batch_pairs])
         m = masked(X[ii], X[jj])
         counts = counts + jnp.sum(m.astype(jnp.float32), axis=0)
-    # symmetrize: the (j, i) alignment is the transpose of (i, j)
-    counts = counts + counts.T
     return counts
 
 
@@ -124,6 +128,25 @@ def learn_sparse_paths(
 # TPU block-sparse layout
 # ---------------------------------------------------------------------------
 
+def _tile_plan(active: np.ndarray, slot: np.ndarray) -> np.ndarray:
+    """Row-major schedule over active tiles, one int32 row per grid step.
+
+    Columns: (ti, tj, slot, top_active, left_active, diag_active). Row-major
+    order guarantees every producer tile of an edge runs before its consumer
+    (DP wavefront order); the neighbour bits let kernels read skipped-tile
+    edges as +INF instead of stale data.
+    """
+    ii, jj = np.nonzero(active)              # np.nonzero is row-major
+    if len(ii) == 0:
+        return np.zeros((0, 6), np.int32)
+    top = (ii > 0) & active[np.maximum(ii - 1, 0), jj]
+    left = (jj > 0) & active[ii, np.maximum(jj - 1, 0)]
+    diag = ((ii > 0) & (jj > 0)
+            & active[np.maximum(ii - 1, 0), np.maximum(jj - 1, 0)])
+    return np.stack([ii, jj, slot[ii, jj], top, left, diag],
+                    axis=1).astype(np.int32)
+
+
 @dataclasses.dataclass(frozen=True)
 class BlockSparsePaths:
     """Compressed block-sparse view of a SparsePaths grid.
@@ -135,12 +158,16 @@ class BlockSparsePaths:
     blocks:      (n_slots, tile, tile) float32 compressed weights; slot 0 is
                  the all-zero dummy.
     T:           original (padded) grid edge; grids are padded to tile mult.
+    meta:        cached (n_active, 6) int32 host-side tile plan (see
+                 ``_tile_plan``); filled by ``block_sparsify`` and computed
+                 lazily via ``plan()`` for hand-built instances.
     """
     tile: int
     active: np.ndarray
     slot: np.ndarray
     blocks: np.ndarray
     T: int
+    meta: Optional[np.ndarray] = None
 
     @property
     def n_active(self) -> int:
@@ -151,10 +178,33 @@ class BlockSparsePaths:
         """Fraction of blocks *skipped* (the TPU kernel's speed-up lever)."""
         return 1.0 - self.n_active / self.active.size
 
+    def plan(self) -> np.ndarray:
+        """The cached active-tile schedule (computed at most once)."""
+        if self.meta is None:
+            object.__setattr__(self, "meta",
+                               _tile_plan(self.active, self.slot))
+        return self.meta
 
-def block_sparsify(sp: SparsePaths, tile: int = 128) -> BlockSparsePaths:
-    """Re-blockify a learned sparse grid for the TPU kernel (DESIGN section 3)."""
-    w = np.asarray(sp.weights)
+
+def default_tile(T: int) -> int:
+    """Pick a tile edge for series length T: power of two in [8, 128] such
+    that the padded grid is at least ~8 tiles per side (enough granularity
+    for the occupancy prior to actually skip blocks)."""
+    t = 8
+    while t * 8 < T and t < 128:
+        t *= 2
+    return t
+
+
+def block_sparsify(sp, tile: int = 128) -> BlockSparsePaths:
+    """Re-blockify a learned sparse grid for the TPU kernel (DESIGN section 3).
+
+    ``sp`` is a SparsePaths or a raw (T, T) weight array (0 = outside the
+    support). The active-tile schedule consumed by the Pallas kernels is
+    precomputed here (vectorized) and cached on the result.
+    """
+    w = sp.weights if isinstance(sp, SparsePaths) else sp
+    w = np.asarray(w, np.float32)
     T = w.shape[0]
     Tp = ((T + tile - 1) // tile) * tile
     wp = np.zeros((Tp, Tp), np.float32)
@@ -162,15 +212,12 @@ def block_sparsify(sp: SparsePaths, tile: int = 128) -> BlockSparsePaths:
     Ti = Tp // tile
     wt = wp.reshape(Ti, tile, Ti, tile).transpose(0, 2, 1, 3)
     active = (wt > 0).any(axis=(2, 3))
-    n_active = int(active.sum())
+    ii, jj = np.nonzero(active)              # row-major, defines slot order
+    n_active = len(ii)
     blocks = np.zeros((n_active + 1, tile, tile), np.float32)  # slot 0 dummy
+    blocks[1:] = wt[ii, jj]
     slot = np.zeros((Ti, Ti), np.int32)
-    k = 1
-    for i in range(Ti):
-        for j in range(Ti):
-            if active[i, j]:
-                blocks[k] = wt[i, j]
-                slot[i, j] = k
-                k += 1
+    slot[ii, jj] = np.arange(1, n_active + 1)
     return BlockSparsePaths(tile=tile, active=active, slot=slot,
-                            blocks=blocks, T=Tp)
+                            blocks=blocks, T=Tp,
+                            meta=_tile_plan(active, slot))

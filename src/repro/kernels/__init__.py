@@ -3,9 +3,13 @@
 Each kernel has a pure-jnp oracle in ref.py; ops.py is the dispatching
 public API (pallas on TPU, reference path elsewhere, interpret in tests).
 """
-from .ops import (dtw_pairs, dtw_banded_pairs, spdtw_pairs, log_krdtw_pairs)
+from .ops import (dtw_pairs, dtw_banded_pairs, spdtw_pairs, log_krdtw_pairs,
+                  spdtw_gram, dtw_gram, log_krdtw_gram)
 from .dtw_wavefront import wavefront_dtw
 from .dtw_banded import banded_dtw
-from .spdtw_block import spdtw_block
-from .krdtw_wavefront import mask_to_diagonal_major, wavefront_log_krdtw
+from .spdtw_block import spdtw_block, tile_sweep
+from .krdtw_wavefront import (krdtw_sweep, mask_to_diagonal_major,
+                              wavefront_log_krdtw)
+from .gram_block import (gram_log_krdtw_block, gram_spdtw_block,
+                         gram_spdtw_scan)
 from . import ref

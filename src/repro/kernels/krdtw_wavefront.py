@@ -31,15 +31,19 @@ from jax.experimental import pallas as pl
 NEG = -1.0e30  # python float: weak-typed, safe to close over in pallas kernels
 
 
-def _krdtw_kernel(x_ref, yr_ref, dxr_ref, mask_ref, out_ref,
-                  *, T: int, nu: float, radius: int | None,
-                  use_mask: bool):
-    bt = x_ref.shape[0]
-    x = x_ref[...]
-    yr = yr_ref[...]                      # reversed y
+def krdtw_sweep(x, yr, dxr, mask, *, T: int, nu: float,
+                radius: int | None, use_mask: bool):
+    """Anti-diagonal K1+K2 sweep over a batch of pairs; pure jnp on values.
+
+    Shared by the single-pair kernel below and the fused Gram kernel in
+    ``gram_block.py``. x: (bt, T) rows; yr: (bt, T) reversed cols; dxr:
+    (bt, T) reversed diagonal local kernel; mask: (2T-1, T) diagonal-major
+    support (any (_, T) array when ``use_mask`` is False).
+    Returns (bt, 1) log(K1 + K2).
+    """
+    bt = x.shape[0]
     dx = (x - yr[:, ::-1]) ** 2           # |x_i - y_i|^2
     dx = jnp.exp(-nu * dx)                # kappa(x_i, y_i), index i
-    dxr = dxr_ref[...]                    # reversed diagonal kernel (lane j')
     zeros = jnp.zeros((bt, T), jnp.float32)
     yr_pad = jnp.concatenate([zeros, yr, zeros], axis=1)
     dxr_pad = jnp.concatenate([zeros, dxr, zeros], axis=1)
@@ -55,7 +59,7 @@ def _krdtw_kernel(x_ref, yr_ref, dxr_ref, mask_ref, out_ref,
             valid &= jnp.abs(2 * lane - k) <= radius
         if use_mask:
             mrow = jax.lax.dynamic_slice_in_dim(
-                mask_ref[...], k, 1, axis=0)  # (1, T) diagonal-major support
+                mask, k, 1, axis=0)           # (1, T) diagonal-major support
             valid &= mrow > 0
         kap = jnp.where(valid, kap, 0.0)
         dyk = jnp.where(valid, dyk, 0.0)
@@ -95,18 +99,28 @@ def _krdtw_kernel(x_ref, yr_ref, dxr_ref, mask_ref, out_ref,
         1, 2 * T - 1, body, (k1_m1, k1_m2, k2_m1, k2_m2, ls))
     tot = (jax.lax.dynamic_slice_in_dim(k1, T - 1, 1, axis=1)
            + jax.lax.dynamic_slice_in_dim(k2, T - 1, 1, axis=1))
-    out_ref[...] = jnp.where(tot > 0, jnp.log(jnp.maximum(tot, 1e-37)) + ls,
-                             NEG)
+    return jnp.where(tot > 0, jnp.log(jnp.maximum(tot, 1e-37)) + ls, NEG)
+
+
+def _krdtw_kernel(x_ref, yr_ref, dxr_ref, mask_ref, out_ref,
+                  *, T: int, nu: float, radius: int | None,
+                  use_mask: bool):
+    out_ref[...] = krdtw_sweep(x_ref[...], yr_ref[...], dxr_ref[...],
+                               mask_ref[...], T=T, nu=nu, radius=radius,
+                               use_mask=use_mask)
 
 
 def mask_to_diagonal_major(mask: np.ndarray) -> np.ndarray:
-    """(T, T) support -> (2T-1, T) diagonal-major layout (row k, lane i)."""
+    """(T, T) support -> (2T-1, T) diagonal-major layout (row k, lane i).
+
+    out[i + j, i] = mask[i, j]; each (i, j) maps to a unique target cell, so
+    one vectorized fancy-index assignment replaces the O(T^2) Python loop.
+    """
+    mask = np.asarray(mask)
     T = mask.shape[0]
     out = np.zeros((2 * T - 1, T), np.float32)
-    for k in range(2 * T - 1):
-        i0, i1 = max(0, k - T + 1), min(k, T - 1)
-        for i in range(i0, i1 + 1):
-            out[k, i] = float(mask[i, k - i])
+    i, j = np.indices(mask.shape)
+    out[i + j, i] = mask.astype(np.float32)
     return out
 
 

@@ -14,12 +14,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.occupancy import BlockSparsePaths, SparsePaths, block_sparsify
+from repro.core.dtw import (band_mask as _band_mask, dtw as _dtw_pair,
+                            wdtw as _wdtw_pair)
+from repro.core.krdtw import log_krdtw as _log_krdtw_pair
+from repro.core.measures import _chunked_cross as _nested_cross
+from repro.core.occupancy import (BlockSparsePaths, SparsePaths,
+                                  block_sparsify, default_tile)
 from . import ref
 from .dtw_wavefront import wavefront_dtw
 from .dtw_banded import banded_dtw
 from .spdtw_block import spdtw_block
 from .krdtw_wavefront import mask_to_diagonal_major, wavefront_log_krdtw
+from .gram_block import (gram_log_krdtw_block, gram_spdtw_block,
+                         gram_spdtw_scan)
 
 
 def _on_tpu() -> bool:
@@ -83,3 +90,114 @@ def log_krdtw_pairs(x: jnp.ndarray, y: jnp.ndarray, nu: float,
         mask_diag = jnp.asarray(mask_to_diagonal_major(np.asarray(support)))
     return wavefront_log_krdtw(x, y, nu, radius=radius, mask_diag=mask_diag,
                                interpret=not _on_tpu())
+
+
+# ---------------------------------------------------------------------------
+# All-pairs Gram engines (the classification hot path; no repeat/tile)
+# ---------------------------------------------------------------------------
+
+def _is_traced(x) -> bool:
+    return isinstance(x, jax.core.Tracer)
+
+
+@functools.lru_cache(maxsize=16)
+def _cached_bsp(w_bytes: bytes, T: int, tile: int) -> BlockSparsePaths:
+    w = np.frombuffer(w_bytes, np.float32).reshape(T, T)
+    return block_sparsify(w, tile=tile)
+
+
+@functools.lru_cache(maxsize=8)
+def _ones_bsp(T: int) -> BlockSparsePaths:
+    """Fully-dense plan for plain DTW, keyed on T alone (no per-call
+    ones-array allocation or hashing)."""
+    return block_sparsify(np.ones((T, T), np.float32), tile=default_tile(T))
+
+
+def _densify(bsp: BlockSparsePaths) -> np.ndarray:
+    """Reassemble the dense (T, T) weight grid from the compressed blocks."""
+    S = bsp.tile
+    Ti = bsp.slot.shape[0]
+    w = bsp.blocks[bsp.slot]                       # (Ti, Tj, S, S)
+    return w.transpose(0, 2, 1, 3).reshape(Ti * S, Ti * S)
+
+
+def _resolve_bsp(sp=None, bsp=None, weights=None,
+                 tile: Optional[int] = None) -> BlockSparsePaths:
+    """Host-side block plan; cached on the weight bytes so repeated calls
+    with the same grid (e.g. chunked evaluation loops) sparsify once."""
+    if bsp is not None:
+        return bsp
+    w = sp.weights if sp is not None else weights
+    assert w is not None, "need one of sp / bsp / weights"
+    w = np.asarray(w, np.float32)
+    T = w.shape[0]
+    if tile is None:
+        tile = default_tile(T)
+    return _cached_bsp(w.tobytes(), T, tile)
+
+
+def spdtw_gram(A: jnp.ndarray, B: jnp.ndarray, *,
+               sp: Optional[SparsePaths] = None,
+               bsp: Optional[BlockSparsePaths] = None,
+               weights: Optional[jnp.ndarray] = None,
+               impl: str = "auto", tile: Optional[int] = None,
+               block_a: int = 64) -> jnp.ndarray:
+    """(Na, Nb) SP-DTW Gram matrix through the fused block-sparse engine.
+
+    impl: "auto" (pallas on TPU, scan elsewhere), "pallas" (interpret off
+    TPU; what the parity tests sweep), "ref" (jnp scan engine), or "dense"
+    (chunked nested-vmap dense DP — the historical baseline, kept for
+    benchmarking the speed-up). Weights traced under jit/vmap/grad cannot
+    yield a host-side tile plan, so they transparently take the dense path
+    (the pre-engine behaviour, fully traceable).
+    """
+    impl = _resolve(impl)
+    if impl == "dense" or (bsp is None and sp is None and
+                           _is_traced(weights)):
+        w = sp.weights if sp is not None else weights
+        if w is None:   # bsp-only caller: densify so this stays SP-DTW
+            assert bsp is not None, "need one of sp / bsp / weights"
+            w = jnp.asarray(_densify(bsp)[:A.shape[1], :A.shape[1]])
+        return _nested_cross(lambda a, b: _wdtw_pair(a, b, w), A, B, block_a)
+    bsp = _resolve_bsp(sp, bsp, weights, tile)
+    if impl == "ref":
+        return gram_spdtw_scan(A, B, bsp, T_orig=A.shape[1],
+                               block_a=block_a)
+    return gram_spdtw_block(A, B, bsp, T_orig=A.shape[1],
+                            interpret=not _on_tpu())
+
+
+def dtw_gram(A: jnp.ndarray, B: jnp.ndarray, *, impl: str = "auto",
+             block_a: int = 64) -> jnp.ndarray:
+    """(Na, Nb) dense DTW Gram matrix (full support => no tiles to skip).
+
+    The reference path is a chunked nested vmap (never a repeat/tile HBM
+    expansion); the Pallas path reuses the fused engine with an all-ones
+    weight grid so each stripe is still loaded into VMEM only once.
+    """
+    impl = _resolve(impl)
+    if impl in ("ref", "dense"):
+        return _nested_cross(_dtw_pair, A, B, block_a)
+    return gram_spdtw_block(A, B, _ones_bsp(A.shape[1]),
+                            T_orig=A.shape[1], interpret=not _on_tpu())
+
+
+def log_krdtw_gram(A: jnp.ndarray, B: jnp.ndarray, nu: float, *,
+                   support: Optional[jnp.ndarray] = None,
+                   radius: Optional[int] = None, impl: str = "auto",
+                   block_a: int = 64) -> jnp.ndarray:
+    """(Na, Nb) log K_rdtw / SP-K_rdtw Gram matrix via the fused kernel.
+
+    A traced ``support`` (under jit/vmap/grad) cannot be re-laid-out
+    host-side, so it takes the masked nested-vmap path, which is traceable.
+    """
+    impl = _resolve(impl)
+    if impl in ("ref", "dense") or _is_traced(support):
+        sup = None if support is None else jnp.asarray(support)
+        if radius is not None:   # fold the corridor into the support mask
+            band = _band_mask(A.shape[1], B.shape[1], radius)
+            sup = band if sup is None else sup & band
+        return _nested_cross(lambda a, b: _log_krdtw_pair(a, b, nu, sup),
+                             A, B, block_a)
+    return gram_log_krdtw_block(A, B, nu, support=support, radius=radius,
+                                interpret=not _on_tpu())

@@ -20,7 +20,15 @@ the learned occupancy prior) and re-blockify the mechanism (DESIGN.md §3):
     Hillis-Steele min-plus scan over lanes (log2 S steps).
 
 Active tiles are emitted in row-major order, which guarantees the producer
-tiles of every edge ran before their consumer (DP wavefront order).
+tiles of every edge ran before their consumer (DP wavefront order). The
+schedule (ti, tj, slot, neighbour bits) is computed once, vectorized, by
+``occupancy._tile_plan`` and cached on the BlockSparsePaths — both this
+kernel and the fused all-pairs Gram engine (``gram_block.py``) prefetch the
+same plan instead of re-flattening the bitmap per call.
+
+The per-tile DP (``tile_sweep``: row loop + Hillis-Steele min-plus lane
+scan, edge injection from the neighbouring tiles) is pure jnp on values and
+shared verbatim with ``gram_block.py``'s Pallas kernel and jnp scan engine.
 """
 from __future__ import annotations
 
@@ -53,39 +61,22 @@ def _minplus_scan_lanes(u, c, width):
     return m
 
 
-def _spdtw_block_kernel(meta_ref, x_ref, y_ref, w_ref, out_ref,
-                        row_edge, col_edge, corner_next, d_ri,
-                        *, S: int, n_active: int, ri: int, rj: int):
-    """One grid step = one active tile (meta columns: ti,tj,slot,top,left,diag)."""
-    g = pl.program_id(1)
-    bt = x_ref.shape[0]
-    tj = meta_ref[g, 1]
-    top_ok = meta_ref[g, 3] > 0
-    left_ok = meta_ref[g, 4] > 0
-    diag_ok = meta_ref[g, 5] > 0
+def tile_sweep(x, y, w, top_vec, left_vec, c_first, *, S: int, ri: int):
+    """Sweep one S x S tile of the SP-DTW DP for a batch of pairs.
 
-    x = x_ref[...]                  # (bt, S) rows of this tile
-    y = y_ref[...]                  # (bt, S) cols of this tile
-    w = w_ref[0]                    # (S, S) weight block
+    Pure jnp on values (no refs), so it is shared verbatim by the single-pair
+    Pallas kernel here, the fused Gram kernel in ``gram_block.py`` and the
+    jnp scan engine (same math => parity by construction).
 
-    # --- gather incoming edges (guarded against inactive neighbours) ---
-    inf_row = jnp.full((bt, S), INF, jnp.float32)
-    top_raw = pl.load(row_edge, (slice(None), pl.dslice(tj * S, S)))
-    top_vec = jnp.where(top_ok, top_raw, inf_row)
-    left_vec = jnp.where(left_ok, col_edge[...], inf_row)
-    c_first = jnp.where(
-        g == 0, jnp.zeros((bt, 1), jnp.float32),
-        jnp.where(diag_ok,
-                  jnp.where(left_ok, corner_next[...],
-                            # guarded: only read when diag_ok (=> tj > 0);
-                            # clamp keeps the untaken branch in-bounds
-                            pl.load(row_edge,
-                                    (slice(None),
-                                     pl.dslice(jnp.maximum(tj * S - 1, 0), 1)))),
-                  jnp.full((bt, 1), INF, jnp.float32)))
-
-    # corner for the *next* tile (i, j+1) = last element of this tile's top row
-    new_corner = top_vec[:, S - 1:S]
+    x, y:      (bt, S) per-pair series tiles (rows of x, cols of y).
+    w:         (S, S) weight block (0 = masked cell).
+    top_vec:   (bt, S) bottom edge of the tile above (+INF if inactive).
+    left_vec:  (bt, S) right edge of the tile to the left (+INF if inactive).
+    c_first:   (bt, 1) D value diagonally above-left of this tile's corner.
+    Returns (d_last, rightcol, dri): the tile's bottom row, right column,
+    and the row at in-tile index ``ri`` (global result-row capture).
+    """
+    bt = x.shape[0]
 
     def cost_row(t):
         xt = jax.lax.dynamic_slice_in_dim(x, t, 1, axis=1)      # (bt,1)
@@ -117,8 +108,45 @@ def _spdtw_block_kernel(meta_ref, x_ref, y_ref, w_ref, out_ref,
     rightcol0 = jnp.full((bt, S), INF, jnp.float32)
     rightcol0 = jax.lax.dynamic_update_slice(rightcol0, d0[:, S - 1:S], (0, 0))
     dri0 = jnp.where(ri == 0, d0, jnp.full((bt, S), INF, jnp.float32))
-    d_last, rightcol, dri = jax.lax.fori_loop(
-        1, S, body, (d0, rightcol0, dri0))
+    return jax.lax.fori_loop(1, S, body, (d0, rightcol0, dri0))
+
+
+def _spdtw_block_kernel(meta_ref, x_ref, y_ref, w_ref, out_ref,
+                        row_edge, col_edge, corner_next, d_ri,
+                        *, S: int, g_out: int, ri: int, rj: int):
+    """One grid step = one active tile (meta columns: ti,tj,slot,top,left,diag)."""
+    g = pl.program_id(1)
+    bt = x_ref.shape[0]
+    tj = meta_ref[g, 1]
+    top_ok = meta_ref[g, 3] > 0
+    left_ok = meta_ref[g, 4] > 0
+    diag_ok = meta_ref[g, 5] > 0
+
+    x = x_ref[...]                  # (bt, S) rows of this tile
+    y = y_ref[...]                  # (bt, S) cols of this tile
+    w = w_ref[0]                    # (S, S) weight block
+
+    # --- gather incoming edges (guarded against inactive neighbours) ---
+    inf_row = jnp.full((bt, S), INF, jnp.float32)
+    top_raw = pl.load(row_edge, (slice(None), pl.dslice(tj * S, S)))
+    top_vec = jnp.where(top_ok, top_raw, inf_row)
+    left_vec = jnp.where(left_ok, col_edge[...], inf_row)
+    c_first = jnp.where(
+        g == 0, jnp.zeros((bt, 1), jnp.float32),
+        jnp.where(diag_ok,
+                  jnp.where(left_ok, corner_next[...],
+                            # guarded: only read when diag_ok (=> tj > 0);
+                            # clamp keeps the untaken branch in-bounds
+                            pl.load(row_edge,
+                                    (slice(None),
+                                     pl.dslice(jnp.maximum(tj * S - 1, 0), 1)))),
+                  jnp.full((bt, 1), INF, jnp.float32)))
+
+    # corner for the *next* tile (i, j+1) = last element of this tile's top row
+    new_corner = top_vec[:, S - 1:S]
+
+    d_last, rightcol, dri = tile_sweep(x, y, w, top_vec, left_vec, c_first,
+                                       S=S, ri=ri)
 
     # --- publish edges for downstream tiles ---
     corner_next[...] = new_corner
@@ -126,38 +154,40 @@ def _spdtw_block_kernel(meta_ref, x_ref, y_ref, w_ref, out_ref,
     col_edge[...] = rightcol
     d_ri[...] = dri
 
-    @pl.when(g == n_active - 1)
+    # capture at the tile holding the global result cell (NOT the last
+    # active tile: the support may have active tiles past the corner, or —
+    # for raw user weights — none at the corner at all)
+    @pl.when(g == g_out)
     def _():
         out_ref[...] = jax.lax.dynamic_slice_in_dim(dri, rj, 1, axis=1)
 
 
 def _host_plan(bsp: BlockSparsePaths) -> Tuple[np.ndarray, int]:
-    """Flatten the active-tile bitmap into row-major (g -> meta row) arrays."""
-    act = bsp.active
-    nti, ntj = act.shape
-    rows = []
-    for i in range(nti):
-        for j in range(ntj):
-            if act[i, j]:
-                rows.append([
-                    i, j, int(bsp.slot[i, j]),
-                    1 if (i > 0 and act[i - 1, j]) else 0,
-                    1 if (j > 0 and act[i, j - 1]) else 0,
-                    1 if (i > 0 and j > 0 and act[i - 1, j - 1]) else 0,
-                ])
-    return np.asarray(rows, np.int32), len(rows)
+    """Active-tile schedule (cached on the BlockSparsePaths; see
+    ``occupancy._tile_plan`` for the layout)."""
+    meta = bsp.plan()
+    return meta, meta.shape[0]
+
+
+def result_tile_step(meta: np.ndarray, S: int, T_orig: int) -> int:
+    """Grid-step index of the tile holding the result cell (T_orig-1,
+    T_orig-1), or -1 if that tile is inactive (=> SP-DTW is +INF: the
+    corner cell itself is outside the support, so no path ends there)."""
+    ci = (T_orig - 1) // S
+    hit = np.nonzero((meta[:, 0] == ci) & (meta[:, 1] == ci))[0]
+    return int(hit[0]) if len(hit) else -1
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("S", "n_active", "T_orig",
+                   static_argnames=("S", "n_active", "T_orig", "g_out",
                                     "block_b", "interpret"))
-def _spdtw_block_call(meta, x, y, blocks, *, S, n_active, T_orig,
+def _spdtw_block_call(meta, x, y, blocks, *, S, n_active, T_orig, g_out,
                       block_b, interpret):
     Bp, Tp = x.shape
     last = T_orig - 1
     ri, rj = last % S, last % S
     grid = (Bp // block_b, n_active)
-    kernel = functools.partial(_spdtw_block_kernel, S=S, n_active=n_active,
+    kernel = functools.partial(_spdtw_block_kernel, S=S, g_out=g_out,
                                ri=ri, rj=rj)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -194,12 +224,15 @@ def spdtw_block(x: jnp.ndarray, y: jnp.ndarray, bsp: BlockSparsePaths,
     T_orig = T if T_orig is None else T_orig
     assert T_orig <= bsp.T
     meta, n_active = _host_plan(bsp)
+    g_out = result_tile_step(meta, bsp.tile, T_orig)
+    if g_out < 0:   # corner cell outside the support: no admissible path
+        return jnp.full((B,), INF, jnp.float32)
     Tp = bsp.T
     Bp = ((B + block_b - 1) // block_b) * block_b
     x = jnp.pad(x.astype(jnp.float32), ((0, Bp - B), (0, Tp - T)))
     y = jnp.pad(y.astype(jnp.float32), ((0, Bp - B), (0, Tp - T)))
     out = _spdtw_block_call(
         jnp.asarray(meta), x, y, jnp.asarray(bsp.blocks),
-        S=bsp.tile, n_active=n_active, T_orig=T_orig,
+        S=bsp.tile, n_active=n_active, T_orig=T_orig, g_out=g_out,
         block_b=block_b, interpret=interpret)
     return out[:B, 0]

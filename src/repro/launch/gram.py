@@ -3,10 +3,15 @@ workload: 1-NN and SVM need all-pairs (dis)similarity over big series sets).
 
 shard_map over the flattened ("pod","data","model") device grid: the N x M
 pair-block matrix is tiled row-wise across every chip; each chip runs the
-batched wavefront DP (Pallas kernel on TPU, jnp reference elsewhere) over
-its row stripe against the full (replicated) second set. One all_gather
-reassembles the Gram matrix. Work is embarrassingly parallel, so the
-roofline is pure compute — the collective term is the final gather only.
+**fused block-sparse Gram engine** (``repro.kernels.gram_block``) over its
+row stripe against the full (replicated) second set — the Pallas
+(A-tile, B-tile, active-tile) kernel on TPU, the active-tile jnp scan
+elsewhere. The historical ``jnp.repeat``/``jnp.tile`` pair expansion is
+gone: per-chip work is rows * M * n_active_tiles * S^2 and HBM holds only
+the two series sets. The sparsification meta (active bitmap, tile schedule,
+compressed weight blocks) is resolved host-side once per job and closed
+over as constants. One all_gather reassembles the Gram matrix; work is
+embarrassingly parallel, so the roofline is pure compute.
 
 ``--dryrun`` lowers + compiles the job on the 512-chip production mesh
 (ShapeDtypeStructs only), proving the paper plane shards, same as the LM
@@ -14,45 +19,44 @@ cells (EXPERIMENTS.md §Dry-run).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.dtw import band_mask
-from repro.kernels import ref
+from repro.core.occupancy import block_sparsify, default_tile
+from repro import compat
 
 
-def _pair_block(xs, ys, weights, nu, kind):
-    """xs: (nb, T), ys: (M, T) -> (nb, M) measure values."""
-    nb, T = xs.shape
-    M = ys.shape[0]
-    xx = jnp.repeat(xs, M, axis=0)
-    yy = jnp.tile(ys, (nb, 1))
-    if kind == "spdtw":
-        vals = ref.wdtw_batch(xx, yy, weights)
-    elif kind == "dtw":
-        vals = ref.dtw_batch(xx, yy)
-    else:  # sp_krdtw
-        vals = ref.log_krdtw_masked_batch(xx, yy, nu, weights > 0)
-    return vals.reshape(nb, M)
+def gram_job(mesh, weights, kind: str = "spdtw", nu: float = 1.0,
+             tile: int | None = None, impl: str = "auto"):
+    """Build the jitted distributed Gram computation for the given mesh.
 
-
-def gram_job(mesh, X: jnp.ndarray, Y: jnp.ndarray, weights: jnp.ndarray,
-             kind: str = "spdtw", nu: float = 1.0):
-    """Build the jitted distributed Gram computation for the given mesh."""
+    ``weights`` is a concrete host-side (T, T) array (the learned SP grid or
+    a corridor mask): the block-sparse plan must exist before tracing, so it
+    is derived here — not passed through the mesh as a traced operand.
+    """
     axes = tuple(mesh.axis_names)
+    w = np.asarray(weights, np.float32)
+    T = w.shape[0]
+    bsp = None
+    if kind == "spdtw":
+        bsp = block_sparsify(w, tile=tile or default_tile(T))
 
-    def local(xs, ys, w):
-        vals = _pair_block(xs, ys, w, nu, kind)
-        return vals
+    def local(xs, ys):
+        from repro.core.measures import pairwise
+        if kind == "dtw":        # plain DTW ignores the weight grid
+            return pairwise(xs, ys, "dtw", impl=impl, block_a=xs.shape[0])
+        if kind == "spdtw":
+            return pairwise(xs, ys, "spdtw", bsp=bsp, weights=w, impl=impl,
+                            block_a=xs.shape[0])
+        return pairwise(xs, ys, "sp_krdtw", weights=w, nu=nu, impl=impl,
+                        block_a=xs.shape[0])
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local, mesh=mesh,
-        in_specs=(P(axes, None), P(None, None), P(None, None)),
+        in_specs=(P(axes, None), P(None, None)),
         out_specs=P(axes, None),
         check_vma=False)
     return jax.jit(fn)
@@ -65,21 +69,19 @@ def run(n: int = 64, t: int = 64, kind: str = "spdtw",
         mesh = make_host_mesh(jax.device_count(), 1)
     n_dev = mesh.size
     n = ((n + n_dev - 1) // n_dev) * n_dev   # pad rows to device count
-    w = jnp.asarray(np.asarray(band_mask(t, t, max(t // 8, 1)),
-                               np.float32))
-    with jax.set_mesh(mesh):
-        job = gram_job(mesh, None, None, w, kind=kind)
+    w = np.asarray(band_mask(t, t, max(t // 8, 1)), np.float32)
+    with compat.set_mesh(mesh):
+        job = gram_job(mesh, w, kind=kind)
         if dryrun:
             xs = jax.ShapeDtypeStruct((n, t), jnp.float32)
             ys = jax.ShapeDtypeStruct((n, t), jnp.float32)
-            ws = jax.ShapeDtypeStruct((t, t), jnp.float32)
             sh = (NamedSharding(mesh, P(tuple(mesh.axis_names), None)),
-                  NamedSharding(mesh, P(None, None)),
                   NamedSharding(mesh, P(None, None)))
-            lowered = jax.jit(job.__wrapped__, in_shardings=sh).lower(
-                xs, ys, ws)
+            lowered = jax.jit(job.__wrapped__, in_shardings=sh).lower(xs, ys)
             compiled = lowered.compile()
             ca = compiled.cost_analysis() or {}
+            if isinstance(ca, list):     # jax 0.4.x: one dict per module
+                ca = ca[0] if ca else {}
             ma = compiled.memory_analysis()
             return {"flops_per_device": float(ca.get("flops", 0.0)),
                     "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
@@ -87,13 +89,12 @@ def run(n: int = 64, t: int = 64, kind: str = "spdtw",
                     "devices": n_dev, "pairs": n * n}
         rng = np.random.default_rng(0)
         X = jnp.asarray(rng.normal(size=(n, t)).astype(np.float32))
-        G = job(X, X, w)
+        G = job(X, X)
         return np.asarray(G)
 
 
 if __name__ == "__main__":
     import argparse
-    import os
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")

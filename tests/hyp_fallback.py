@@ -1,0 +1,82 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The container image does not ship hypothesis and nothing may be pip-installed,
+so the property tests fall back to a deterministic sampler: each strategy draws
+from a seeded PRNG and ``given`` replays the test body for a fixed number of
+examples. Shrinking, example databases and the rest of hypothesis are out of
+scope — this only keeps the property tests executable and reproducible.
+
+Usage (in test modules)::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from hyp_fallback import given, settings, st
+"""
+from __future__ import annotations
+
+import random
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, sample_fn):
+        self._sample = sample_fn
+
+    def sample(self, rng: random.Random):
+        return self._sample(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda rng: rng.choice(seq))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+st = _Strategies()
+
+
+def given(*strategies):
+    """Replay the test for N deterministic examples drawn from the strategies."""
+
+    def decorate(fn):
+        def wrapper(*args, **kwargs):
+            # ``args`` carries only pytest-bound params (e.g. ``self``);
+            # strategy values are appended, mirroring hypothesis' call order.
+            n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+            rng = random.Random(0xC0FFEE)
+            for _ in range(n):
+                drawn = tuple(s.sample(rng) for s in strategies)
+                fn(*args, *drawn, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_kw):
+    """Record max_examples on the (already-wrapped) test; other knobs ignored."""
+
+    def decorate(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return decorate

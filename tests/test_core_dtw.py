@@ -3,7 +3,10 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # offline image: deterministic fallback sampler
+    from hyp_fallback import given, settings, st
 
 from repro.core import (band_mask, dtw, dtw_matrix, dtw_sc, wdtw,
                         optimal_path_mask, learn_sparse_paths,
@@ -120,14 +123,23 @@ def _toy_dataset(N=8, T=24, seed=1):
 
 
 def test_occupancy_counts_match_bruteforce():
-    X = _toy_dataset(N=5, T=12)
+    """Each unordered pair contributes its symmetrized path (m | m.T) ONCE:
+    no double count where a path overlaps its own transpose (corners,
+    diagonal cells)."""
+    N, T = 5, 12
+    X = _toy_dataset(N=N, T=T)
     counts = np.asarray(pairwise_path_counts(X))
-    ref = np.zeros((12, 12))
-    for i in range(5):
-        for j in range(i + 1, 5):
+    ref = np.zeros((T, T))
+    for i in range(N):
+        for j in range(i + 1, N):
             m = dtw_path(np.asarray(X[i]), np.asarray(X[j]))
-            ref += m.astype(float) + m.T.astype(float)
+            ref += (m | m.T).astype(float)
     np.testing.assert_allclose(counts, ref)
+    n_pairs = N * (N - 1) // 2
+    # exactness: a cell is counted at most once per pair, and the corners
+    # (on every alignment path) exactly n_pairs times
+    assert counts.max() <= n_pairs
+    assert counts[0, 0] == n_pairs and counts[-1, -1] == n_pairs
 
 
 def test_learn_sparse_paths_and_feasibility():

@@ -3,7 +3,10 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # offline image: deterministic fallback sampler
+    from hyp_fallback import given, settings, st
 
 from repro.core import learn_sparse_paths, block_sparsify
 from repro.kernels import (banded_dtw, spdtw_block, wavefront_dtw,

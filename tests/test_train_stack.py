@@ -90,8 +90,8 @@ def test_checkpoint_elastic_restore_across_mesh(tmp_path):
     d = str(tmp_path)
     w = jnp.arange(16, dtype=jnp.float32).reshape(4, 4)
     save_checkpoint(d, 5, {"w": w})
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     sh = jax.sharding.NamedSharding(mesh, P(None, None))
     out = restore_checkpoint(d, 5, {"w": jax.ShapeDtypeStruct((4, 4),
                                                               jnp.float32)},
@@ -130,8 +130,8 @@ def test_train_loss_decreases_end_to_end(tmp_path):
 
 def test_int8_psum_compression_accuracy():
     devs = jax.device_count()
-    mesh = jax.make_mesh((devs,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((devs,), ("pod",))
     rng = np.random.default_rng(0)
     g = jnp.asarray(rng.normal(size=(devs, 64)).astype(np.float32))
 
@@ -139,9 +139,10 @@ def test_int8_psum_compression_accuracy():
         out = _int8_psum({"g": x}, "pod")
         return out["g"]
 
-    res = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("pod"),
-                                out_specs=P("pod"),
-                                check_vma=False))(g)
+    from repro import compat
+    res = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=P("pod"),
+                                   out_specs=P("pod"),
+                                   check_vma=False))(g)
     want = np.sum(np.asarray(g), axis=0)
     got = np.asarray(res)[0]
     # int8 quantization: relative error bounded by ~1/127 per term
