@@ -26,6 +26,18 @@ def timed(fn, *args):
     return out, (time.time() - t0)
 
 
+def bench_timer(fn, reps: int = 3) -> float:
+    """Average wall-clock of ``fn()`` over ``reps`` after one warm-up call
+    (compile + caches). Blocks on the result; tuples block on each leaf."""
+    out = fn()
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn()
+        for leaf in out if isinstance(out, tuple) else (out,):
+            jax.block_until_ready(leaf)
+    return (time.time() - t0) / reps
+
+
 class DatasetBench:
     """Per-dataset context: tuned meta-params + occupancy counts, cached."""
 

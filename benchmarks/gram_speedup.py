@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
 import jax.numpy as jnp
@@ -29,21 +28,16 @@ import numpy as np
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 
-def _timed(fn, reps: int = 3):
-    fn()                                # compile / warm caches
-    t0 = time.time()
-    for _ in range(reps):
-        jax.block_until_ready(fn())
-    return (time.time() - t0) / reps
-
-
 def run(fast: bool = True, T: int = 128, tile: int = 16,
-        theta: float = 2.0, reps: int = 3):
+        theta: float = 2.0, reps: int = 3, smoke: bool = False):
     from repro.core import (block_sparsify, learn_sparse_paths, pairwise,
                             spdtw_loc)
     from repro.kernels import ref
 
-    Na, Nb = (48, 64) if fast else (128, 256)
+    if smoke:   # tiny CI shapes; BENCH_gram.json is left untouched
+        Na, Nb, T, tile = 8, 12, 32, 8
+    else:
+        Na, Nb = (48, 64) if fast else (128, 256)
     rng = np.random.default_rng(0)
     base = np.sin(np.linspace(0, 3 * np.pi, T))
     Xtr = jnp.asarray((base[None] + 0.3 * rng.normal(size=(16, T))
@@ -68,8 +62,9 @@ def run(fast: bool = True, T: int = 128, tile: int = 16,
     def fused_gram(A, B):
         return pairwise(A, B, "spdtw", bsp=bsp, weights=w, block_a=Na)
 
-    dense_s = _timed(lambda: dense_gram(A, B), reps)
-    fused_s = _timed(lambda: fused_gram(A, B), reps)
+    from .common import bench_timer
+    dense_s = bench_timer(lambda: dense_gram(A, B), reps)
+    fused_s = bench_timer(lambda: fused_gram(A, B), reps)
 
     # --- equal outputs: parity vs the dense oracle + Algorithm 1 ---
     want = np.asarray(dense_gram(A, B))
@@ -100,8 +95,9 @@ def run(fast: bool = True, T: int = 128, tile: int = 16,
         "parity_rel_err": parity,
         "alg1_rel_err": loc_err,
     }
-    with open(os.path.join(ROOT, "BENCH_gram.json"), "w") as f:
-        json.dump(out, f, indent=1)
+    if not smoke:
+        with open(os.path.join(ROOT, "BENCH_gram.json"), "w") as f:
+            json.dump(out, f, indent=1)
     print(f"[gram_speedup] dense {dense_s*1e3:.1f} ms vs fused "
           f"{fused_s*1e3:.1f} ms -> speedup {out['speedup']:.2f}x "
           f"(tiles skipped {100*bsp.tile_sparsity:.0f}%, parity "

@@ -1,11 +1,15 @@
 """Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
 
 One function per paper table/figure + the kernel wall-clock micro-bench +
-the roofline table (from dry-run artifacts, if present). Prints a final
-``name,us_per_call,derived`` CSV summary per the harness contract.
+the search-cascade bench + the roofline table (from dry-run artifacts, if
+present). Prints a final ``name,us_per_call,derived`` CSV summary per the
+harness contract.
 
 Full-protocol runs: ``python -m benchmarks.run --full`` (slower, bigger
-test splits). Artifacts land in artifacts/bench/*.json.
+test splits). ``--smoke`` runs tiny shapes in seconds — a CI-grade sanity
+sweep of the kernel walltime, fused-Gram and cascade benches (the paper
+tables are skipped; smoke runs never overwrite the committed BENCH_*.json
+artifacts). Artifacts land in artifacts/bench/*.json.
 """
 from __future__ import annotations
 
@@ -19,7 +23,7 @@ import numpy as np
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
 
-def bench_kernel_walltime():
+def bench_kernel_walltime(B: int = 64, T: int = 128):
     """Wall-clock of the batched DP paths on CPU (jnp reference backend):
     full vs corridor vs learned-sparse, same pair batch."""
     import jax
@@ -28,7 +32,6 @@ def bench_kernel_walltime():
     from repro.kernels import ref
 
     rng = np.random.default_rng(0)
-    B, T = 64, 128
     x = jnp.asarray(rng.normal(size=(B, T)).astype(np.float32))
     y = jnp.asarray(rng.normal(size=(B, T)).astype(np.float32))
     base = np.sin(np.linspace(0, 3 * np.pi, T))
@@ -55,14 +58,17 @@ def bench_kernel_walltime():
     return out
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="full-size dataset splits (slow)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, seconds not minutes (CI sanity)")
     ap.add_argument("--skip", default="",
                     help="comma-separated benches to skip")
-    args, _ = ap.parse_known_args()
+    args, _ = ap.parse_known_args(argv)
     fast = not args.full
+    smoke = args.smoke
     skip = set(args.skip.split(",")) if args.skip else set()
     os.makedirs(ART, exist_ok=True)
 
@@ -79,25 +85,38 @@ def main():
         with open(os.path.join(ART, f"{name}.json"), "w") as f:
             json.dump(results[name], f, indent=1, default=str)
 
-    run_bench("kernel_walltime", bench_kernel_walltime)
+    from . import search_cascade
+    if smoke:
+        # tiny shapes end to end: kernels, fused Gram, cascade; the paper
+        # tables (minutes of meta-parameter search) are skipped
+        from . import gram_speedup
+        run_bench("kernel_walltime", lambda: bench_kernel_walltime(B=8, T=32))
+        run_bench("gram_speedup",
+                  lambda: gram_speedup.run(fast=True, smoke=True))
+        run_bench("search_cascade",
+                  lambda: search_cascade.run(fast=True, smoke=True))
+    else:
+        run_bench("kernel_walltime", bench_kernel_walltime)
 
-    from . import (gram_speedup, occupancy_fig, table2_knn, table4_svm,
-                   table6_speedup)
-    run_bench("gram_speedup", lambda: gram_speedup.run(fast=fast))
-    run_bench("table6_speedup", lambda: table6_speedup.run(fast=fast))
-    run_bench("table2_knn", lambda: table2_knn.run(fast=fast))
-    run_bench("table4_svm", lambda: table4_svm.run(fast=fast))
-    run_bench("occupancy_fig", lambda: occupancy_fig.run(fast=fast))
+        from . import (gram_speedup, occupancy_fig, table2_knn, table4_svm,
+                       table6_speedup)
+        run_bench("gram_speedup", lambda: gram_speedup.run(fast=fast))
+        run_bench("search_cascade", lambda: search_cascade.run(fast=fast))
+        run_bench("table6_speedup", lambda: table6_speedup.run(fast=fast))
+        run_bench("table2_knn", lambda: table2_knn.run(fast=fast))
+        run_bench("table4_svm", lambda: table4_svm.run(fast=fast))
+        run_bench("occupancy_fig", lambda: occupancy_fig.run(fast=fast))
 
-    def roofline_bench():
-        from . import roofline
-        cells = roofline.load_artifacts()
-        if not cells:
-            return {"note": "no dry-run artifacts; run repro.launch.dryrun"}
-        print(roofline.table(cells))
-        return roofline.summary(cells)
+        def roofline_bench():
+            from . import roofline
+            cells = roofline.load_artifacts()
+            if not cells:
+                return {"note":
+                        "no dry-run artifacts; run repro.launch.dryrun"}
+            print(roofline.table(cells))
+            return roofline.summary(cells)
 
-    run_bench("roofline", roofline_bench)
+        run_bench("roofline", roofline_bench)
 
     # ---- harness contract: name,us_per_call,derived ----
     print("\nname,us_per_call,derived")
@@ -112,6 +131,13 @@ def main():
         print(f"gram/fused,{g['fused_us_per_pair']:.1f},us_per_pair")
         print(f"gram/speedup,{g['fused_us_per_pair']:.1f},"
               f"{g['speedup']:.2f}x")
+    if "search_cascade" in results:
+        for wl, r in results["search_cascade"]["workloads"].items():
+            print(f"search/{wl}/cascade,{r['cascade_us_per_query']:.1f},"
+                  f"us_per_query")
+            print(f"search/{wl}/pre_dp_prune,"
+                  f"{r['cascade_us_per_query']:.1f},"
+                  f"{100*r['pre_dp_prune']:.0f}%")
     if "table6_speedup" in results:
         avg = results["table6_speedup"]["average_speedup"]
         for k, v in avg.items():

@@ -1,0 +1,115 @@
+"""Lower-bound cascade benchmark: 1-NN search with vs without pruning.
+
+The serving claim of the stack (DESIGN.md §4): exact 1-NN should not pay
+the masked DP for candidates that admissible bounds can discard. This
+benchmark runs both workloads of ``repro.launch.search`` on seeded
+synthetic-UCR data —
+
+  * retrieval: queries are warped/renoised corpus entries (the similarity
+    search case: a close neighbour exists),
+  * classify:  queries are the held-out test split (1-NN classification),
+
+— through (a) the full fused Gram engine + argmin and (b) the cascade
+(``kernels.ops.knn_cascade``: LB_Kim -> windowed LB_Keogh -> prefix-DP
+bound -> survivor DP with early abandoning), asserting bit-identical
+neighbours and recording per-stage prune rates and wall-clock.
+
+Full/fast mode runs T=128 with the paper's learned support and asserts
+the headline: >= 50% of candidate pairs pruned before the DP stage on the
+retrieval workload. Results land in ``BENCH_search.json`` at the repo
+root (skipped in --smoke runs so tiny-shape numbers never clobber the
+committed artifact) and in ``artifacts/bench`` via ``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run(fast: bool = True, smoke: bool = False, dataset: str = "CBF",
+        theta: float = 8.0, reps: int = 3):
+    from repro.core import learn_sparse_paths, make_measure
+    from repro.data import load
+    from repro.kernels import knn_cascade
+    from repro.launch.search import _make_workload
+    from .common import bench_timer
+
+    if smoke:
+        n_train, n_queries, T, n_sp = 24, 8, 32, 12
+    elif fast:
+        n_train, n_queries, T, n_sp = 128, 64, 128, 32
+    else:
+        n_train, n_queries, T, n_sp = 256, 128, 128, 32
+    ds = load(dataset, n_train=n_train, n_test=max(n_queries, 16), T=T)
+    Xtr = jnp.asarray(ds.X_train)
+    sp = learn_sparse_paths(Xtr[:n_sp], theta=theta)
+    m = make_measure("spdtw", T, sp=sp)
+    index = m.build_index(Xtr)
+
+    out = {
+        "backend": jax.default_backend(),
+        "shape": {"corpus": n_train, "queries": n_queries, "T": T,
+                  "theta": theta, "tile": index.bsp.tile},
+        "sparsity": {"cells_fraction": sp.n_cells / (T * T),
+                     "active_tiles": index.bsp.n_active,
+                     "tile_sparsity": index.bsp.tile_sparsity},
+        "workloads": {},
+    }
+    for workload in ("retrieval", "classify"):
+        Q = jnp.asarray(_make_workload(ds, workload, n_queries, seed=7))
+
+        def full_gram():
+            G = m.cross(Q, Xtr, block=64)
+            return jnp.argmin(G, axis=1), G
+
+        def cascade():
+            return knn_cascade(Q, index)
+
+        t_full = bench_timer(full_gram, reps)
+        t_casc = bench_timer(cascade, reps)
+
+        nn_full, _ = full_gram()
+        nn_casc, _, st = knn_cascade(Q, index, return_stats=True)
+        exact = bool(np.array_equal(np.asarray(nn_full),
+                                    np.asarray(nn_casc)))
+        assert exact, f"cascade diverged from full Gram on {workload}"
+        stats = {k: float(v) for k, v in st.items()}
+        out["workloads"][workload] = {
+            "full_s": t_full, "cascade_s": t_casc,
+            "speedup": t_full / t_casc, "exact": exact,
+            "full_us_per_query": t_full / n_queries * 1e6,
+            "cascade_us_per_query": t_casc / n_queries * 1e6,
+            **{k: stats[k] for k in
+               ("stage1_prune", "stage2_prune", "stage3_prune",
+                "pre_dp_prune", "dp_abandoned", "dp_pairs")},
+        }
+        print(f"[search_cascade] {workload}: full {t_full*1e3:.0f} ms vs "
+              f"cascade {t_casc*1e3:.0f} ms ({t_full/t_casc:.2f}x), "
+              f"pre-DP prune {100*stats['pre_dp_prune']:.0f}%, exact",
+              flush=True)
+
+    out["pre_dp_prune"] = out["workloads"]["retrieval"]["pre_dp_prune"]
+    if T == 128:
+        # the acceptance headline: most pairs never reach the DP stage
+        assert out["pre_dp_prune"] >= 0.5, \
+            f"cascade pruned only {out['pre_dp_prune']:.2%} pre-DP at T=128"
+    if not smoke:
+        with open(os.path.join(ROOT, "BENCH_search.json"), "w") as f:
+            json.dump(out, f, indent=1)
+    return out
+
+
+def main(fast: bool = True):
+    out = run(fast=fast)
+    print(json.dumps(out, indent=1))
+    return out
+
+
+if __name__ == "__main__":
+    main()

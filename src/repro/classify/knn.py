@@ -25,17 +25,28 @@ def knn_error(cross: jnp.ndarray, y_train, y_test) -> float:
 
 def knn_error_series(X_test, X_train, y_train, y_test, *,
                      kind: str = "spdtw", sp=None, nu: float = 1.0,
-                     impl: str = "auto") -> float:
-    """1-NN error straight from raw series via the fused Gram engine.
+                     impl: str = "auto", cascade: bool = True) -> float:
+    """1-NN error straight from raw series.
 
-    Builds the (N_test, N_train) cross matrix with ``pairwise`` (block-sparse
-    Pallas kernel on TPU, active-tile scan elsewhere — never a repeat/tile
-    pair expansion) and scores it. Kernel kinds are negated into
-    dissimilarities.
+    For the dissimilarity kinds ("dtw" / "spdtw") the default routes
+    through the lower-bound cascade (``kernels.ops.knn_cascade``):
+    bounds prune most candidates before any DP runs and the survivors go
+    through the fused masked engine — exact by construction, so the error
+    is identical to the full cross-matrix path. ``impl="dense"`` (the
+    historical baseline) or ``cascade=False`` fall back to the full
+    (N_test, N_train) cross matrix via ``pairwise`` (block-sparse Pallas
+    kernel on TPU, active-tile scan elsewhere — never a repeat/tile pair
+    expansion). Kernel kinds always take the full-Gram path (negated into
+    dissimilarities): the cascade has no admissible bounds for them.
     """
-    from repro.core.measures import pairwise
-    cross = pairwise(jnp.asarray(X_test), jnp.asarray(X_train), kind,
-                     sp=sp, nu=nu, impl=impl)
+    from repro.core.measures import make_measure, pairwise
+    X_test = jnp.asarray(X_test)
+    X_train = jnp.asarray(X_train)
+    if cascade and kind in ("dtw", "spdtw") and impl != "dense":
+        m = make_measure(kind, X_train.shape[1], sp=sp)
+        nn, _ = m.knn(X_test, X_train, impl=impl)
+        return error_rate(jnp.asarray(y_train)[nn], jnp.asarray(y_test))
+    cross = pairwise(X_test, X_train, kind, sp=sp, nu=nu, impl=impl)
     if kind in ("krdtw", "sp_krdtw"):
         cross = -cross
     return knn_error(cross, y_train, y_test)

@@ -6,7 +6,8 @@ Public API:
   learn_sparse_paths, SparsePaths, block_sparsify   (occupancy.py)
   spdtw, spdtw_loc, spdtw_pairwise                  (spdtw.py)
   log_krdtw, log_krdtw_sc, log_sp_krdtw             (krdtw.py)
-  make_measure, Measure, ALL_MEASURES               (measures.py)
+  lb_kim_cross, lb_keogh_cross, envelopes, ...      (bounds.py)
+  make_measure, Measure, CorpusIndex, ALL_MEASURES  (measures.py)
 """
 from .dtw import (INF, band_cells, band_mask, dtw, dtw_matrix, dtw_sc,
                   local_cost, minplus_scan, wdtw)
@@ -18,4 +19,7 @@ from .spdtw import spdtw, spdtw_loc, spdtw_pairwise
 from .krdtw import (krdtw, local_kernel, log_krdtw, log_krdtw_sc,
                     log_sp_krdtw, normalized_gram)
 from .baselines import corr, corr_dissimilarity, daco, euclidean, znormalize
-from .measures import ALL_MEASURES, Measure, make_measure, pairwise
+from .bounds import (envelopes, lb_keogh_cross, lb_kim_cross,
+                     row_min_weights, support_extents)
+from .measures import (ALL_MEASURES, CorpusIndex, Measure,
+                       build_corpus_index, make_measure, pairwise)

@@ -1,0 +1,133 @@
+"""Admissible lower bounds for (SP-)DTW similarity search (DESIGN.md §4).
+
+The serving stack never wants to pay the masked DP for a candidate that
+provably cannot be the nearest neighbour. This module supplies the cheap,
+*admissible* bounds that feed the cascade in ``repro.kernels.ops`` — every
+bound b(q, c) satisfies b(q, c) <= SP-DTW(q, c), so pruning on
+``b > threshold`` can never discard the true 1-NN (exactness by
+construction, in the spirit of LB_Kim / LB_Keogh / PrunedDTW).
+
+Both bounds are sparsity-aware: the learned support restricts every
+admissible alignment path, so the per-row column windows (``support
+extents``) it induces tighten the classic envelopes far beyond the
+Sakoe-Chiba band they were invented for.
+
+Bound 1 — endpoints (LB_Kim-style, O(1) per pair):
+    every path contains the cells (0, 0) and (T-1, T-1), so
+
+        SP-DTW(q, c) >= w[0,0] * (q_0 - c_0)^2 + w[-1,-1] * (q_T - c_T)^2.
+
+Bound 2 — support-windowed envelopes (LB_Keogh-style, O(T) per pair):
+    a monotone path visits *every* row i, at some column j inside the
+    support's row window [lo_i, hi_i], paying at least
+
+        min_{j in supp row i} w[i,j] * (q_i - c_j)^2
+            >= wmin_i * penalty(q_i; L_i, U_i)
+
+    where (L_i, U_i) is the envelope of c over the window and ``penalty``
+    the usual one-sided squared excess. Summing over rows is admissible
+    because path cost is a sum of non-negative cell costs and rows are
+    disjoint. The transposed variant bounds through the *columns* (the
+    candidate's rows), with the query enveloped instead; the max of the
+    two (and of bound 1) is again admissible.
+
+All functions are pure jnp (jit/vmap/shard_map friendly); the static
+window/weight vectors are derived host-side once per learned support.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .dtw import INF
+
+
+def support_extents(support) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-row column windows [lo_i, hi_i] of a boolean (T, T) support.
+
+    Host-side (the support is concrete, learned once per dataset). Empty
+    rows — only possible with ``repair=False`` — get the inverted window
+    (lo=T, hi=-1); downstream bounds turn those rows into +INF, which is
+    admissible because a support with an empty row admits no path at all.
+    """
+    sup = np.asarray(support, bool)
+    T = sup.shape[1]
+    any_row = sup.any(axis=1)
+    j = np.arange(T)
+    lo = np.where(any_row, np.where(sup, j[None, :], T).min(axis=1), T)
+    hi = np.where(any_row, np.where(sup, j[None, :], -1).max(axis=1), -1)
+    return lo.astype(np.int32), hi.astype(np.int32)
+
+
+def row_min_weights(weights) -> np.ndarray:
+    """Min positive weight per row of a (T, T) weight grid (host-side).
+
+    The weighted local cost of any supported cell in row i is at least
+    ``wmin_i`` times its unweighted cost, so scaling the envelope penalty
+    by ``wmin_i`` keeps the bound admissible for arbitrary positive
+    weights (gamma > 0 grids included). Empty rows map to +INF.
+    """
+    w = np.asarray(weights, np.float32)
+    pos = w > 0
+    wmin = np.where(pos, w, np.float32(INF)).min(axis=1)
+    return np.where(pos.any(axis=1), wmin, np.float32(INF)).astype(np.float32)
+
+
+def envelopes(C: jnp.ndarray, lo, hi) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Windowed running envelopes of each series in C under [lo_i, hi_i].
+
+    C: (N, T). Returns (L, U), both (N, T):
+    L[n, i] = min_{j in [lo_i, hi_i]} C[n, j] (and U the max) — the
+    row-window envelope every admissible alignment of row i is confined
+    to. Rows with inverted windows (empty support rows) get (+INF, -INF)
+    so any query point pays an infinite penalty there.
+    """
+    C = jnp.asarray(C, jnp.float32)
+    T = C.shape[1]
+    j = jnp.arange(T)
+    win = (j[None, :] >= jnp.asarray(lo)[:, None]) & \
+          (j[None, :] <= jnp.asarray(hi)[:, None])        # (T, T) [row, col]
+    big = jnp.float32(INF)
+    L = jnp.min(jnp.where(win[None], C[:, None, :], big), axis=2)
+    U = jnp.max(jnp.where(win[None], C[:, None, :], -big), axis=2)
+    return L, U
+
+
+def lb_kim_cross(Q: jnp.ndarray, C: jnp.ndarray,
+                 w00: float = 1.0, wTT: float = 1.0) -> jnp.ndarray:
+    """(Nq, Nc) endpoint lower bound (LB_Kim-style, O(1) per pair)."""
+    Q = jnp.asarray(Q, jnp.float32)
+    C = jnp.asarray(C, jnp.float32)
+    d0 = (Q[:, 0, None] - C[None, :, 0]) ** 2
+    d1 = (Q[:, -1, None] - C[None, :, -1]) ** 2
+    return jnp.minimum(jnp.float32(w00) * d0 + jnp.float32(wTT) * d1, INF)
+
+
+def _keogh_penalty(Q: jnp.ndarray, L: jnp.ndarray, U: jnp.ndarray,
+                   wmin: jnp.ndarray) -> jnp.ndarray:
+    """Σ_i wmin_i * one-sided squared excess of Q_i outside [L_i, U_i].
+
+    Q: (Nq, T); L, U: (Nc, T); wmin: (T,). Returns (Nq, Nc). Rows whose
+    window is empty (wmin == +INF) force the whole bound to +INF.
+    """
+    wmin = jnp.asarray(wmin, jnp.float32)
+    above = jnp.maximum(Q[:, None, :] - U[None, :, :], 0.0)
+    below = jnp.maximum(L[None, :, :] - Q[:, None, :], 0.0)
+    pen = above * above + below * below                   # (Nq, Nc, T)
+    dead = wmin >= INF
+    term = jnp.where(dead[None, None, :], INF,
+                     jnp.where(dead, 0.0, wmin)[None, None, :] * pen)
+    return jnp.minimum(jnp.sum(term, axis=2), INF)
+
+
+def lb_keogh_cross(Q: jnp.ndarray, env_lo: jnp.ndarray, env_hi: jnp.ndarray,
+                   wmin: jnp.ndarray, block_q: int = 256) -> jnp.ndarray:
+    """(Nq, Nc) support-windowed LB_Keogh against precomputed candidate
+    envelopes (the index side of the bound). Chunked over queries to bound
+    the (block_q, Nc, T) intermediate."""
+    Q = jnp.asarray(Q, jnp.float32)
+    rows = [_keogh_penalty(Q[s:s + block_q], env_lo, env_hi, wmin)
+            for s in range(0, Q.shape[0], block_q)]
+    return rows[0] if len(rows) == 1 else jnp.concatenate(rows, axis=0)

@@ -131,19 +131,24 @@ def learn_sparse_paths(
 def _tile_plan(active: np.ndarray, slot: np.ndarray) -> np.ndarray:
     """Row-major schedule over active tiles, one int32 row per grid step.
 
-    Columns: (ti, tj, slot, top_active, left_active, diag_active). Row-major
-    order guarantees every producer tile of an edge runs before its consumer
-    (DP wavefront order); the neighbour bits let kernels read skipped-tile
-    edges as +INF instead of stale data.
+    Columns: (ti, tj, slot, top_active, left_active, diag_active,
+    row_first). Row-major order guarantees every producer tile of an edge
+    runs before its consumer (DP wavefront order); the neighbour bits let
+    kernels read skipped-tile edges as +INF instead of stale data.
+    ``row_first`` marks the first tile of each tile row — the step at which
+    the previous tile row is complete, i.e. where the early-abandon sweep
+    (``kernels.gram_block``) may compare the running row-min against the
+    1-NN threshold.
     """
     ii, jj = np.nonzero(active)              # np.nonzero is row-major
     if len(ii) == 0:
-        return np.zeros((0, 6), np.int32)
+        return np.zeros((0, 7), np.int32)
     top = (ii > 0) & active[np.maximum(ii - 1, 0), jj]
     left = (jj > 0) & active[ii, np.maximum(jj - 1, 0)]
     diag = ((ii > 0) & (jj > 0)
             & active[np.maximum(ii - 1, 0), np.maximum(jj - 1, 0)])
-    return np.stack([ii, jj, slot[ii, jj], top, left, diag],
+    row_first = np.concatenate([[True], ii[1:] != ii[:-1]])
+    return np.stack([ii, jj, slot[ii, jj], top, left, diag, row_first],
                     axis=1).astype(np.int32)
 
 
@@ -158,7 +163,7 @@ class BlockSparsePaths:
     blocks:      (n_slots, tile, tile) float32 compressed weights; slot 0 is
                  the all-zero dummy.
     T:           original (padded) grid edge; grids are padded to tile mult.
-    meta:        cached (n_active, 6) int32 host-side tile plan (see
+    meta:        cached (n_active, 7) int32 host-side tile plan (see
                  ``_tile_plan``); filled by ``block_sparsify`` and computed
                  lazily via ``plan()`` for hand-built instances.
     """
@@ -197,7 +202,7 @@ def default_tile(T: int) -> int:
 
 
 def block_sparsify(sp, tile: int = 128) -> BlockSparsePaths:
-    """Re-blockify a learned sparse grid for the TPU kernel (DESIGN section 3).
+    """Re-blockify a learned sparse grid for the TPU kernel (DESIGN.md §3).
 
     ``sp`` is a SparsePaths or a raw (T, T) weight array (0 = outside the
     support). The active-tile schedule consumed by the Pallas kernels is

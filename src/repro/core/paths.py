@@ -10,14 +10,17 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .dtw import INF, dtw_matrix
+from .dtw import INF, _dp_rows, dtw_matrix
 
 
 def backtrack(D: jnp.ndarray) -> jnp.ndarray:
     """Boolean (Tx, Ty) mask of the optimal path through accumulated costs D.
 
-    Ties resolve in the order diag > up > left (diagonal preferred), matching
-    the usual DTW convention.
+    Tie convention: when predecessors are equal the move resolves as
+    diag > up > left (diagonal preferred, then the vertical step). Both
+    preferred branches decrement ``i``, so the row update only needs the
+    combined ``best != left``-exclusive test; the column update keeps the
+    two-way split (diag and left decrement ``j``, up does not).
     """
     Tx, Ty = D.shape
     n_steps = Tx + Ty - 2  # max path length minus the start cell
@@ -28,7 +31,8 @@ def backtrack(D: jnp.ndarray) -> jnp.ndarray:
         left = jnp.where(j > 0, D[i, j - 1], INF)
         diag = jnp.where((i > 0) & (j > 0), D[i - 1, j - 1], INF)
         best = jnp.minimum(jnp.minimum(diag, up), left)
-        ni = jnp.where(best == diag, i - 1, jnp.where(best == up, i - 1, i))
+        # diag and up agree on i-1: one where suffices for the row index
+        ni = jnp.where((best == diag) | (best == up), i - 1, i)
         nj = jnp.where(best == diag, j - 1, jnp.where(best == up, j, j - 1))
         done = (i == 0) & (j == 0)
         ni = jnp.where(done, 0, ni)
@@ -55,5 +59,4 @@ def path_is_feasible(support: jnp.ndarray) -> jnp.ndarray:
     Runs the masked DP with unit costs and checks the corner is reachable.
     """
     cost = jnp.where(support, 1.0, INF).astype(jnp.float32)
-    from .dtw import _dp_rows
     return _dp_rows(cost)[-1, -1] < INF

@@ -4,12 +4,13 @@ Each kernel has a pure-jnp oracle in ref.py; ops.py is the dispatching
 public API (pallas on TPU, reference path elsewhere, interpret in tests).
 """
 from .ops import (dtw_pairs, dtw_banded_pairs, spdtw_pairs, log_krdtw_pairs,
-                  spdtw_gram, dtw_gram, log_krdtw_gram)
+                  spdtw_gram, dtw_gram, log_krdtw_gram, knn_cascade)
 from .dtw_wavefront import wavefront_dtw
 from .dtw_banded import banded_dtw
 from .spdtw_block import spdtw_block, tile_sweep
 from .krdtw_wavefront import (krdtw_sweep, mask_to_diagonal_major,
                               wavefront_log_krdtw)
-from .gram_block import (gram_log_krdtw_block, gram_spdtw_block,
-                         gram_spdtw_scan)
+from .gram_block import (gram_log_krdtw_block, gram_prefix_bound,
+                         gram_spdtw_block, gram_spdtw_scan,
+                         prefix_tile_count, spdtw_paired_scan)
 from . import ref

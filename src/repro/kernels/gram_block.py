@@ -37,6 +37,20 @@ SP-K_rdtw Gram kernel (``gram_log_krdtw_block``)
 (reusing ``tile_sweep``): the CPU/GPU production path and the oracle the
 Pallas kernels are tested against. Backend selection lives in
 ``repro.kernels.ops`` / ``repro.core.measures.pairwise``.
+
+Early-abandon sweep (DESIGN.md §4). Both SP-DTW engines optionally carry a
+per-pair *alive* flag and a per-query threshold through the active-tile
+schedule. Cell costs are non-negative, so once a tile row of the DP is
+complete, ``min_j D(r, j)`` is an admissible lower bound on the final
+value: at the first tile of each new tile row (the ``row_first`` plan bit)
+the running row-min is compared against the threshold and pairs that
+provably cannot beat it are abandoned — their lanes keep streaming through
+the vector engine, but the Pallas kernel skips the whole tile sweep once
+*every* pair of its (A-tile, B-tile) block is dead, and abandoned pairs
+report +INF. With default (+INF) thresholds the engines are bit-identical
+to the unabandoned path. ``alive0`` lets the 1-NN cascade
+(``ops.knn_cascade``) pre-kill pairs already pruned by the lower-bound
+stages, so the DP only ever runs on the survivors.
 """
 from __future__ import annotations
 
@@ -69,65 +83,92 @@ def _pair_batch(xa: jnp.ndarray, yb: jnp.ndarray, ba: int, bb: int):
 # SP-DTW: (A-tile, B-tile, active-tile) fused Pallas kernel
 # ---------------------------------------------------------------------------
 
-def _gram_spdtw_kernel(meta_ref, a_ref, b_ref, w_ref, out_ref,
-                       row_edge, col_edge, corner_next, d_ri,
+def _gram_spdtw_kernel(meta_ref, a_ref, b_ref, w_ref, thr_ref, alive0_ref,
+                       out_ref, row_edge, col_edge, corner_next, d_ri, alive,
                        *, S: int, g_out: int, ri: int, rj: int,
                        ba: int, bb: int):
     """One grid step = one active tile for one (A-stripe, B-stripe) block."""
     g = pl.program_id(2)
     bt = ba * bb
-    ti = meta_ref[g, 0]
-    tj = meta_ref[g, 1]
-    top_ok = meta_ref[g, 3] > 0
-    left_ok = meta_ref[g, 4] > 0
-    diag_ok = meta_ref[g, 5] > 0
 
-    xa = pl.load(a_ref, (slice(None), pl.dslice(ti * S, S)))   # (ba, S)
-    yb = pl.load(b_ref, (slice(None), pl.dslice(tj * S, S)))   # (bb, S)
-    x, y = _pair_batch(xa, yb, ba, bb)                         # (bt, S)
-    w = w_ref[0]                                               # (S, S)
+    @pl.when(g == 0)
+    def _():
+        # row_edge must start at +INF for the early-abandon row-min to be
+        # meaningful (entries of never-written columns would otherwise be
+        # stale cross-block data); alive starts from the cascade's
+        # bound-stage survivors (all-ones when no cascade is running)
+        row_edge[...] = jnp.full((bt, row_edge.shape[1]), INF, jnp.float32)
+        alive[...] = alive0_ref[...].reshape(bt, 1)
 
-    # --- gather incoming edges (guarded against inactive neighbours) ---
-    inf_row = jnp.full((bt, S), INF, jnp.float32)
-    top_raw = pl.load(row_edge, (slice(None), pl.dslice(tj * S, S)))
-    top_vec = jnp.where(top_ok, top_raw, inf_row)
-    left_vec = jnp.where(left_ok, col_edge[...], inf_row)
-    c_first = jnp.where(
-        g == 0, jnp.zeros((bt, 1), jnp.float32),
-        jnp.where(diag_ok,
-                  jnp.where(left_ok, corner_next[...],
-                            # guarded: only read when diag_ok (=> tj > 0);
-                            # clamp keeps the untaken branch in-bounds
-                            pl.load(row_edge,
-                                    (slice(None),
-                                     pl.dslice(jnp.maximum(tj * S - 1, 0),
-                                               1)))),
-                  jnp.full((bt, 1), INF, jnp.float32)))
-    new_corner = top_vec[:, S - 1:S]
+    # early-abandon check at the first tile of each new tile row: the
+    # previous tile row is complete, so the running row-min is an
+    # admissible lower bound on every pair's final value (rows past the
+    # result tile row are excluded via g <= g_out)
+    row_first = meta_ref[g, 6] > 0
 
-    d_last, rightcol, dri = tile_sweep(x, y, w, top_vec, left_vec, c_first,
-                                       S=S, ri=ri)
+    @pl.when(row_first & (g > 0) & (g <= g_out))
+    def _():
+        bound = jnp.min(row_edge[...], axis=1, keepdims=True)     # (bt, 1)
+        thr_p = jnp.repeat(thr_ref[...], bb, axis=0)              # (bt, 1)
+        alive[...] = alive[...] * (bound <= thr_p).astype(jnp.float32)
 
-    # --- publish edges for downstream tiles of this pair block ---
-    corner_next[...] = new_corner
-    pl.store(row_edge, (slice(None), pl.dslice(tj * S, S)), d_last)
-    col_edge[...] = rightcol
-    d_ri[...] = dri
+    # the whole tile sweep is skipped once every pair of this block is dead
+    @pl.when(jnp.any(alive[...] > 0))
+    def _():
+        ti = meta_ref[g, 0]
+        tj = meta_ref[g, 1]
+        top_ok = meta_ref[g, 3] > 0
+        left_ok = meta_ref[g, 4] > 0
+        diag_ok = meta_ref[g, 5] > 0
+
+        xa = pl.load(a_ref, (slice(None), pl.dslice(ti * S, S)))   # (ba, S)
+        yb = pl.load(b_ref, (slice(None), pl.dslice(tj * S, S)))   # (bb, S)
+        x, y = _pair_batch(xa, yb, ba, bb)                         # (bt, S)
+        w = w_ref[0]                                               # (S, S)
+
+        # --- gather incoming edges (guarded against inactive neighbours) ---
+        inf_row = jnp.full((bt, S), INF, jnp.float32)
+        top_raw = pl.load(row_edge, (slice(None), pl.dslice(tj * S, S)))
+        top_vec = jnp.where(top_ok, top_raw, inf_row)
+        left_vec = jnp.where(left_ok, col_edge[...], inf_row)
+        c_first = jnp.where(
+            g == 0, jnp.zeros((bt, 1), jnp.float32),
+            jnp.where(diag_ok,
+                      jnp.where(left_ok, corner_next[...],
+                                # guarded: only read when diag_ok (=> tj > 0);
+                                # clamp keeps the untaken branch in-bounds
+                                pl.load(row_edge,
+                                        (slice(None),
+                                         pl.dslice(jnp.maximum(tj * S - 1, 0),
+                                                   1)))),
+                      jnp.full((bt, 1), INF, jnp.float32)))
+        new_corner = top_vec[:, S - 1:S]
+
+        d_last, rightcol, dri = tile_sweep(x, y, w, top_vec, left_vec,
+                                           c_first, S=S, ri=ri)
+
+        # --- publish edges for downstream tiles of this pair block ---
+        corner_next[...] = new_corner
+        pl.store(row_edge, (slice(None), pl.dslice(tj * S, S)), d_last)
+        col_edge[...] = rightcol
+        d_ri[...] = dri
 
     # capture at the tile holding the global result cell (NOT the last
     # active tile — the support may be active past the corner, or raw user
-    # weights may not reach it at all; see ``result_tile_step``)
+    # weights may not reach it at all; see ``result_tile_step``); abandoned
+    # pairs report +INF (their lanes may hold garbage from skipped sweeps)
     @pl.when(g == g_out)
     def _():
         res = jax.lax.dynamic_slice_in_dim(d_ri[...], rj, 1, axis=1)
-        out_ref[...] = res.reshape(ba, bb)
+        ok = alive[...].reshape(ba, bb) > 0
+        out_ref[...] = jnp.where(ok, res.reshape(ba, bb), INF)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("S", "n_active", "T_orig", "g_out",
                                     "ba", "bb", "interpret"))
-def _gram_spdtw_call(meta, A, B, blocks, *, S, n_active, T_orig, g_out,
-                     ba, bb, interpret):
+def _gram_spdtw_call(meta, A, B, blocks, thr, alive0, *, S, n_active, T_orig,
+                     g_out, ba, bb, interpret):
     Nap, Tp = A.shape
     Nbp = B.shape[0]
     last = T_orig - 1
@@ -144,6 +185,8 @@ def _gram_spdtw_call(meta, A, B, blocks, *, S, n_active, T_orig, g_out,
             pl.BlockSpec((ba, Tp), lambda i, j, g, m: (i, 0)),
             pl.BlockSpec((bb, Tp), lambda i, j, g, m: (j, 0)),
             pl.BlockSpec((1, S, S), lambda i, j, g, m: (m[g, 2], 0, 0)),
+            pl.BlockSpec((ba, 1), lambda i, j, g, m: (i, 0)),    # thresholds
+            pl.BlockSpec((ba, bb), lambda i, j, g, m: (i, j)),   # alive0
         ],
         out_specs=pl.BlockSpec((ba, bb), lambda i, j, g, m: (i, j)),
         scratch_shapes=[
@@ -151,13 +194,14 @@ def _gram_spdtw_call(meta, A, B, blocks, *, S, n_active, T_orig, g_out,
             pltpu.VMEM((ba * bb, S), jnp.float32),    # col_edge
             pltpu.VMEM((ba * bb, 1), jnp.float32),    # corner_next
             pltpu.VMEM((ba * bb, S), jnp.float32),    # d_ri capture
+            pltpu.VMEM((ba * bb, 1), jnp.float32),    # alive flags
         ],
     )
     return pl.pallas_call(
         kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Nap, Nbp), jnp.float32),
         interpret=interpret,
-    )(meta, A, B, blocks)
+    )(meta, A, B, blocks, thr, alive0)
 
 
 def _pad_rows_cols(X: jnp.ndarray, n_to: int, t_to: int) -> jnp.ndarray:
@@ -165,14 +209,40 @@ def _pad_rows_cols(X: jnp.ndarray, n_to: int, t_to: int) -> jnp.ndarray:
     return jnp.pad(X.astype(jnp.float32), ((0, n_to - N), (0, t_to - T)))
 
 
+def _pad_abandon_state(thresholds, alive0, Na, Nb, Nap, Nbp):
+    """Pad the early-abandon operands to the tile batch.
+
+    Defaults (no cascade): +INF thresholds / all-alive — bit-identical to
+    the unabandoned engines. When a cascade mask is supplied, padding
+    pairs start dead, so ragged fills cost nothing.
+    """
+    if thresholds is None:
+        thr = jnp.full((Nap, 1), INF, jnp.float32)
+    else:
+        thr = jnp.pad(jnp.asarray(thresholds, jnp.float32).reshape(Na, 1),
+                      ((0, Nap - Na), (0, 0)), constant_values=INF)
+    if alive0 is None:
+        alive = jnp.ones((Nap, Nbp), jnp.float32) if thresholds is None \
+            else jnp.pad(jnp.ones((Na, Nb), jnp.float32),
+                         ((0, Nap - Na), (0, Nbp - Nb)))
+    else:
+        alive = jnp.pad(jnp.asarray(alive0).astype(jnp.float32),
+                        ((0, Nap - Na), (0, Nbp - Nb)))
+    return thr, alive
+
+
 def gram_spdtw_block(A: jnp.ndarray, B: jnp.ndarray, bsp: BlockSparsePaths,
                      T_orig: int | None = None, ba: int = 8, bb: int = 8,
+                     thresholds: jnp.ndarray | None = None,
+                     alive0: jnp.ndarray | None = None,
                      interpret: bool = False) -> jnp.ndarray:
     """All-pairs SP-DTW Gram matrix via the fused block-sparse Pallas kernel.
 
     A: (Na, T), B: (Nb, T) f32. Returns (Na, Nb) SP-DTW values (>= 1e29
     where the support admits no path). Ragged Na/Nb are padded to the tile
-    batch and sliced back.
+    batch and sliced back. ``thresholds`` ((Na,), per-A-row) and ``alive0``
+    ((Na, Nb) bool) switch on the early-abandon sweep: pairs that start
+    dead or whose running row-min exceeds the threshold report +INF.
     """
     Na, T = A.shape
     Nb = B.shape[0]
@@ -185,35 +255,44 @@ def gram_spdtw_block(A: jnp.ndarray, B: jnp.ndarray, bsp: BlockSparsePaths,
         return jnp.full((Na, Nb), INF, jnp.float32)
     Nap = ((Na + ba - 1) // ba) * ba
     Nbp = ((Nb + bb - 1) // bb) * bb
+    thr, alive = _pad_abandon_state(thresholds, alive0, Na, Nb, Nap, Nbp)
     out = _gram_spdtw_call(
         jnp.asarray(meta), _pad_rows_cols(A, Nap, bsp.T),
-        _pad_rows_cols(B, Nbp, bsp.T), jnp.asarray(bsp.blocks),
+        _pad_rows_cols(B, Nbp, bsp.T), jnp.asarray(bsp.blocks), thr, alive,
         S=bsp.tile, n_active=n_active, T_orig=T_orig, g_out=g_out,
         ba=ba, bb=bb, interpret=interpret)
     return out[:Na, :Nb]
 
 
 # ---------------------------------------------------------------------------
-# SP-DTW: jnp scan engine (CPU/GPU production path + oracle)
+# SP-DTW: jnp scan engines (CPU/GPU production path + oracle)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("S", "T_orig", "g_out"))
-def _gram_spdtw_scan_call(meta, A, B, blocks, *, S, T_orig, g_out):
-    Na, Tp = A.shape
-    Nb = B.shape[0]
-    P = Na * Nb
-    last = T_orig - 1
-    ri, rj = last % S, last % S
+def _tile_scan(meta, blocks, get_xy, P, Tp, thr_p, alive_p, *, S, g_out, ri):
+    """Shared lax.scan over the active-tile schedule (DP wavefront order).
+
+    ``get_xy(ti, tj) -> ((P, S), (P, S))`` supplies the per-pair series
+    tiles — the cross-product Gram engine expands (A-stripe x B-stripe)
+    batches, the paired engine slices aligned rows. Returns
+    (row_edge, dri, alive) after the sweep: the final bottom-edge state
+    (its row-min is an admissible lower bound — the prefix-bound stage),
+    the captured result row of step ``g_out`` (pass g_out=-2 to skip
+    capture) and the per-pair alive flags after early abandoning.
+    """
     n_active = meta.shape[0]
     inf_row = jnp.full((P, S), INF, jnp.float32)
 
     def step(carry, inp):
-        row_edge, col_edge, corner, dri_out = carry
+        row_edge, col_edge, corner, dri_out, alive = carry
         k, m = inp
         ti, tj, slot = m[0], m[1], m[2]
-        xa = jax.lax.dynamic_slice(A, (0, ti * S), (Na, S))
-        yb = jax.lax.dynamic_slice(B, (0, tj * S), (Nb, S))
-        x, y = _pair_batch(xa, yb, Na, Nb)
+        # early-abandon check at the first tile of each new tile row (the
+        # previous row is complete => min_j row_edge lower-bounds every
+        # pair's final value; rows past the result tile are excluded)
+        check = (m[6] > 0) & (k > 0) & (k <= g_out)
+        bound = jnp.min(row_edge, axis=1, keepdims=True)       # (P, 1)
+        alive = alive & jnp.where(check, bound <= thr_p, True)
+        x, y = get_xy(ti, tj)
         w = blocks[slot]
         top_raw = jax.lax.dynamic_slice(row_edge, (0, tj * S), (P, S))
         top_vec = jnp.where(m[3] > 0, top_raw, inf_row)
@@ -231,25 +310,51 @@ def _gram_spdtw_scan_call(meta, A, B, blocks, *, S, T_orig, g_out):
         # keep the dri of the tile holding the global result cell (see
         # ``result_tile_step``), not whatever tile happens to run last
         dri_out = jnp.where(k == g_out, dri, dri_out)
-        return (row_edge, rightcol, top_vec[:, S - 1:S], dri_out), None
+        return (row_edge, rightcol, top_vec[:, S - 1:S], dri_out, alive), None
 
     init = (jnp.full((P, Tp), INF, jnp.float32), inf_row,
-            jnp.full((P, 1), INF, jnp.float32), inf_row)
-    (_, _, _, dri), _ = jax.lax.scan(
+            jnp.full((P, 1), INF, jnp.float32), inf_row, alive_p)
+    (row_edge, _, _, dri, alive), _ = jax.lax.scan(
         step, init, (jnp.arange(n_active), meta))
-    return jax.lax.dynamic_slice_in_dim(dri, rj, 1, axis=1).reshape(Na, Nb)
+    return row_edge, dri, alive
+
+
+@functools.partial(jax.jit, static_argnames=("S", "T_orig", "g_out"))
+def _gram_spdtw_scan_call(meta, A, B, blocks, thr, alive0, *, S, T_orig,
+                          g_out):
+    Na, Tp = A.shape
+    Nb = B.shape[0]
+    P = Na * Nb
+    last = T_orig - 1
+    ri, rj = last % S, last % S
+    thr_p = jnp.repeat(thr.reshape(Na, 1), Nb, axis=0)         # (P, 1)
+
+    def get_xy(ti, tj):
+        xa = jax.lax.dynamic_slice(A, (0, ti * S), (Na, S))
+        yb = jax.lax.dynamic_slice(B, (0, tj * S), (Nb, S))
+        return _pair_batch(xa, yb, Na, Nb)
+
+    _, dri, alive = _tile_scan(meta, blocks, get_xy, P, Tp, thr_p,
+                               alive0.reshape(P, 1) > 0,
+                               S=S, g_out=g_out, ri=ri)
+    val = jax.lax.dynamic_slice_in_dim(dri, rj, 1, axis=1)
+    return jnp.where(alive, val, INF).reshape(Na, Nb)
 
 
 def gram_spdtw_scan(A: jnp.ndarray, B: jnp.ndarray, bsp: BlockSparsePaths,
-                    T_orig: int | None = None,
-                    block_a: int = 64) -> jnp.ndarray:
+                    T_orig: int | None = None, block_a: int = 64,
+                    thresholds: jnp.ndarray | None = None,
+                    alive0: jnp.ndarray | None = None) -> jnp.ndarray:
     """All-pairs SP-DTW Gram matrix: lax.scan over the active-tile schedule.
 
     Same schedule, edge dataflow and ``tile_sweep`` math as the Pallas
     kernel, expressed as a scan — work is Na*Nb*n_active*S^2 on any backend
     and the pair batch is broadcast per tile, never materialized in HBM at
     (Na*Nb, T). A rows are chunked (``block_a``) to bound the carried
-    edge-state footprint.
+    edge-state footprint. ``thresholds`` / ``alive0`` drive the same
+    early-abandon sweep as the Pallas kernel (abandoned pairs report +INF;
+    lanes still stream through the vector engine — the wall-clock win on
+    this path comes from the cascade never scheduling pruned pairs).
     """
     Na, T = A.shape
     Nb = B.shape[0]
@@ -262,11 +367,125 @@ def gram_spdtw_scan(A: jnp.ndarray, B: jnp.ndarray, bsp: BlockSparsePaths,
     blocks = jnp.asarray(bsp.blocks)
     Ap = jnp.pad(A.astype(jnp.float32), ((0, 0), (0, bsp.T - T)))
     Bp = jnp.pad(B.astype(jnp.float32), ((0, 0), (0, bsp.T - T)))
+    thr, alive = _pad_abandon_state(thresholds, alive0, Na, Nb, Na, Nb)
     rows = []
     for s in range(0, Na, block_a):
-        rows.append(_gram_spdtw_scan_call(meta, Ap[s:s + block_a], Bp,
-                                          blocks, S=bsp.tile, T_orig=T_orig,
-                                          g_out=g_out))
+        rows.append(_gram_spdtw_scan_call(
+            meta, Ap[s:s + block_a], Bp, blocks, thr[s:s + block_a],
+            alive[s:s + block_a], S=bsp.tile, T_orig=T_orig, g_out=g_out))
+    return jnp.concatenate(rows, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("S", "T_orig", "g_out"))
+def _spdtw_paired_scan_call(meta, X, Y, blocks, thr, *, S, T_orig, g_out):
+    P, Tp = X.shape
+    last = T_orig - 1
+    ri, rj = last % S, last % S
+
+    def get_xy(ti, tj):
+        return (jax.lax.dynamic_slice(X, (0, ti * S), (P, S)),
+                jax.lax.dynamic_slice(Y, (0, tj * S), (P, S)))
+
+    _, dri, alive = _tile_scan(meta, blocks, get_xy, P, Tp,
+                               thr.reshape(P, 1), jnp.ones((P, 1), bool),
+                               S=S, g_out=g_out, ri=ri)
+    val = jax.lax.dynamic_slice_in_dim(dri, rj, 1, axis=1)
+    return jnp.where(alive, val, INF).reshape(P)
+
+
+def spdtw_paired_scan(x: jnp.ndarray, y: jnp.ndarray, bsp: BlockSparsePaths,
+                      T_orig: int | None = None,
+                      thresholds: jnp.ndarray | None = None,
+                      block_p: int = 4096) -> jnp.ndarray:
+    """Batched *aligned-pair* SP-DTW over the active-tile schedule.
+
+    x, y: (B, T) — pair p is (x[p], y[p]), no cross product. Same schedule
+    and ``tile_sweep`` math as the Gram engines, so work is B*n_active*S^2:
+    unlike ``ref.wdtw_batch`` this exploits the learned sparsity on CPU/GPU
+    too. The cascade's survivor stage runs here after gathering the pairs
+    that outlived the bounds. Optional per-pair ``thresholds`` engage the
+    early-abandon sweep (abandoned pairs report +INF).
+    """
+    B, T = x.shape
+    T_orig = T if T_orig is None else T_orig
+    assert T_orig <= bsp.T
+    g_out = result_tile_step(bsp.plan(), bsp.tile, T_orig)
+    if g_out < 0:   # corner cell outside the support: no admissible path
+        return jnp.full((B,), INF, jnp.float32)
+    meta = jnp.asarray(bsp.plan())
+    blocks = jnp.asarray(bsp.blocks)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, bsp.T - T)))
+    yp = jnp.pad(y.astype(jnp.float32), ((0, 0), (0, bsp.T - T)))
+    thr = jnp.full((B,), INF, jnp.float32) if thresholds is None \
+        else jnp.asarray(thresholds, jnp.float32)
+    outs = []
+    for s in range(0, B, block_p):
+        outs.append(_spdtw_paired_scan_call(
+            meta, xp[s:s + block_p], yp[s:s + block_p], blocks,
+            thr[s:s + block_p], S=bsp.tile, T_orig=T_orig, g_out=g_out))
+    return jnp.concatenate(outs, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# SP-DTW: truncated prefix-DP lower bound (the cascade's stage 3)
+# ---------------------------------------------------------------------------
+
+def prefix_tile_count(bsp: BlockSparsePaths, frac: float,
+                      T_orig: int) -> int:
+    """Number of leading plan steps covering the first ``frac`` of the tile
+    rows (clamped so every bounded row is a real DP row < T_orig)."""
+    if frac <= 0:
+        return 0
+    kt = min(int(round(frac * (bsp.T // bsp.tile))), T_orig // bsp.tile)
+    if kt <= 0:
+        return 0
+    meta = bsp.plan()
+    return int((meta[:, 0] < kt).sum())
+
+
+@functools.partial(jax.jit, static_argnames=("S",))
+def _gram_prefix_bound_call(meta_p, A, B, blocks, *, S):
+    Na, Tp = A.shape
+    Nb = B.shape[0]
+    P = Na * Nb
+
+    def get_xy(ti, tj):
+        xa = jax.lax.dynamic_slice(A, (0, ti * S), (Na, S))
+        yb = jax.lax.dynamic_slice(B, (0, tj * S), (Nb, S))
+        return _pair_batch(xa, yb, Na, Nb)
+
+    row_edge, _, _ = _tile_scan(
+        meta_p, blocks, get_xy, P, Tp, jnp.full((P, 1), INF, jnp.float32),
+        jnp.ones((P, 1), bool), S=S, g_out=-2, ri=0)
+    # min over the final bottom-edge state: every entry is a true D value
+    # of some prefix row (or +INF init), so the min lower-bounds the final
+    # DP value of each pair — the sDTW/PrunedDTW prefix bound at tile
+    # granularity
+    return jnp.min(row_edge, axis=1).reshape(Na, Nb)
+
+
+def gram_prefix_bound(A: jnp.ndarray, B: jnp.ndarray, bsp: BlockSparsePaths,
+                      n_prefix: int, T_orig: int | None = None,
+                      block_a: int = 64) -> jnp.ndarray:
+    """(Na, Nb) admissible lower bound from the first ``n_prefix`` steps of
+    the active-tile schedule (see ``prefix_tile_count``). Costs
+    n_prefix / n_active of the full Gram sweep; used by the cascade to
+    prune candidates the cheap envelope bounds cannot."""
+    Na, T = A.shape
+    T_orig = T if T_orig is None else T_orig
+    assert T_orig <= bsp.T
+    meta = bsp.plan()
+    n_prefix = min(n_prefix, meta.shape[0])
+    if n_prefix <= 0:
+        return jnp.zeros((Na, B.shape[0]), jnp.float32)
+    meta_p = jnp.asarray(meta[:n_prefix])
+    blocks = jnp.asarray(bsp.blocks)
+    Ap = jnp.pad(A.astype(jnp.float32), ((0, 0), (0, bsp.T - T)))
+    Bp = jnp.pad(B.astype(jnp.float32), ((0, 0), (0, bsp.T - T)))
+    rows = []
+    for s in range(0, Na, block_a):
+        rows.append(_gram_prefix_bound_call(meta_p, Ap[s:s + block_a], Bp,
+                                            blocks, S=bsp.tile))
     return jnp.concatenate(rows, axis=0)
 
 

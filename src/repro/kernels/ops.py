@@ -14,9 +14,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bounds as _bounds
+from repro.core.dtw import INF
 from repro.core.dtw import (band_mask as _band_mask, dtw as _dtw_pair,
                             wdtw as _wdtw_pair)
 from repro.core.krdtw import log_krdtw as _log_krdtw_pair
+from repro.core.measures import CorpusIndex
 from repro.core.measures import _chunked_cross as _nested_cross
 from repro.core.occupancy import (BlockSparsePaths, SparsePaths,
                                   block_sparsify, default_tile)
@@ -25,8 +28,9 @@ from .dtw_wavefront import wavefront_dtw
 from .dtw_banded import banded_dtw
 from .spdtw_block import spdtw_block
 from .krdtw_wavefront import mask_to_diagonal_major, wavefront_log_krdtw
-from .gram_block import (gram_log_krdtw_block, gram_spdtw_block,
-                         gram_spdtw_scan)
+from .gram_block import (gram_log_krdtw_block, gram_prefix_bound,
+                         gram_spdtw_block, gram_spdtw_scan,
+                         prefix_tile_count, spdtw_paired_scan)
 
 
 def _on_tpu() -> bool:
@@ -141,7 +145,9 @@ def spdtw_gram(A: jnp.ndarray, B: jnp.ndarray, *,
                bsp: Optional[BlockSparsePaths] = None,
                weights: Optional[jnp.ndarray] = None,
                impl: str = "auto", tile: Optional[int] = None,
-               block_a: int = 64) -> jnp.ndarray:
+               block_a: int = 64,
+               thresholds: Optional[jnp.ndarray] = None,
+               alive0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """(Na, Nb) SP-DTW Gram matrix through the fused block-sparse engine.
 
     impl: "auto" (pallas on TPU, scan elsewhere), "pallas" (interpret off
@@ -150,6 +156,12 @@ def spdtw_gram(A: jnp.ndarray, B: jnp.ndarray, *,
     benchmarking the speed-up). Weights traced under jit/vmap/grad cannot
     yield a host-side tile plan, so they transparently take the dense path
     (the pre-engine behaviour, fully traceable).
+
+    ``thresholds`` ((Na,) per-A-row) and ``alive0`` ((Na, Nb) bool) engage
+    the early-abandon sweep of the block engines (see ``gram_block``):
+    dead or abandoned pairs report +INF. The dense baseline has no
+    abandon sweep; it honours ``alive0`` by masking so the cascade stays
+    exact across every impl.
     """
     impl = _resolve(impl)
     if impl == "dense" or (bsp is None and sp is None and
@@ -158,12 +170,16 @@ def spdtw_gram(A: jnp.ndarray, B: jnp.ndarray, *,
         if w is None:   # bsp-only caller: densify so this stays SP-DTW
             assert bsp is not None, "need one of sp / bsp / weights"
             w = jnp.asarray(_densify(bsp)[:A.shape[1], :A.shape[1]])
-        return _nested_cross(lambda a, b: _wdtw_pair(a, b, w), A, B, block_a)
+        out = _nested_cross(lambda a, b: _wdtw_pair(a, b, w), A, B, block_a)
+        if alive0 is not None:
+            out = jnp.where(jnp.asarray(alive0), out, INF)
+        return out
     bsp = _resolve_bsp(sp, bsp, weights, tile)
     if impl == "ref":
-        return gram_spdtw_scan(A, B, bsp, T_orig=A.shape[1],
-                               block_a=block_a)
+        return gram_spdtw_scan(A, B, bsp, T_orig=A.shape[1], block_a=block_a,
+                               thresholds=thresholds, alive0=alive0)
     return gram_spdtw_block(A, B, bsp, T_orig=A.shape[1],
+                            thresholds=thresholds, alive0=alive0,
                             interpret=not _on_tpu())
 
 
@@ -201,3 +217,130 @@ def log_krdtw_gram(A: jnp.ndarray, B: jnp.ndarray, nu: float, *,
                              A, B, block_a)
     return gram_log_krdtw_block(A, B, nu, support=support, radius=radius,
                                 interpret=not _on_tpu())
+
+
+# ---------------------------------------------------------------------------
+# Lower-bound cascade: exact 1-NN without paying the DP per candidate
+# ---------------------------------------------------------------------------
+
+def _pair_dp(x: jnp.ndarray, y: jnp.ndarray, index: CorpusIndex, impl: str,
+             thresholds: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Batched aligned-pair SP-DTW for the cascade's seed/survivor stages.
+
+    (B, T) -> (B,). "dense" keeps the historical dense masked DP (the
+    exactness baseline); "ref" runs the active-tile paired scan (work
+    proportional to surviving tiles); "pallas" the block kernel.
+    """
+    if impl == "dense":
+        return ref.wdtw_batch(x, y, index.weights)
+    if impl == "ref":
+        return spdtw_paired_scan(x, y, index.bsp, T_orig=x.shape[1],
+                                 thresholds=thresholds)
+    return spdtw_block(x, y, index.bsp, T_orig=x.shape[1],
+                       interpret=not _on_tpu())
+
+
+def knn_cascade(Q: jnp.ndarray, index: CorpusIndex, *, impl: str = "auto",
+                seed_k: int = 2, prefix_frac: float = 0.5,
+                block_a: int = 64, return_stats: bool = False):
+    """Exact 1-NN of queries against an indexed corpus (DESIGN.md §4).
+
+    The cascade: (1) LB_Kim endpoint bound, O(1)/pair; (2) support-windowed
+    LB_Keogh envelopes, both orientations, O(T)/pair; seed the per-query
+    threshold with the exact distance of the ``seed_k`` best-bounded
+    candidates; (3) truncated prefix-DP bound over the first
+    ``prefix_frac`` of the tile rows (sDTW/PrunedDTW-style, the strongest
+    and priciest bound — it only runs on pairs the envelopes kept);
+    (4) the fused masked DP on the survivors, with the early-abandon sweep
+    killing pairs mid-DP. All bounds are admissible, thresholds are exact
+    distances of real candidates, and within-DP abandoning is strict
+    (``bound > thr``), so the returned neighbours are bit-identical to a
+    full Gram evaluation followed by argmin — every candidate tied at the
+    minimum is evaluated exactly, preserving argmin's first-index tie rule.
+
+    Q: (Nq, T). Returns (nn_idx, nn_dist) int32/(float32); with
+    ``return_stats`` a dict of per-stage prune rates rides along (entries
+    are jnp scalars — convert host-side). Fully traceable: jit / shard_map
+    safe because the index's plan and windows are static host data. On
+    concrete (non-traced) inputs the survivor DP gathers the surviving
+    pairs and runs the aligned-pair engine on just those — the CPU/GPU
+    wall-clock win; under tracing it falls back to the masked Gram engine
+    (static shapes), where the Pallas kernel skips fully-dead pair blocks.
+
+    Admissible bounds for the log-kernel recursion (K_rdtw) are an open
+    problem; this cascade covers the dissimilarity measures (dtw / spdtw).
+    """
+    Q = jnp.asarray(Q, jnp.float32)
+    C = index.corpus
+    Nq, T = Q.shape
+    Nc = C.shape[0]
+    seed_k = min(seed_k, Nc)
+    impl_r = _resolve(impl)
+
+    # --- stage 1: endpoint bound (every path pays both corner cells) ---
+    lb1 = _bounds.lb_kim_cross(Q, C, index.w00, index.wTT)
+    # --- stage 2: support-windowed envelopes, both orientations ---
+    lb2 = jnp.maximum(lb1, _bounds.lb_keogh_cross(
+        Q, index.env_lo, index.env_hi, index.wmin_rows))
+    q_lo, q_hi = _bounds.envelopes(Q, index.lo_t, index.hi_t)
+    lb2 = jnp.maximum(lb2, _bounds.lb_keogh_cross(
+        C, q_lo, q_hi, index.wmin_cols).T)
+
+    # --- seed thresholds: exact DP on the seed_k best-bounded candidates ---
+    _, seed_idx = jax.lax.top_k(-lb2, seed_k)                  # (Nq, k)
+    xq = jnp.repeat(Q, seed_k, axis=0)
+    yc = jnp.take(C, seed_idx.reshape(-1), axis=0)
+    seed_d = _pair_dp(xq, yc, index, impl_r).reshape(Nq, seed_k)
+    thr = jnp.min(seed_d, axis=1)                              # (Nq,)
+
+    # --- survivors so far: bound <= threshold (non-strict keeps ties) ---
+    rows = jnp.arange(Nq)[:, None]
+    alive2 = lb2 <= thr[:, None]
+    alive2 = alive2.at[rows, seed_idx].set(False)              # already known
+
+    # --- stage 3: truncated prefix-DP bound on the block plan ---
+    n_prefix = prefix_tile_count(index.bsp, prefix_frac, T)
+    if n_prefix > 0 and impl_r != "dense":
+        lb3 = gram_prefix_bound(Q, C, index.bsp, n_prefix, T_orig=T,
+                                block_a=block_a)
+        alive = alive2 & (lb3 <= thr[:, None])
+    else:
+        lb3 = lb2
+        alive = alive2
+
+    # --- stage 4: exact DP on the survivors, early abandoning ---
+    eager = not (_is_traced(Q) or _is_traced(C) or _is_traced(thr))
+    D = jnp.full((Nq, Nc), INF, jnp.float32).at[rows, seed_idx].set(seed_d)
+    if eager and impl_r == "ref":
+        # gather the survivors: the DP only ever touches those pairs
+        qi, ci = np.nonzero(np.asarray(alive))
+        if len(qi):
+            d_surv = _pair_dp(jnp.take(Q, qi, axis=0),
+                              jnp.take(C, ci, axis=0), index, impl_r,
+                              thresholds=jnp.take(thr, qi))
+            D = D.at[qi, ci].set(d_surv)
+        G_ab = None
+    else:
+        G = spdtw_gram(Q, C, bsp=index.bsp, weights=index.weights, impl=impl,
+                       block_a=block_a, thresholds=thr, alive0=alive)
+        D = jnp.where(alive, G, D)
+        G_ab = G
+    nn = jnp.argmin(D, axis=1).astype(jnp.int32)
+    nnd = jnp.take_along_axis(D, nn[:, None], axis=1)[:, 0]
+    if not return_stats:
+        return nn, nnd
+    total = Nq * Nc
+    dp_pairs = alive.sum() + Nq * seed_k
+    abandoned = (alive & (D >= 1e29)) if G_ab is None else \
+        (alive & (G_ab >= 1e29))
+    stats = {
+        "n_queries": Nq, "n_candidates": Nc, "seed_k": seed_k,
+        "prefix_tiles": n_prefix, "plan_tiles": index.bsp.n_active,
+        "stage1_prune": jnp.mean((lb1 > thr[:, None]).astype(jnp.float32)),
+        "stage2_prune": jnp.mean((lb2 > thr[:, None]).astype(jnp.float32)),
+        "stage3_prune": jnp.mean((lb3 > thr[:, None]).astype(jnp.float32)),
+        "pre_dp_prune": 1.0 - dp_pairs / total,
+        "dp_pairs": dp_pairs,
+        "dp_abandoned": jnp.mean(abandoned.astype(jnp.float32)),
+    }
+    return nn, nnd, stats

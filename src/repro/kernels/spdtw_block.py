@@ -21,10 +21,12 @@ the learned occupancy prior) and re-blockify the mechanism (DESIGN.md §3):
 
 Active tiles are emitted in row-major order, which guarantees the producer
 tiles of every edge ran before their consumer (DP wavefront order). The
-schedule (ti, tj, slot, neighbour bits) is computed once, vectorized, by
-``occupancy._tile_plan`` and cached on the BlockSparsePaths — both this
-kernel and the fused all-pairs Gram engine (``gram_block.py``) prefetch the
-same plan instead of re-flattening the bitmap per call.
+schedule (ti, tj, slot, neighbour bits, row_first) is computed once,
+vectorized, by ``occupancy._tile_plan`` and cached on the BlockSparsePaths —
+this kernel and the fused all-pairs Gram engines (``gram_block.py``)
+prefetch the same plan instead of re-flattening the bitmap per call (the
+``row_first`` column feeds the Gram engines' early-abandon sweep; it is
+unused here).
 
 The per-tile DP (``tile_sweep``: row loop + Hillis-Steele min-plus lane
 scan, edge injection from the neighbouring tiles) is pure jnp on values and

@@ -16,6 +16,12 @@ embarrassingly parallel, so the roofline is pure compute.
 ``--dryrun`` lowers + compiles the job on the 512-chip production mesh
 (ShapeDtypeStructs only), proving the paper plane shards, same as the LM
 cells (EXPERIMENTS.md §Dry-run).
+
+``--mode knn`` swaps the all-pairs Gram for the exact-1-NN cascade
+(``kernels.ops.knn_cascade``): queries are sharded row-wise, each chip
+bounds-prunes its query stripe against the replicated corpus and only the
+survivors reach the fused masked DP — the classification/serving workload
+inherits the cascade's pruning with the same shard layout.
 """
 from __future__ import annotations
 
@@ -62,8 +68,43 @@ def gram_job(mesh, weights, kind: str = "spdtw", nu: float = 1.0,
     return jax.jit(fn)
 
 
+def knn_job(mesh, weights, kind: str = "spdtw", impl: str = "auto",
+            seed_k: int = 2, prefix_frac: float = 0.5):
+    """Build the jitted distributed exact-1-NN cascade for the given mesh.
+
+    Queries shard row-wise; the corpus replicates. The whole cascade
+    (bounds, seeds, survivor DP) is traceable because the index's static
+    parts (support windows, tile plan) derive from the host-side
+    ``weights`` here, outside the trace; the corpus-dependent parts
+    (envelopes) are pure jnp and ride inside the shard.
+
+    Only the dissimilarity kinds have admissible bounds — the kernel
+    measures (sp_krdtw etc.) must take the full Gram job.
+    """
+    if kind not in ("dtw", "spdtw"):
+        raise ValueError(f"knn cascade has no admissible bounds for "
+                         f"{kind!r}; use mode='gram'")
+    axes = tuple(mesh.axis_names)
+    w = np.asarray(weights, np.float32)
+
+    def local(qs, cs):
+        from repro.core.measures import build_corpus_index
+        from repro.kernels.ops import knn_cascade
+        index = build_corpus_index(cs, w, kind=kind)
+        nn, dist = knn_cascade(qs, index, impl=impl, seed_k=seed_k,
+                               prefix_frac=prefix_frac)
+        return nn, dist
+
+    fn = compat.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axes, None), P(None, None)),
+        out_specs=(P(axes), P(axes)),
+        check_vma=False)
+    return jax.jit(fn)
+
+
 def run(n: int = 64, t: int = 64, kind: str = "spdtw",
-        dryrun: bool = False, mesh=None):
+        dryrun: bool = False, mesh=None, mode: str = "gram"):
     if mesh is None:
         from repro.launch.mesh import make_host_mesh
         mesh = make_host_mesh(jax.device_count(), 1)
@@ -71,7 +112,10 @@ def run(n: int = 64, t: int = 64, kind: str = "spdtw",
     n = ((n + n_dev - 1) // n_dev) * n_dev   # pad rows to device count
     w = np.asarray(band_mask(t, t, max(t // 8, 1)), np.float32)
     with compat.set_mesh(mesh):
-        job = gram_job(mesh, w, kind=kind)
+        if mode == "knn":
+            job = knn_job(mesh, w, kind=kind)
+        else:
+            job = gram_job(mesh, w, kind=kind)
         if dryrun:
             xs = jax.ShapeDtypeStruct((n, t), jnp.float32)
             ys = jax.ShapeDtypeStruct((n, t), jnp.float32)
@@ -83,12 +127,16 @@ def run(n: int = 64, t: int = 64, kind: str = "spdtw",
             if isinstance(ca, list):     # jax 0.4.x: one dict per module
                 ca = ca[0] if ca else {}
             ma = compiled.memory_analysis()
-            return {"flops_per_device": float(ca.get("flops", 0.0)),
+            return {"mode": mode,
+                    "flops_per_device": float(ca.get("flops", 0.0)),
                     "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
                     "temp_bytes": ma.temp_size_in_bytes,
                     "devices": n_dev, "pairs": n * n}
         rng = np.random.default_rng(0)
         X = jnp.asarray(rng.normal(size=(n, t)).astype(np.float32))
+        if mode == "knn":
+            nn, dist = job(X, X)
+            return np.asarray(nn), np.asarray(dist)
         G = job(X, X)
         return np.asarray(G)
 
@@ -102,6 +150,7 @@ if __name__ == "__main__":
     ap.add_argument("--t", type=int, default=128)
     ap.add_argument("--kind", default="spdtw",
                     choices=("spdtw", "dtw", "sp_krdtw"))
+    ap.add_argument("--mode", default="gram", choices=("gram", "knn"))
     args = ap.parse_args()
     if args.dryrun:
         # production mesh needs the fake-device env BEFORE jax init;
@@ -109,9 +158,15 @@ if __name__ == "__main__":
         # caller set it (launch/dryrun_gram.sh does)
         from repro.launch.mesh import make_production_mesh
         mesh = make_production_mesh(multi_pod=args.multi_pod)
-        out = run(args.n, args.t, args.kind, dryrun=True, mesh=mesh)
+        out = run(args.n, args.t, args.kind, dryrun=True, mesh=mesh,
+                  mode=args.mode)
     else:
-        out = run(args.n, args.t, args.kind)
-        out = {"shape": out.shape, "sym_err": float(
-            np.abs(out - out.T).max())}
+        out = run(args.n, args.t, args.kind, mode=args.mode)
+        if args.mode == "knn":
+            nn, dist = out
+            out = {"queries": nn.shape[0],
+                   "self_match": float(np.mean(nn == np.arange(len(nn))))}
+        else:
+            out = {"shape": out.shape, "sym_err": float(
+                np.abs(out - out.T).max())}
     print(out)

@@ -1,0 +1,222 @@
+"""Streaming SP-DTW similarity-search driver (DESIGN.md §4/§8).
+
+The serving side of the paper plane: a fixed corpus is indexed once
+(``Measure.build_index`` — envelopes, support windows, block-sparse tile
+plan), then a stream of 1-NN queries is served continuous-batching style,
+mirroring ``launch/serve.py``'s bookkeeping: requests join at the next
+step boundary, each step runs one cascade batch, finished slots free up
+for the next arrivals. Every batch runs bounds -> survivors -> fused
+masked DP (``kernels.ops.knn_cascade``) and reports per-stage prune
+rates; results are bit-identical to the full-Gram path.
+
+  PYTHONPATH=src python -m repro.launch.search --dataset CBF --queries 64
+  PYTHONPATH=src python -m repro.launch.search --workload retrieval --check
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SparsePaths, learn_sparse_paths, make_measure
+
+_STAT_KEYS = ("stage1_prune", "stage2_prune", "stage3_prune",
+              "pre_dp_prune", "dp_abandoned")
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """One served query: neighbour, distance, and stream bookkeeping."""
+    rid: int
+    nn: int
+    dist: float
+    label: Optional[int]
+    submitted_step: int
+    completed_step: int
+
+    @property
+    def wait_steps(self) -> int:
+        return self.completed_step - self.submitted_step
+
+
+class SearchEngine:
+    """Exact 1-NN engine over a fixed, indexed corpus.
+
+    Construction builds the corpus index once (the expensive part:
+    envelopes + tile plan); ``search`` then serves arbitrarily many query
+    batches against it through the lower-bound cascade.
+    """
+
+    def __init__(self, corpus, labels=None, *, kind: str = "spdtw",
+                 sp: Optional[SparsePaths] = None, impl: str = "auto",
+                 seed_k: int = 2, prefix_frac: float = 0.5):
+        corpus = jnp.asarray(corpus, jnp.float32)
+        self.measure = make_measure(kind, corpus.shape[1], sp=sp)
+        self.index = self.measure.build_index(corpus)
+        self.labels = None if labels is None else np.asarray(labels)
+        self.impl = impl
+        self.seed_k = seed_k
+        self.prefix_frac = prefix_frac
+        self._stats_acc: Dict[str, float] = {k: 0.0 for k in _STAT_KEYS}
+        self._pairs_total = 0
+        self._pairs_dp = 0
+        self._queries = 0
+
+    def search(self, queries) -> Tuple[np.ndarray, np.ndarray]:
+        """(Nq, T) -> (nn_idx, nn_dist); prune stats accumulate on self."""
+        from repro.kernels import ops
+        Q = jnp.asarray(queries, jnp.float32)
+        nn, dist, st = ops.knn_cascade(
+            Q, self.index, impl=self.impl, seed_k=self.seed_k,
+            prefix_frac=self.prefix_frac, return_stats=True)
+        n = Q.shape[0]
+        for k in _STAT_KEYS:
+            self._stats_acc[k] += float(st[k]) * n
+        self._queries += n
+        self._pairs_total += n * self.index.size
+        self._pairs_dp += int(st["dp_pairs"])
+        return np.asarray(nn), np.asarray(dist)
+
+    def stats(self) -> Dict[str, float]:
+        """Aggregated per-stage prune rates over everything served."""
+        if self._queries == 0:
+            return {}
+        out = {k: v / self._queries for k, v in self._stats_acc.items()}
+        out["queries"] = self._queries
+        out["pairs_total"] = self._pairs_total
+        out["pairs_dp"] = self._pairs_dp
+        out["pre_dp_prune_overall"] = 1.0 - self._pairs_dp / max(
+            self._pairs_total, 1)
+        return out
+
+
+def stream_search(engine: SearchEngine, queries: Sequence[np.ndarray],
+                  batch: int = 16,
+                  arrivals_per_step: Optional[int] = None
+                  ) -> List[QueryResult]:
+    """Serve a query stream with continuous batching (serve.py-style).
+
+    Requests arrive ``arrivals_per_step`` at a time (None = all up front)
+    and join the pending queue; each step drains up to ``batch`` of them
+    into one cascade call. A request admitted while a step is in flight
+    waits for the next boundary — the same join-at-step-boundary rule as
+    the decode loop in ``launch/serve.py``.
+    """
+    if arrivals_per_step is not None and arrivals_per_step <= 0:
+        raise ValueError("arrivals_per_step must be positive (or None for "
+                         "all-up-front admission)")
+    queries = list(queries)
+    n = len(queries)
+    pending: deque = deque()
+    results: List[QueryResult] = []
+    arrived = 0
+    step = 0
+    while arrived < n or pending:
+        # admissions for this step boundary
+        take = n - arrived if arrivals_per_step is None else min(
+            arrivals_per_step, n - arrived)
+        for _ in range(take):
+            pending.append((arrived, step))
+            arrived += 1
+        if not pending:
+            step += 1
+            continue
+        slot = [pending.popleft() for _ in range(min(batch, len(pending)))]
+        Q = np.stack([queries[rid] for rid, _ in slot])
+        nn, dist = engine.search(Q)
+        for row, (rid, sub) in enumerate(slot):
+            lab = None if engine.labels is None else int(
+                engine.labels[nn[row]])
+            results.append(QueryResult(rid=rid, nn=int(nn[row]),
+                                       dist=float(dist[row]), label=lab,
+                                       submitted_step=sub,
+                                       completed_step=step))
+        step += 1
+    return sorted(results, key=lambda r: r.rid)
+
+
+def _make_workload(ds, kind: str, n_queries: int, seed: int) -> np.ndarray:
+    """Query stream: "classify" takes test-split series; "retrieval" takes
+    warped + renoised corpus entries (the similarity-search case where the
+    query has a genuinely close neighbour)."""
+    rng = np.random.default_rng(seed)
+    if kind == "classify":
+        reps = -(-n_queries // len(ds.X_test))
+        return np.tile(ds.X_test, (reps, 1))[:n_queries]
+    T = ds.X_train.shape[1]
+    src = rng.integers(0, len(ds.X_train), n_queries)
+    out = np.empty((n_queries, T), np.float32)
+    for i, s in enumerate(src):
+        idx = np.sort(np.clip(np.arange(T) + rng.integers(-3, 4, T), 0, T - 1))
+        q = ds.X_train[s][idx] + 0.1 * rng.normal(size=T)
+        out[i] = (q - q.mean()) / (q.std() + 1e-8)
+    return out
+
+
+def run(dataset: str = "CBF", workload: str = "retrieval",
+        n_queries: int = 64, batch: int = 16, theta: float = 8.0,
+        n_sp_train: int = 32, impl: str = "auto", seed: int = 0,
+        arrivals_per_step: Optional[int] = None, check: bool = False,
+        n_train: int = 128) -> dict:
+    from repro.data import load
+    ds = load(dataset, n_train=n_train)
+    Xtr = jnp.asarray(ds.X_train)
+    sp = learn_sparse_paths(Xtr[:n_sp_train], theta=theta)
+    engine = SearchEngine(Xtr, ds.y_train, sp=sp, impl=impl)
+    queries = _make_workload(ds, workload, n_queries, seed)
+
+    t0 = time.time()
+    results = stream_search(engine, queries, batch=batch,
+                            arrivals_per_step=arrivals_per_step)
+    jax.block_until_ready(engine.index.corpus)
+    dt = time.time() - t0
+
+    out = {
+        "dataset": dataset, "workload": workload, "backend":
+        jax.default_backend(), "n_queries": len(results), "batch": batch,
+        "corpus": engine.index.size, "theta": theta,
+        "support_cells_frac": sp.n_cells / (ds.T * ds.T),
+        "wall_s": dt, "queries_per_s": len(results) / dt,
+        "mean_wait_steps": float(np.mean([r.wait_steps for r in results])),
+        "stats": engine.stats(),
+    }
+    if check:
+        # exactness: bit-identical neighbours vs the dense full-Gram path
+        dense = np.asarray(engine.measure.cross(
+            jnp.asarray(queries), Xtr, block=64))
+        nn_dense = np.argmin(dense, axis=1)
+        nn_got = np.array([r.nn for r in results])
+        out["exact_match"] = bool((nn_got == nn_dense).all())
+        assert out["exact_match"], "cascade diverged from full-Gram 1-NN"
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="CBF")
+    ap.add_argument("--workload", default="retrieval",
+                    choices=("retrieval", "classify"))
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--theta", type=float, default=8.0)
+    ap.add_argument("--impl", default="auto")
+    ap.add_argument("--arrivals", type=int, default=None,
+                    help="arrivals per step (default: all up front)")
+    ap.add_argument("--check", action="store_true",
+                    help="verify against the dense full-Gram path")
+    args = ap.parse_args()
+    out = run(args.dataset, args.workload, args.queries, args.batch,
+              theta=args.theta, impl=args.impl,
+              arrivals_per_step=args.arrivals, check=args.check)
+    print(json.dumps(out, indent=1, default=float))
+
+
+if __name__ == "__main__":
+    main()

@@ -97,3 +97,43 @@ def test_dedup_pipeline():
     kept, idx = dedup_by_spdtw(X, threshold=0.05)
     assert len(kept) == 5  # exact near-dupes removed
     assert set(idx.tolist()) == set(range(5))
+
+
+# ------------------------------------------------- 1-NN scoring mechanics
+def test_knn_predict_tie_takes_first_index():
+    """argmin on duplicate distances resolves to the lowest train index —
+    the tie rule the cascade must reproduce bit-identically."""
+    from repro.classify import knn_predict
+    cross = jnp.asarray([[1.0, 1.0, 2.0],
+                         [3.0, 0.5, 0.5]])
+    y = jnp.asarray([7, 8, 9])
+    pred = np.asarray(knn_predict(cross, y))
+    assert pred.tolist() == [7, 8]                 # first minimum wins
+
+
+def test_loo_error_never_matches_self():
+    """All-zero train cross: without self-exclusion every point would match
+    itself (error 0); with it, each matches the first *other* point."""
+    n = 5
+    y = np.arange(n)                               # all labels distinct
+    err = loo_error(jnp.zeros((n, n)), y)
+    assert err == 1.0                              # never the own label
+    # with self excluded every row matches train index 0 (row 0 matches 1):
+    # predictions are all label 0, so only the two 0-labelled points hit
+    y2 = np.array([0, 0, 1, 2, 3])
+    err2 = loo_error(jnp.zeros((n, n)), y2)
+    assert err2 == pytest.approx(3 / 5)
+
+
+def test_normalize_grid_range_bounds():
+    from repro.core import normalize_grid
+    rng = np.random.default_rng(3)
+    counts = jnp.asarray(rng.integers(0, 50, (16, 16)).astype(np.float32))
+    p = np.asarray(normalize_grid(counts))
+    assert p.min() >= 0.0
+    assert p.max() < 1.0                           # strictly below 1 (Fig 3-d)
+    assert p.max() == pytest.approx(float(counts.max())
+                                    / (float(counts.max()) + 1.0))
+    # zero grid maps to zero, not NaN
+    z = np.asarray(normalize_grid(jnp.zeros((4, 4))))
+    assert (z == 0).all()

@@ -256,3 +256,50 @@ def test_corr_euclid_theorem():
     c = float(corr(x, y))
     d2 = float(euclidean(x, y)) ** 2
     np.testing.assert_allclose(c, 1 - d2 / (2 * T), atol=1e-3)
+
+
+# ------------------------------------------- backtrack ties / feasibility
+def test_backtrack_tie_prefers_diag_then_up():
+    """Regression for the tie convention diag > up > left (the collapsed
+    row-index where must keep it): all-equal D walks the pure diagonal;
+    an up/left-only tie steps up."""
+    from repro.core import backtrack
+    T = 5
+    D = jnp.zeros((T, T), jnp.float32)             # every move ties
+    mask = np.asarray(backtrack(D))
+    assert np.array_equal(mask, np.eye(T, dtype=bool))
+    # up and left tie, diag is worse -> up must win
+    D2 = jnp.asarray(np.array([[5.0, 1.0], [1.0, 2.0]], np.float32))
+    m2 = np.asarray(backtrack(D2))
+    want = np.zeros((2, 2), bool)
+    want[1, 1] = want[0, 1] = want[0, 0] = True    # (1,1) -> up -> left
+    assert np.array_equal(m2, want)
+
+
+def test_backtrack_matches_oracle_on_tied_costs():
+    """Constant series produce an all-zero cost matrix — maximal ties; the
+    jax backtrack and the numpy oracle must pick identical paths."""
+    x = jnp.ones((9,), jnp.float32)
+    got = np.asarray(optimal_path_mask(x, x))
+    ref = dtw_path(np.asarray(x), np.asarray(x))
+    assert np.array_equal(got, ref)
+
+
+def test_path_is_feasible_edge_cases():
+    # single-cell grid: trivially feasible
+    assert bool(path_is_feasible(jnp.ones((1, 1), bool)))
+    # empty support: no path
+    assert not bool(path_is_feasible(jnp.zeros((4, 4), bool)))
+    # only the start corner in a larger grid: end corner unreachable
+    sup = np.zeros((4, 4), bool)
+    sup[0, 0] = True
+    assert not bool(path_is_feasible(jnp.asarray(sup)))
+    # start+end corners without a connecting band: still infeasible
+    sup[3, 3] = True
+    assert not bool(path_is_feasible(jnp.asarray(sup)))
+    # the diagonal connects them
+    assert bool(path_is_feasible(jnp.asarray(sup | np.eye(4, dtype=bool))))
+    # a monotone staircase is feasible even without diagonal moves
+    stair = np.zeros((3, 3), bool)
+    stair[0, :2] = stair[1, 1] = stair[1, 2] = stair[2, 2] = True
+    assert bool(path_is_feasible(jnp.asarray(stair)))
