@@ -1,0 +1,145 @@
+"""Nearest-centroid serving vs exact cascade 1-NN (DESIGN.md §10).
+
+The centroid workload's contract: collapsing 1-NN over the N-series train
+corpus into nearest-centroid over k = n_classes * n_per_class soft-SP-DTW
+barycenters must cost a fraction of the query wall-clock while staying
+within 2 accuracy points of cascade 1-NN on the synthetic-UCR families.
+This benchmark measures exactly that, per family:
+
+  * fit: ``cluster.fit_class_centroids`` (soft-SP-DTW barycenter per
+    class — Adam on the expected-alignment VJP over the learned
+    block-sparse support), one-off, reported but not part of query cost;
+  * query: (a) the PR-2 exact cascade (``kernels.ops.knn_cascade``),
+    (b) nearest-centroid (k masked DPs/query), same test queries;
+  * exactness: the *centroid-seeded* cascade must return bit-identical
+    neighbours to the plain cascade and the dense full-Gram argmin
+    (``cascade_exact`` — the flag ``benchmarks/check_artifacts.py``
+    gates on).
+
+Acceptance (asserted here in non-smoke runs): per family,
+``err_centroid - err_1nn <= 0.02`` and ``speedup >= 2``. Results land in
+``BENCH_centroid.json`` at the repo root (never from --smoke runs) and in
+the benchmarks.run artifact dir.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+# per-family centroid counts: families whose classes are multi-modal under
+# the learned support get 2 barycenters per class
+N_PER_CLASS = {"CBF": 1, "Trace": 2, "ECG": 1}
+
+
+def run(fast: bool = True, smoke: bool = False, theta: float = 8.0,
+        gamma: float = 0.1, reps: int = 3):
+    from repro.classify import error_rate
+    from repro.cluster import fit_class_centroids, nearest_centroid
+    from repro.core import learn_sparse_paths, make_measure
+    from repro.data import load
+    from repro.kernels import knn_cascade
+    from .common import bench_timer
+
+    if smoke:
+        families = ("CBF",)
+        n_train, n_test, n_sp, steps, kwT = 24, 16, 12, 10, {"T": 32}
+    elif fast:
+        families = ("CBF", "Trace", "ECG")
+        n_train, n_test, n_sp, steps, kwT = 96, 64, 32, 40, {}
+    else:
+        families = ("CBF", "Trace", "ECG")
+        n_train, n_test, n_sp, steps, kwT = 128, 96, 32, 60, {}
+
+    out = {"backend": jax.default_backend(),
+           "shape": {"corpus": n_train, "queries": n_test,
+                     "theta": theta, "gamma": gamma,
+                     "fit_steps": steps},
+           "families": {}}
+    for name in families:
+        ds = load(name, n_train=n_train, n_test=n_test, **kwT)
+        T = ds.T
+        Xtr = jnp.asarray(ds.X_train)
+        Q = jnp.asarray(ds.X_test)
+        y_tr = np.asarray(ds.y_train)
+        y_te = np.asarray(ds.y_test)
+        sp = learn_sparse_paths(Xtr[:n_sp], theta=theta)
+        m = make_measure("spdtw", T, sp=sp)
+        index = m.build_index(Xtr)
+        npc = 1 if smoke else N_PER_CLASS.get(name, 1)
+
+        from .common import timed
+        model, fit_s = timed(
+            lambda: fit_class_centroids(Xtr, y_tr, sp.weights, gamma,
+                                        n_per_class=npc, steps=steps))
+
+        # --- query paths, same test queries ---
+        def cascade():
+            return knn_cascade(Q, index)
+
+        def centroid():
+            return nearest_centroid(Q, model)
+
+        t_casc = bench_timer(cascade, reps)
+        t_cent = bench_timer(centroid, reps)
+
+        nn, _ = cascade()
+        err_1nn = float(error_rate(jnp.asarray(y_tr)[nn],
+                                   jnp.asarray(y_te)))
+        c_idx, _ = centroid()
+        err_cent = float(error_rate(jnp.asarray(model.labels)[c_idx],
+                                    jnp.asarray(y_te)))
+
+        # exactness of the centroid-seeded cascade (vs plain + full Gram)
+        nn_seed, _ = knn_cascade(Q, index, centroid_model=model)
+        nn_full = jnp.argmin(m.cross(Q, Xtr), axis=1)
+        exact = bool(np.array_equal(np.asarray(nn_seed), np.asarray(nn))
+                     and np.array_equal(np.asarray(nn_seed),
+                                        np.asarray(nn_full)))
+        assert exact, f"centroid-seeded cascade diverged on {name}"
+
+        rec = {
+            "T": T, "n_classes": ds.n_classes, "n_centroids": model.k,
+            "fit_s": fit_s,
+            "cascade_s": t_casc, "centroid_s": t_cent,
+            "speedup": t_casc / t_cent,
+            "cascade_us_per_query": t_casc / n_test * 1e6,
+            "centroid_us_per_query": t_cent / n_test * 1e6,
+            "err_1nn": err_1nn, "err_centroid": err_cent,
+            "acc_delta": err_cent - err_1nn,
+            "cascade_exact": exact,
+        }
+        out["families"][name] = rec
+        print(f"[centroid_speedup] {name}: 1-NN err {err_1nn:.3f} "
+              f"({t_casc*1e3:.0f} ms) vs centroid err {err_cent:.3f} "
+              f"({t_cent*1e3:.0f} ms, {rec['speedup']:.1f}x, "
+              f"k={model.k}), seeded cascade exact", flush=True)
+
+    out["max_acc_delta"] = max(
+        r["acc_delta"] for r in out["families"].values())
+    out["min_speedup"] = min(
+        r["speedup"] for r in out["families"].values())
+    if not smoke:
+        # the acceptance headline: within 2 points at >= 2x, per family
+        assert out["max_acc_delta"] <= 0.02 + 1e-9, \
+            f"nearest-centroid lost {out['max_acc_delta']:.3f} accuracy"
+        assert out["min_speedup"] >= 2.0, \
+            f"nearest-centroid only {out['min_speedup']:.2f}x over cascade"
+        with open(os.path.join(ROOT, "BENCH_centroid.json"), "w") as f:
+            json.dump(out, f, indent=1)
+    return out
+
+
+def main(fast: bool = True):
+    out = run(fast=fast)
+    print(json.dumps(out, indent=1))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,170 @@
+"""Benchmark-artifact gate: validate every committed BENCH_*.json and
+artifacts/bench/*.json against a small schema.
+
+Committed benchmark artifacts are load-bearing (the paper-plane claims —
+speedup at exactness — live in them), so CI refuses anything malformed:
+
+  * the file must parse as JSON;
+  * every number in it, at any nesting depth, must be finite (a NaN/Inf
+    that ``json.dump`` happily wrote is a sure sign a benchmark recorded
+    a broken run);
+  * per-artifact required keys must be present;
+  * exactness flags must be ``true`` and parity errors below tolerance —
+    a benchmark that traded correctness for speed never lands.
+
+Run as a module (CI does): ``PYTHONPATH=src python -m
+benchmarks.check_artifacts`` — exits non-zero listing every violation.
+Guarded by a tier-1 test (``tests/test_artifacts.py``) so the gate
+itself can't rot.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+import sys
+from typing import Callable, Dict, List, Tuple
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# per-artifact schema: (required key paths, predicate checks). Key paths
+# use "/" nesting; "*" matches every key at that level.
+Check = Tuple[str, Callable[[float], bool], str]
+
+SCHEMAS: Dict[str, Dict] = {
+    "BENCH_gram.json": {
+        "required": ["backend", "speedup", "parity_rel_err", "alg1_rel_err",
+                     "dense_us_per_pair", "fused_us_per_pair"],
+        "checks": [
+            ("speedup", lambda v: v > 1.0, "fused engine must beat dense"),
+            ("parity_rel_err", lambda v: v < 1e-4, "parity broken"),
+            ("alg1_rel_err", lambda v: v < 1e-4, "Algorithm-1 parity broken"),
+        ],
+    },
+    "BENCH_search.json": {
+        "required": ["backend", "workloads", "pre_dp_prune"],
+        "checks": [
+            ("workloads/*/exact", lambda v: v is True,
+             "cascade exactness flag must be true"),
+            ("workloads/*/speedup", lambda v: v > 0, "non-positive speedup"),
+        ],
+    },
+    "BENCH_centroid.json": {
+        "required": ["backend", "families", "max_acc_delta", "min_speedup"],
+        "checks": [
+            ("families/*/cascade_exact", lambda v: v is True,
+             "centroid-seeded cascade exactness flag must be true"),
+            ("max_acc_delta", lambda v: v <= 0.02 + 1e-9,
+             "nearest-centroid accuracy gap above 2 points"),
+            ("min_speedup", lambda v: v >= 2.0,
+             "nearest-centroid speedup below 2x"),
+        ],
+    },
+}
+
+
+def _walk_numbers(obj, path=""):
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            yield from _walk_numbers(v, f"{path}/{k}" if path else str(k))
+    elif isinstance(obj, (list, tuple)):
+        for i, v in enumerate(obj):
+            yield from _walk_numbers(v, f"{path}[{i}]")
+    elif isinstance(obj, bool):
+        return
+    elif isinstance(obj, (int, float)):
+        yield path, float(obj)
+
+
+def _lookup(obj, key_path: str):
+    """Resolve a '/'-nested key path; '*' fans out. Yields (path, value);
+    a missing segment yields (path, KeyError)."""
+    parts = key_path.split("/")
+
+    def rec(o, idx, prefix):
+        if idx == len(parts):
+            yield prefix, o
+            return
+        p = parts[idx]
+        if not isinstance(o, dict):
+            yield prefix + "/" + p, KeyError(p)
+            return
+        keys = list(o.keys()) if p == "*" else [p]
+        for k in keys:
+            if k not in o:
+                yield (prefix + "/" + k).lstrip("/"), KeyError(k)
+            else:
+                yield from rec(o[k], idx + 1,
+                               (prefix + "/" + k).lstrip("/"))
+
+    yield from rec(obj, 0, "")
+
+
+def check_file(path: str) -> List[str]:
+    """Validate one artifact; returns a list of violation strings."""
+    name = os.path.basename(path)
+    errors: List[str] = []
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"{name}: unreadable JSON ({e})"]
+    for where, v in _walk_numbers(data):
+        if not math.isfinite(v):
+            errors.append(f"{name}: non-finite number at {where} ({v})")
+    schema = SCHEMAS.get(name)
+    if schema is None:
+        return errors
+    for key in schema.get("required", ()):
+        if key not in data:
+            errors.append(f"{name}: missing required key {key!r}")
+    for key_path, pred, msg in schema.get("checks", ()):
+        for where, v in _lookup(data, key_path):
+            if isinstance(v, KeyError):
+                errors.append(f"{name}: missing key at {where}")
+            elif not pred(v):
+                errors.append(f"{name}: {msg} ({where} = {v!r})")
+    return errors
+
+
+def collect_artifacts(root: str = ROOT) -> List[str]:
+    """Every committed benchmark artifact: repo-root BENCH_*.json plus
+    artifacts/bench/*.json."""
+    paths = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+    paths += sorted(glob.glob(os.path.join(root, "artifacts", "bench",
+                                           "*.json")))
+    return paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=ROOT,
+                    help="repo root to scan (default: this checkout)")
+    args = ap.parse_args(argv)
+    paths = collect_artifacts(args.root)
+    if not paths:
+        print(f"check_artifacts: no artifacts under {args.root}",
+              file=sys.stderr)
+        return 1
+    failures = 0
+    for p in paths:
+        errs = check_file(p)
+        rel = os.path.relpath(p, args.root)
+        if errs:
+            failures += len(errs)
+            for e in errs:
+                print(f"FAIL {rel}: {e}")
+        else:
+            print(f"ok   {rel}")
+    if failures:
+        print(f"\ncheck_artifacts: {failures} violation(s) in "
+              f"{len(paths)} artifact(s)", file=sys.stderr)
+        return 1
+    print(f"\ncheck_artifacts: {len(paths)} artifact(s) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,20 +7,25 @@ harness contract.
 
 Full-protocol runs: ``python -m benchmarks.run --full`` (slower, bigger
 test splits). ``--smoke`` runs tiny shapes in seconds — a CI-grade sanity
-sweep of the kernel walltime, fused-Gram and cascade benches (the paper
-tables are skipped; smoke runs never overwrite the committed BENCH_*.json
-artifacts). Artifacts land in artifacts/bench/*.json.
+sweep of the kernel walltime, fused-Gram, cascade and centroid benches
+(the paper tables are skipped; smoke runs never overwrite the committed
+BENCH_*.json artifacts, and their per-bench artifacts go to a tempdir by
+default so a CI run can never dirty the tree). Artifacts land in
+artifacts/bench/*.json.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import tempfile
 import time
 
 import numpy as np
 
-ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+_DEFAULT_ART = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                            "bench")
+ART = _DEFAULT_ART
 
 
 def bench_kernel_walltime(B: int = 64, T: int = 128):
@@ -70,7 +75,12 @@ def main(argv=None):
     fast = not args.full
     smoke = args.smoke
     skip = set(args.skip.split(",")) if args.skip else set()
-    os.makedirs(ART, exist_ok=True)
+    art = ART
+    if smoke and os.path.abspath(art) == os.path.abspath(_DEFAULT_ART):
+        # repo hygiene: smoke artifacts never land in the tree (CI runs
+        # must leave the checkout clean); monkeypatching ART redirects
+        art = tempfile.mkdtemp(prefix="bench-smoke-")
+    os.makedirs(art, exist_ok=True)
 
     results = {}
     timings = {}
@@ -82,26 +92,29 @@ def main(argv=None):
         t0 = time.time()
         results[name] = fn()
         timings[name] = time.time() - t0
-        with open(os.path.join(ART, f"{name}.json"), "w") as f:
+        with open(os.path.join(art, f"{name}.json"), "w") as f:
             json.dump(results[name], f, indent=1, default=str)
 
     from . import search_cascade
     if smoke:
-        # tiny shapes end to end: kernels, fused Gram, cascade; the paper
-        # tables (minutes of meta-parameter search) are skipped
-        from . import gram_speedup
+        # tiny shapes end to end: kernels, fused Gram, cascade, centroid;
+        # the paper tables (minutes of meta-parameter search) are skipped
+        from . import centroid_speedup, gram_speedup
         run_bench("kernel_walltime", lambda: bench_kernel_walltime(B=8, T=32))
         run_bench("gram_speedup",
                   lambda: gram_speedup.run(fast=True, smoke=True))
         run_bench("search_cascade",
                   lambda: search_cascade.run(fast=True, smoke=True))
+        run_bench("centroid_speedup",
+                  lambda: centroid_speedup.run(fast=True, smoke=True))
     else:
         run_bench("kernel_walltime", bench_kernel_walltime)
 
-        from . import (gram_speedup, occupancy_fig, table2_knn, table4_svm,
-                       table6_speedup)
+        from . import (centroid_speedup, gram_speedup, occupancy_fig,
+                       table2_knn, table4_svm, table6_speedup)
         run_bench("gram_speedup", lambda: gram_speedup.run(fast=fast))
         run_bench("search_cascade", lambda: search_cascade.run(fast=fast))
+        run_bench("centroid_speedup", lambda: centroid_speedup.run(fast=fast))
         run_bench("table6_speedup", lambda: table6_speedup.run(fast=fast))
         run_bench("table2_knn", lambda: table2_knn.run(fast=fast))
         run_bench("table4_svm", lambda: table4_svm.run(fast=fast))
@@ -138,6 +151,13 @@ def main(argv=None):
             print(f"search/{wl}/pre_dp_prune,"
                   f"{r['cascade_us_per_query']:.1f},"
                   f"{100*r['pre_dp_prune']:.0f}%")
+    if "centroid_speedup" in results:
+        for fam, r in results["centroid_speedup"]["families"].items():
+            print(f"centroid/{fam},{r['centroid_us_per_query']:.1f},"
+                  f"{r['speedup']:.2f}x")
+            print(f"centroid/{fam}/acc_delta,"
+                  f"{r['centroid_us_per_query']:.1f},"
+                  f"{100*r['acc_delta']:.1f}pts")
     if "table6_speedup" in results:
         avg = results["table6_speedup"]["average_speedup"]
         for k, v in avg.items():
@@ -156,7 +176,7 @@ def main(argv=None):
         print(f"roofline/cells_ok,{r['ok']},count")
         print(f"roofline/cells_skipped,{r['skipped']},count")
         print(f"roofline/cells_error,{r['errors']},count")
-    print("\nall benchmark artifacts: artifacts/bench/*.json")
+    print(f"\nall benchmark artifacts: {os.path.join(art, '*.json')}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,32 @@
+"""Nearest-centroid classification (DESIGN.md §10).
+
+The evaluation-harness face of the centroid workload: per query, k hard
+SP-DTW DPs against the fitted class centroids (``cluster.CentroidModel``)
+instead of a corpus-sized 1-NN cascade. Approximate by design — the
+benchmark contract (``benchmarks/centroid_speedup.py``) holds it to
+within 2 accuracy points of cascade 1-NN at >= 2x query wall-clock.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster.kmeans import CentroidModel, nearest_centroid
+from .knn import error_rate
+
+
+def nearest_centroid_predict(Q, model: CentroidModel,
+                             impl: str = "auto") -> jnp.ndarray:
+    """Predicted class labels for queries Q (Nq, T): the label of the
+    nearest centroid under hard SP-DTW."""
+    assert model.labels is not None, "model has no class labels"
+    idx, _ = nearest_centroid(Q, model, impl=impl)
+    return jnp.asarray(model.labels)[idx]
+
+
+def centroid_error_series(X_test, y_test, model: CentroidModel,
+                          impl: str = "auto") -> float:
+    """Nearest-centroid classification error straight from raw series."""
+    pred = nearest_centroid_predict(jnp.asarray(X_test, jnp.float32),
+                                    model, impl=impl)
+    return error_rate(pred, jnp.asarray(np.asarray(y_test)))

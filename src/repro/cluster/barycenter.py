@@ -1,0 +1,79 @@
+"""Soft-SP-DTW barycenter averaging (DESIGN.md §10).
+
+A barycenter under the smoothed sparsified measure is the minimizer of
+
+    F(z) = sum_b a_b * soft_spdtw(z, x_b) / sum_b a_b
+
+over the member set {x_b} with non-negative member weights a_b. F is
+differentiable through the custom VJP of the measure layer
+(``kernels.soft_block.soft_spdtw_batch``: block-sparse active-tile
+forward, expected-alignment backward), so the centroid is fitted by plain
+first-order optimization — Adam via the in-house ``train.optimizer.AdamW``
+(weight decay off), ``lax.scan`` over steps. Everything here is pure and
+traceable: ``soft_barycenter`` runs unchanged inside jit / vmap /
+shard_map (the sharded fitting job in ``launch/cluster.py`` vmaps it over
+a centroid stripe), provided the weight grid is a host-concrete
+compile-time artifact — which the learned support always is (DESIGN.md
+§2).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.soft_block import soft_spdtw_batch
+from repro.train.optimizer import AdamW
+
+
+def barycenter_loss(z: jnp.ndarray, X: jnp.ndarray, weights: jnp.ndarray,
+                    gamma: float,
+                    sample_weights: Optional[jnp.ndarray] = None
+                    ) -> jnp.ndarray:
+    """Weighted mean soft-SP-DTW from candidate centroid ``z`` (T,) to the
+    member set ``X`` (B, T). An all-zero ``sample_weights`` row (a padding
+    centroid in the sharded job) yields loss 0 with zero gradient."""
+    zb = jnp.broadcast_to(z, X.shape)
+    d = soft_spdtw_batch(zb, X, weights, float(gamma))
+    if sample_weights is None:
+        return jnp.mean(d)
+    sw = sample_weights.astype(d.dtype)
+    return jnp.sum(d * sw) / jnp.maximum(jnp.sum(sw), 1e-8)
+
+
+def soft_barycenter(X: jnp.ndarray, weights: jnp.ndarray, gamma: float = 0.1,
+                    *, init: Optional[jnp.ndarray] = None, steps: int = 100,
+                    lr: float = 0.05,
+                    sample_weights: Optional[jnp.ndarray] = None,
+                    optimizer: Optional[AdamW] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fit one barycenter by Adam on the soft-SP-DTW VJP.
+
+    X: (B, T) members; ``init`` defaults to the (weighted) Euclidean mean.
+    Returns (centroid (T,), per-step loss history (steps,)). Pure and
+    traceable; callers jit (the sharded job in ``launch/cluster.py``
+    does).
+    """
+    X = jnp.asarray(X, jnp.float32)
+    if init is None:
+        if sample_weights is None:
+            z0 = jnp.mean(X, axis=0)
+        else:
+            sw = jnp.asarray(sample_weights, jnp.float32)
+            z0 = jnp.sum(X * sw[:, None], axis=0) / \
+                jnp.maximum(jnp.sum(sw), 1e-8)
+    else:
+        z0 = jnp.asarray(init, jnp.float32)
+    opt = optimizer or AdamW(lr=lr, weight_decay=0.0)
+    state = opt.init(z0)
+
+    def step(carry, _):
+        z, st = carry
+        loss, g = jax.value_and_grad(barycenter_loss)(
+            z, X, weights, gamma, sample_weights)
+        z2, st2 = opt.update(g, st, z)
+        return (z2, st2), loss
+
+    (z, _), losses = jax.lax.scan(step, (z0, state), None, length=steps)
+    return z, losses

@@ -1,0 +1,171 @@
+"""Centroid workloads on the sparsified search space (DESIGN.md §10).
+
+The serving thesis one level up: 1-NN pays (bounded, pruned, but still
+corpus-sized) work per query; k centroids collapse that to k masked DPs.
+This module owns the centroid *models*:
+
+  * ``soft_kmeans``       — k-means under SP-DTW: hard block-sparse Gram
+                            assignment (``kernels.ops.spdtw_gram``),
+                            soft-SP-DTW barycenter update (Adam on the
+                            expected-alignment VJP, warm-started from the
+                            previous centroid);
+  * ``fit_class_centroids`` — the supervised variant: ``n_per_class``
+                            centroids per class label (1 = one barycenter
+                            per class; >1 = within-class k-means);
+  * ``CentroidModel``     — frozen result: centroids, their class labels,
+                            and per-centroid *medoids* (the corpus entry
+                            nearest each centroid) — the exact-candidate
+                            handle the centroid-seeded cascade needs
+                            (``kernels.ops.knn_cascade``).
+
+Nearest-centroid *classification* wrappers live in
+``classify/centroid.py``; the sharded fitting job in
+``launch/cluster.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.occupancy import (BlockSparsePaths, block_sparsify,
+                                  default_tile)
+from repro.kernels import ops
+from .barycenter import soft_barycenter
+
+
+@dataclasses.dataclass(frozen=True)
+class CentroidModel:
+    """Fitted centroid set over a fixed weight grid.
+
+    centroids: (k, T) f32; labels: (k,) int32 class label per centroid
+    (None for unsupervised fits); medoids: (k,) int32 index into the
+    *fitting corpus* of the member nearest each centroid (None when the
+    fit had no corpus handle); weights: the (T, T) learned grid the
+    distances are measured under; gamma: the smoothing temperature used
+    for fitting (serving distances are the *hard* SP-DTW).
+    """
+    centroids: jnp.ndarray
+    weights: jnp.ndarray
+    gamma: float
+    labels: Optional[np.ndarray] = None
+    medoids: Optional[np.ndarray] = None
+    bsp: Optional[BlockSparsePaths] = None
+
+    @property
+    def k(self) -> int:
+        return int(self.centroids.shape[0])
+
+    def distances(self, Q, impl: str = "auto") -> jnp.ndarray:
+        """(Nq, k) hard SP-DTW distances query -> centroid."""
+        return ops.spdtw_gram(jnp.asarray(Q, jnp.float32), self.centroids,
+                              bsp=self.bsp, weights=self.weights, impl=impl)
+
+
+def _model_bsp(weights, bsp=None) -> BlockSparsePaths:
+    if bsp is not None:
+        return bsp
+    w = np.asarray(weights, np.float32)
+    return block_sparsify(w, tile=default_tile(w.shape[0]))
+
+
+def nearest_centroid(Q, model: CentroidModel,
+                     impl: str = "auto") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-query (centroid index, hard SP-DTW distance) — k DPs/query."""
+    D = model.distances(Q, impl=impl)
+    idx = jnp.argmin(D, axis=1).astype(jnp.int32)
+    return idx, jnp.take_along_axis(D, idx[:, None], axis=1)[:, 0]
+
+
+def medoid_indices(X, centroids, weights, bsp=None,
+                   impl: str = "auto") -> np.ndarray:
+    """Corpus index of the member nearest each centroid (hard SP-DTW)."""
+    D = ops.spdtw_gram(jnp.asarray(centroids, jnp.float32),
+                       jnp.asarray(X, jnp.float32),
+                       bsp=bsp, weights=weights, impl=impl)
+    return np.asarray(jnp.argmin(D, axis=1), np.int32)
+
+
+def soft_kmeans(X, k: int, weights, gamma: float = 0.1, *, iters: int = 4,
+                steps: int = 30, lr: float = 0.05, seed: int = 0,
+                impl: str = "auto", bsp: Optional[BlockSparsePaths] = None
+                ) -> Tuple[CentroidModel, dict]:
+    """k-means under SP-DTW with soft-barycenter updates.
+
+    Assignment is the *hard* block-sparse Gram argmin (exact, cheap);
+    the update refits each centroid as a soft barycenter over its
+    members (one-hot sample weights keep the update shape static, so the
+    loop is scan/jit friendly), warm-started from the previous centroid.
+    Returns (model, info) with per-iteration inertia (mean distance to
+    the assigned centroid).
+    """
+    X = jnp.asarray(X, jnp.float32)
+    N = X.shape[0]
+    k = min(k, N)
+    rng = np.random.default_rng(seed)
+    bsp = _model_bsp(weights, bsp)
+    Z = X[jnp.asarray(rng.choice(N, size=k, replace=False))]
+    inertia = []
+    assign = None
+    for _ in range(iters):
+        D = ops.spdtw_gram(X, Z, bsp=bsp, weights=weights, impl=impl)
+        assign = jnp.argmin(D, axis=1)
+        inertia.append(float(jnp.mean(jnp.min(D, axis=1))))
+        A = (assign[None, :] == jnp.arange(k)[:, None])        # (k, N)
+        newZ = []
+        for c in range(k):
+            # empty cluster: zero weights -> zero grads, centroid frozen
+            zc, _ = soft_barycenter(X, weights, gamma, init=Z[c],
+                                    steps=steps, lr=lr,
+                                    sample_weights=A[c].astype(jnp.float32))
+            newZ.append(zc)
+        Z = jnp.stack(newZ)
+    model = CentroidModel(
+        centroids=Z, weights=jnp.asarray(weights, jnp.float32),
+        gamma=float(gamma), labels=None,
+        medoids=medoid_indices(X, Z, weights, bsp=bsp, impl=impl), bsp=bsp)
+    return model, {"inertia": inertia,
+                   "assign": np.asarray(assign, np.int32)}
+
+
+def fit_class_centroids(X, y, weights, gamma: float = 0.1, *,
+                        n_per_class: int = 1, steps: int = 60,
+                        lr: float = 0.05, kmeans_iters: int = 3,
+                        seed: int = 0, impl: str = "auto",
+                        bsp: Optional[BlockSparsePaths] = None
+                        ) -> CentroidModel:
+    """Supervised centroids: ``n_per_class`` barycenters per class label.
+
+    The nearest-centroid classifier this feeds replaces 1-NN over N train
+    series with argmin over k = n_classes * n_per_class centroids — the
+    sparsification thesis applied to the *candidate set*.
+    """
+    X = jnp.asarray(X, jnp.float32)
+    y = np.asarray(y)
+    bsp = _model_bsp(weights, bsp)
+    classes = np.unique(y)
+    cents, labels, medoids = [], [], []
+    for c in classes:
+        members_idx = np.nonzero(y == c)[0]
+        members = X[jnp.asarray(members_idx)]
+        if n_per_class <= 1 or len(members_idx) <= n_per_class:
+            z, _ = soft_barycenter(members, weights, gamma, steps=steps,
+                                   lr=lr)
+            sub = z[None]
+        else:
+            sub_model, _ = soft_kmeans(members, n_per_class, weights, gamma,
+                                       iters=kmeans_iters, steps=steps,
+                                       lr=lr, seed=seed, impl=impl, bsp=bsp)
+            sub = sub_model.centroids
+        local_med = medoid_indices(members, sub, weights, bsp=bsp, impl=impl)
+        for r in range(sub.shape[0]):
+            cents.append(sub[r])
+            labels.append(int(c))
+            medoids.append(int(members_idx[local_med[r]]))
+    return CentroidModel(
+        centroids=jnp.stack(cents),
+        weights=jnp.asarray(weights, jnp.float32), gamma=float(gamma),
+        labels=np.asarray(labels, np.int32),
+        medoids=np.asarray(medoids, np.int32), bsp=bsp)

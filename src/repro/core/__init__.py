@@ -5,6 +5,7 @@ Public API:
   optimal_path_mask, backtrack                      (paths.py)
   learn_sparse_paths, SparsePaths, block_sparsify   (occupancy.py)
   spdtw, spdtw_loc, spdtw_pairwise                  (spdtw.py)
+  soft_wdtw, soft_spdtw, soft_alignment             (softdtw.py)
   log_krdtw, log_krdtw_sc, log_sp_krdtw             (krdtw.py)
   lb_kim_cross, lb_keogh_cross, envelopes, ...      (bounds.py)
   make_measure, Measure, CorpusIndex, ALL_MEASURES  (measures.py)
@@ -16,6 +17,8 @@ from .occupancy import (BlockSparsePaths, SparsePaths, block_sparsify,
                         default_tile, learn_sparse_paths, normalize_grid,
                         pairwise_path_counts)
 from .spdtw import spdtw, spdtw_loc, spdtw_pairwise
+from .softdtw import (soft_alignment, soft_dtw, soft_spdtw, soft_wdtw,
+                      logsumexp_scan)
 from .krdtw import (krdtw, local_kernel, log_krdtw, log_krdtw_sc,
                     log_sp_krdtw, normalized_gram)
 from .baselines import corr, corr_dissimilarity, daco, euclidean, znormalize

@@ -1,0 +1,236 @@
+"""Differentiable soft-SP-DTW: smoothed masked DP + expected alignment
+(DESIGN.md §10).
+
+The hard SP-DTW recurrence (paper Eq. 9) takes a min over the three DP
+predecessors; here the min is smoothed with the log-sum-exp soft minimum
+
+    softmin_g(a, b, c) = -g * log(exp(-a/g) + exp(-b/g) + exp(-c/g))
+
+so the value is differentiable in both series and in the weight grid, and
+the temperature ``gamma -> 0`` recovers hard SP-DTW exactly (soft-DTW,
+Cuturi & Blondel 2017, restricted to the learned sparse support). Cells
+outside the support contribute exp(-INF/g) = 0 to every soft min, so the
+relaxation lives on the *same* sparsified search space as the hard DP —
+no probability mass ever leaks onto pruned cells.
+
+Everything is evaluated in negated log space ``L = -R/gamma`` where the
+recursion becomes the log-semiring analogue of the min-plus DP in
+``core.dtw``: with ``t = -w*phi/gamma`` (NEG outside the support),
+
+    L(i,j) = t(i,j) + logaddexp3(L(i-1,j-1), L(i-1,j), L(i,j-1)).
+
+The in-row dependency is the linear recurrence ``L_j = logaddexp(g_j,
+L_{j-1} + t_j)`` — the same associative-scan trick as
+``dtw.minplus_scan``, in the (logaddexp, +) semiring
+(``logsumexp_scan``); the backward in-row recurrence is *linear* and
+reuses ``krdtw.linrec_scan`` verbatim (the K_rdtw semiring machinery).
+
+The custom VJP's backward pass computes the **expected alignment matrix**
+``E(i,j) = dR(T,T)/d delta(i,j)`` — the probability, under the Gibbs
+distribution over admissible alignment paths at temperature gamma, that a
+path visits cell (i, j). E is identically zero outside the learned
+support, so gradients of series and weights are restricted to the
+sparsified search space by construction. Block-sparse *forward* engines
+over the active-tile schedule live in ``repro.kernels.soft_block``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .dtw import INF
+from .krdtw import linrec_scan
+
+# Log-space "zero": exp(NEG) == 0.0 in both f32 and f64. Reachability tests
+# compare against NEG/2 — genuine log values have magnitude << 1e29.
+NEG = -1.0e30
+
+
+def _logaddexp_combine(e1, e2):
+    m1, s1 = e1
+    m2, s2 = e2
+    return jnp.logaddexp(m2, m1 + s2), s1 + s2
+
+
+def logsumexp_scan(g: jnp.ndarray, t: jnp.ndarray, axis: int = -1):
+    """Solve L_j = logaddexp(g_j, L_{j-1} + t_j) (L_{-1} = -inf) along axis.
+
+    The log-semiring counterpart of ``dtw.minplus_scan``: the same
+    associative linear-recurrence trick with (min, +) replaced by
+    (logaddexp, +).
+    """
+    m, _ = jax.lax.associative_scan(_logaddexp_combine, (g, t), axis=axis)
+    return m
+
+
+def _phi(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Squared-Euclidean local cost, dtype-preserving (unlike
+    ``dtw.local_cost`` this does not force f32 — the finite-difference
+    tests run the whole DP in f64)."""
+    if x.ndim == 1:
+        x = x[:, None]
+    if y.ndim == 1:
+        y = y[:, None]
+    diff = x[:, None, :] - y[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def _soft_L(t: jnp.ndarray) -> jnp.ndarray:
+    """Forward pass: full (Tx, Ty) matrix of L = -R/gamma from the masked
+    logit matrix ``t = -w*phi/gamma`` (NEG = masked cell)."""
+    Ty = t.shape[1]
+
+    def row_step(carry, t_row):
+        L_prev, tl0 = carry
+        topleft = jnp.concatenate([tl0[None], L_prev[:-1]])
+        g = t_row + jnp.logaddexp(L_prev, topleft)
+        L_row = logsumexp_scan(g, t_row)
+        return (L_row, jnp.asarray(NEG, t.dtype)), L_row
+
+    # virtual D(-1,-1) = 0 feeds only cell (0, 0), as in dtw._dp_rows
+    init = (jnp.full((Ty,), NEG, t.dtype), jnp.asarray(0.0, t.dtype))
+    (_, _), L = jax.lax.scan(row_step, init, t)
+    return L
+
+
+def _coeff(L_from, t_succ, L_succ):
+    """Transition probability exp(L_from + t_succ - L_succ) into a
+    successor cell; 0 when either endpoint is unreachable / masked.
+    Mathematically the exponent is <= 0 (softmin <= every argument); the
+    clip only guards float roundoff at the NEG sentinels."""
+    ok = (L_from > 0.5 * NEG) & (t_succ > 0.5 * NEG) & (L_succ > 0.5 * NEG)
+    e = jnp.clip(L_from + t_succ - L_succ, -80.0, 80.0)
+    return jnp.where(ok, jnp.exp(e), 0.0)
+
+
+def _expected_alignment(L: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    """Backward pass: E(i,j) = dR(Tx-1,Ty-1)/d delta(i,j).
+
+    Reverse row scan; the in-row dependency E_j = b_j * E_{j+1} + f_j is a
+    plain linear recurrence solved with ``krdtw.linrec_scan`` on the
+    reversed row.
+    """
+    Tx, Ty = L.shape
+    dtype = L.dtype
+    neg_row = jnp.full((Ty,), NEG, dtype)
+
+    def shift_left(v, fill):
+        return jnp.concatenate([v[1:], jnp.full((1,), fill, v.dtype)])
+
+    inject = (jnp.arange(Ty) == Ty - 1).astype(dtype)
+
+    def row_step(carry, inp):
+        E_next, L_next, t_next = carry          # row i+1 (zeros at i=Tx-1)
+        L_row, t_row, is_last = inp
+        a = _coeff(L_row, t_next, L_next)                       # (i+1, j)
+        c = _coeff(L_row, shift_left(t_next, NEG),
+                   shift_left(L_next, NEG))                     # (i+1, j+1)
+        b = _coeff(L_row, shift_left(t_row, NEG),
+                   shift_left(L_row, NEG))                      # (i, j+1)
+        f = a * E_next + c * shift_left(E_next, 0.0)
+        f = jnp.where(is_last, inject, f)       # E(Tx-1, Ty-1) = 1
+        # E_j = b_j E_{j+1} + f_j: reversed, x_k = a_k x_{k-1} + b_k with
+        # a_0 = b[Ty-1] = 0 (no successor right of the last column)
+        E_row = linrec_scan(b[::-1], f[::-1])[::-1]
+        return (E_row, L_row, t_row), E_row
+
+    xs = (L, t, jnp.arange(Tx) == Tx - 1)
+    init = (jnp.zeros((Ty,), dtype), neg_row, neg_row)
+    _, E = jax.lax.scan(row_step, init, xs, reverse=True)
+    return E
+
+
+def _soft_forward(x, y, weights, gamma):
+    phi = _phi(x, y)
+    w = jnp.asarray(weights).astype(phi.dtype)
+    t = jnp.where(w > 0, -(phi * w) / gamma, jnp.asarray(NEG, phi.dtype))
+    L = _soft_L(t)
+    Lf = L[-1, -1]
+    value = jnp.where(Lf > 0.5 * NEG, -gamma * Lf,
+                      jnp.asarray(INF, phi.dtype))
+    return value, (L, t, phi, w)
+
+
+def _grads_from_residuals(x, y, L, t, phi, w, gbar=None):
+    """Gradient assembly from saved forward residuals: (gx, gy, gw) of
+    soft_wdtw, optionally scaled by the output cotangent ``gbar``."""
+    E = _expected_alignment(L, t)
+    feasible = (L[-1, -1] > 0.5 * NEG).astype(phi.dtype)
+    E = E * feasible
+    x2 = x[:, None] if x.ndim == 1 else x
+    y2 = y[:, None] if y.ndim == 1 else y
+    diff = x2[:, None, :] - y2[None, :, :]              # (Tx, Ty, d)
+    Ew = E * w
+    gx = 2.0 * jnp.einsum("ij,ijd->id", Ew, diff)
+    gy = -2.0 * jnp.einsum("ij,ijd->jd", Ew, diff)
+    gw = E * phi
+    if x.ndim == 1:
+        gx = gx[:, 0]
+    if y.ndim == 1:
+        gy = gy[:, 0]
+    if gbar is not None:
+        gx, gy, gw = gbar * gx, gbar * gy, gbar * gw
+    return gx, gy, gw
+
+
+def _soft_grads(x, y, weights, gamma, gbar=None):
+    """Forward + gradient assembly in one call — for callers that hold no
+    residuals (the block-sparse VJP recomputes the forward per pair)."""
+    _, (L, t, phi, w) = _soft_forward(x, y, weights, gamma)
+    return _grads_from_residuals(x, y, L, t, phi, w, gbar)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def soft_wdtw(x: jnp.ndarray, y: jnp.ndarray, weights: jnp.ndarray,
+              gamma: float) -> jnp.ndarray:
+    """Soft-SP-DTW value: smoothed, support-masked, weighted DTW.
+
+    x, y: (T,) or (T, d); weights: (T, T), 0 outside the learned support.
+    Differentiable in x, y and weights (custom VJP; the backward pass is
+    the expected-alignment recursion above). gamma > 0 is the smoothing
+    temperature; gamma -> 0 recovers ``dtw.wdtw`` exactly. Returns INF
+    when the support admits no path.
+    """
+    value, _ = _soft_forward(x, y, weights, gamma)
+    return value
+
+
+def _soft_wdtw_fwd(x, y, weights, gamma):
+    # save the forward residuals (the standard soft-DTW pattern of
+    # keeping R): the backward then costs one reverse scan, not a
+    # recomputed forward DP
+    value, (L, t, phi, w) = _soft_forward(x, y, weights, gamma)
+    return value, (x, y, L, t, phi, w)
+
+
+def _soft_wdtw_bwd(gamma, res, gbar):
+    x, y, L, t, phi, w = res
+    return _grads_from_residuals(x, y, L, t, phi, w, gbar)
+
+
+soft_wdtw.defvjp(_soft_wdtw_fwd, _soft_wdtw_bwd)
+
+
+def soft_spdtw(x: jnp.ndarray, y: jnp.ndarray, sp, gamma: float):
+    """Soft-SP-DTW under a learned ``SparsePaths`` search space."""
+    return soft_wdtw(x, y, sp.weights, gamma)
+
+
+def soft_dtw(x: jnp.ndarray, y: jnp.ndarray, gamma: float):
+    """Dense soft-DTW (all-ones weights): the classic Cuturi-Blondel
+    measure, as the full-support special case of ``soft_wdtw``."""
+    T = x.shape[0]
+    return soft_wdtw(x, y, jnp.ones((T, T), jnp.float32), gamma)
+
+
+def soft_alignment(x: jnp.ndarray, y: jnp.ndarray, weights: jnp.ndarray,
+                   gamma: float) -> jnp.ndarray:
+    """Expected alignment matrix E (Tx, Ty): the Gibbs-weighted path
+    occupancy at temperature gamma. Zero outside the learned support;
+    converges to the (unique-optimum) hard path mask as gamma -> 0."""
+    _, (L, t, _, _) = _soft_forward(x, y, weights, gamma)
+    E = _expected_alignment(L, t)
+    return E * (L[-1, -1] > 0.5 * NEG).astype(E.dtype)

@@ -4,7 +4,8 @@ Each kernel has a pure-jnp oracle in ref.py; ops.py is the dispatching
 public API (pallas on TPU, reference path elsewhere, interpret in tests).
 """
 from .ops import (dtw_pairs, dtw_banded_pairs, spdtw_pairs, log_krdtw_pairs,
-                  spdtw_gram, dtw_gram, log_krdtw_gram, knn_cascade)
+                  spdtw_gram, dtw_gram, log_krdtw_gram, knn_cascade,
+                  soft_spdtw_pairs, soft_spdtw_gram)
 from .dtw_wavefront import wavefront_dtw
 from .dtw_banded import banded_dtw
 from .spdtw_block import spdtw_block, tile_sweep
@@ -13,4 +14,7 @@ from .krdtw_wavefront import (krdtw_sweep, mask_to_diagonal_major,
 from .gram_block import (gram_log_krdtw_block, gram_prefix_bound,
                          gram_spdtw_block, gram_spdtw_scan,
                          prefix_tile_count, spdtw_paired_scan)
+from .soft_block import (gram_soft_spdtw_block, gram_soft_spdtw_scan,
+                         soft_spdtw_batch, soft_spdtw_paired_scan,
+                         soft_tile_sweep)
 from . import ref

@@ -268,7 +268,8 @@ def gram_spdtw_block(A: jnp.ndarray, B: jnp.ndarray, bsp: BlockSparsePaths,
 # SP-DTW: jnp scan engines (CPU/GPU production path + oracle)
 # ---------------------------------------------------------------------------
 
-def _tile_scan(meta, blocks, get_xy, P, Tp, thr_p, alive_p, *, S, g_out, ri):
+def _tile_scan(meta, blocks, get_xy, P, Tp, thr_p, alive_p, *, S, g_out, ri,
+               sweep=tile_sweep, neutral: float = INF):
     """Shared lax.scan over the active-tile schedule (DP wavefront order).
 
     ``get_xy(ti, tj) -> ((P, S), (P, S))`` supplies the per-pair series
@@ -278,9 +279,16 @@ def _tile_scan(meta, blocks, get_xy, P, Tp, thr_p, alive_p, *, S, g_out, ri):
     (its row-min is an admissible lower bound — the prefix-bound stage),
     the captured result row of step ``g_out`` (pass g_out=-2 to skip
     capture) and the per-pair alive flags after early abandoning.
+
+    ``sweep``/``neutral`` parameterize the per-tile DP and its
+    "unreachable" sentinel: (``tile_sweep``, +INF) is the min-plus hard
+    SP-DTW; the soft engines in ``soft_block`` pass the log-semiring
+    sweep with neutral = NEG (edges then carry L = -R/gamma). The
+    early-abandon row-min check only makes sense in min-plus space —
+    soft callers pass +INF thresholds, which keep every pair alive.
     """
     n_active = meta.shape[0]
-    inf_row = jnp.full((P, S), INF, jnp.float32)
+    inf_row = jnp.full((P, S), neutral, jnp.float32)
 
     def step(carry, inp):
         row_edge, col_edge, corner, dri_out, alive = carry
@@ -303,17 +311,17 @@ def _tile_scan(meta, blocks, get_xy, P, Tp, thr_p, alive_p, *, S, g_out, ri):
             k == 0, jnp.zeros((P, 1), jnp.float32),
             jnp.where(m[5] > 0,
                       jnp.where(m[4] > 0, corner, corner_row),
-                      jnp.full((P, 1), INF, jnp.float32)))
-        d_last, rightcol, dri = tile_sweep(x, y, w, top_vec, left_vec,
-                                           c_first, S=S, ri=ri)
+                      jnp.full((P, 1), neutral, jnp.float32)))
+        d_last, rightcol, dri = sweep(x, y, w, top_vec, left_vec,
+                                      c_first, S=S, ri=ri)
         row_edge = jax.lax.dynamic_update_slice(row_edge, d_last, (0, tj * S))
         # keep the dri of the tile holding the global result cell (see
         # ``result_tile_step``), not whatever tile happens to run last
         dri_out = jnp.where(k == g_out, dri, dri_out)
         return (row_edge, rightcol, top_vec[:, S - 1:S], dri_out, alive), None
 
-    init = (jnp.full((P, Tp), INF, jnp.float32), inf_row,
-            jnp.full((P, 1), INF, jnp.float32), inf_row, alive_p)
+    init = (jnp.full((P, Tp), neutral, jnp.float32), inf_row,
+            jnp.full((P, 1), neutral, jnp.float32), inf_row, alive_p)
     (row_edge, _, _, dri, alive), _ = jax.lax.scan(
         step, init, (jnp.arange(n_active), meta))
     return row_edge, dri, alive

@@ -23,6 +23,7 @@ from repro.core.measures import CorpusIndex
 from repro.core.measures import _chunked_cross as _nested_cross
 from repro.core.occupancy import (BlockSparsePaths, SparsePaths,
                                   block_sparsify, default_tile)
+from repro.core.softdtw import soft_wdtw
 from . import ref
 from .dtw_wavefront import wavefront_dtw
 from .dtw_banded import banded_dtw
@@ -31,6 +32,8 @@ from .krdtw_wavefront import mask_to_diagonal_major, wavefront_log_krdtw
 from .gram_block import (gram_log_krdtw_block, gram_prefix_bound,
                          gram_spdtw_block, gram_spdtw_scan,
                          prefix_tile_count, spdtw_paired_scan)
+from .soft_block import (gram_soft_spdtw_block, gram_soft_spdtw_scan,
+                         soft_spdtw_batch, soft_spdtw_paired_scan)
 
 
 def _on_tpu() -> bool:
@@ -166,10 +169,7 @@ def spdtw_gram(A: jnp.ndarray, B: jnp.ndarray, *,
     impl = _resolve(impl)
     if impl == "dense" or (bsp is None and sp is None and
                            _is_traced(weights)):
-        w = sp.weights if sp is not None else weights
-        if w is None:   # bsp-only caller: densify so this stays SP-DTW
-            assert bsp is not None, "need one of sp / bsp / weights"
-            w = jnp.asarray(_densify(bsp)[:A.shape[1], :A.shape[1]])
+        w = _resolve_dense_weights(sp, bsp, weights, T=A.shape[1])
         out = _nested_cross(lambda a, b: _wdtw_pair(a, b, w), A, B, block_a)
         if alive0 is not None:
             out = jnp.where(jnp.asarray(alive0), out, INF)
@@ -181,6 +181,79 @@ def spdtw_gram(A: jnp.ndarray, B: jnp.ndarray, *,
     return gram_spdtw_block(A, B, bsp, T_orig=A.shape[1],
                             thresholds=thresholds, alive0=alive0,
                             interpret=not _on_tpu())
+
+
+def _resolve_dense_weights(sp=None, bsp=None, weights=None, T=None):
+    """Dense (T, T) weight grid from whichever sparse handle the caller
+    holds (``_densify`` reassembles it from a bare block plan)."""
+    if sp is not None:
+        return sp.weights
+    if weights is not None:
+        return weights
+    assert bsp is not None, "need one of sp / bsp / weights"
+    w = _densify(bsp)
+    return jnp.asarray(w if T is None else w[:T, :T])
+
+
+def soft_spdtw_pairs(x: jnp.ndarray, y: jnp.ndarray, *,
+                     sp: Optional[SparsePaths] = None,
+                     bsp: Optional[BlockSparsePaths] = None,
+                     weights: Optional[jnp.ndarray] = None,
+                     gamma: float = 1.0, impl: str = "auto") -> jnp.ndarray:
+    """Batched aligned-pair soft-SP-DTW, differentiable. (B, T) -> (B,).
+
+    The default routes through ``soft_block.soft_spdtw_batch`` (custom
+    VJP: block-sparse active-tile forward, expected-alignment backward);
+    ``impl="dense"`` runs the vmapped core recursion — same values, kept
+    as the parity baseline. A *bsp-only* caller is a serving call: it
+    runs the paired scan on the caller's own plan (tile size preserved,
+    no densify/re-sparsify round trip; autodiff still works by
+    differentiating through the scan). There is no separate Pallas
+    *paired* soft kernel; the Gram kernel covers the TPU path
+    (``soft_spdtw_gram``).
+    """
+    if _resolve(impl) == "dense":
+        w = _resolve_dense_weights(sp, bsp, weights, T=x.shape[1])
+        return jax.vmap(
+            lambda a, b: soft_wdtw(a, b, w, float(gamma)))(x, y)
+    if sp is None and weights is None:
+        assert bsp is not None, "need one of sp / bsp / weights"
+        return soft_spdtw_paired_scan(jnp.asarray(x, jnp.float32),
+                                      jnp.asarray(y, jnp.float32),
+                                      bsp, float(gamma), T_orig=x.shape[1])
+    w = sp.weights if sp is not None else weights
+    return soft_spdtw_batch(jnp.asarray(x, jnp.float32),
+                            jnp.asarray(y, jnp.float32),
+                            jnp.asarray(w), float(gamma))
+
+
+def soft_spdtw_gram(A: jnp.ndarray, B: jnp.ndarray, *,
+                    sp: Optional[SparsePaths] = None,
+                    bsp: Optional[BlockSparsePaths] = None,
+                    weights: Optional[jnp.ndarray] = None,
+                    gamma: float = 1.0, impl: str = "auto",
+                    tile: Optional[int] = None,
+                    block_a: int = 64) -> jnp.ndarray:
+    """(Na, Nb) soft-SP-DTW Gram matrix (forward-only serving path).
+
+    impl mirrors ``spdtw_gram``: "auto" (Pallas soft kernel on TPU, scan
+    elsewhere), "pallas" (interpret off TPU; what the tpu-marked parity
+    test sweeps), "ref" (jnp scan engine), "dense" (nested-vmap core
+    recursion — traceable, and the only path for traced weight grids).
+    """
+    impl = _resolve(impl)
+    if impl == "dense" or (bsp is None and sp is None and
+                           _is_traced(weights)):
+        w = _resolve_dense_weights(sp, bsp, weights, T=A.shape[1])
+        return _nested_cross(
+            lambda a, b: soft_wdtw(a, b, w, float(gamma)), A, B, block_a)
+    bspr = _resolve_bsp(sp, bsp, weights, tile)
+    if impl == "ref":
+        return gram_soft_spdtw_scan(A, B, bspr, float(gamma),
+                                    T_orig=A.shape[1], block_a=block_a)
+    return gram_soft_spdtw_block(A, B, bspr, float(gamma),
+                                 T_orig=A.shape[1],
+                                 interpret=not _on_tpu())
 
 
 def dtw_gram(A: jnp.ndarray, B: jnp.ndarray, *, impl: str = "auto",
@@ -242,7 +315,8 @@ def _pair_dp(x: jnp.ndarray, y: jnp.ndarray, index: CorpusIndex, impl: str,
 
 def knn_cascade(Q: jnp.ndarray, index: CorpusIndex, *, impl: str = "auto",
                 seed_k: int = 2, prefix_frac: float = 0.5,
-                block_a: int = 64, return_stats: bool = False):
+                block_a: int = 64, return_stats: bool = False,
+                centroid_model=None):
     """Exact 1-NN of queries against an indexed corpus (DESIGN.md §4).
 
     The cascade: (1) LB_Kim endpoint bound, O(1)/pair; (2) support-windowed
@@ -267,6 +341,15 @@ def knn_cascade(Q: jnp.ndarray, index: CorpusIndex, *, impl: str = "auto",
     wall-clock win; under tracing it falls back to the masked Gram engine
     (static shapes), where the Pallas kernel skips fully-dead pair blocks.
 
+    ``centroid_model`` (a ``cluster.CentroidModel``, or anything with
+    ``.centroids`` (k, T) and ``.medoids`` (k,) corpus indices) switches
+    on the centroid-seeded stage (DESIGN.md §10): the query's exact
+    SP-DTW distance to its nearest centroid's *medoid* — a real corpus
+    entry, found at fit time — seeds the per-query threshold with k + 1
+    cheap DPs before any bound runs. The threshold only ever tightens
+    with an exact distance of a real candidate, so exactness is
+    untouched; the bounds simply prune more.
+
     Admissible bounds for the log-kernel recursion (K_rdtw) are an open
     problem; this cascade covers the dissimilarity measures (dtw / spdtw).
     """
@@ -276,6 +359,20 @@ def knn_cascade(Q: jnp.ndarray, index: CorpusIndex, *, impl: str = "auto",
     Nc = C.shape[0]
     seed_k = min(seed_k, Nc)
     impl_r = _resolve(impl)
+
+    # --- stage 0: centroid-seeded threshold (k + 1 DPs per query) ---
+    cand = d_cand = None
+    n_centroids = 0
+    if centroid_model is not None and \
+            getattr(centroid_model, "medoids", None) is not None:
+        Z = jnp.asarray(centroid_model.centroids, jnp.float32)
+        n_centroids = Z.shape[0]
+        Dc = spdtw_gram(Q, Z, bsp=index.bsp, weights=index.weights,
+                        impl=impl, block_a=block_a)
+        best_c = jnp.argmin(Dc, axis=1)
+        cand = jnp.take(jnp.asarray(centroid_model.medoids, jnp.int32),
+                        best_c)                                # (Nq,)
+        d_cand = _pair_dp(Q, jnp.take(C, cand, axis=0), index, impl_r)
 
     # --- stage 1: endpoint bound (every path pays both corner cells) ---
     lb1 = _bounds.lb_kim_cross(Q, C, index.w00, index.wTT)
@@ -292,11 +389,15 @@ def knn_cascade(Q: jnp.ndarray, index: CorpusIndex, *, impl: str = "auto",
     yc = jnp.take(C, seed_idx.reshape(-1), axis=0)
     seed_d = _pair_dp(xq, yc, index, impl_r).reshape(Nq, seed_k)
     thr = jnp.min(seed_d, axis=1)                              # (Nq,)
+    if d_cand is not None:
+        thr = jnp.minimum(thr, d_cand)
 
     # --- survivors so far: bound <= threshold (non-strict keeps ties) ---
     rows = jnp.arange(Nq)[:, None]
     alive2 = lb2 <= thr[:, None]
     alive2 = alive2.at[rows, seed_idx].set(False)              # already known
+    if cand is not None:
+        alive2 = alive2.at[rows[:, 0], cand].set(False)
 
     # --- stage 3: truncated prefix-DP bound on the block plan ---
     n_prefix = prefix_tile_count(index.bsp, prefix_frac, T)
@@ -311,6 +412,8 @@ def knn_cascade(Q: jnp.ndarray, index: CorpusIndex, *, impl: str = "auto",
     # --- stage 4: exact DP on the survivors, early abandoning ---
     eager = not (_is_traced(Q) or _is_traced(C) or _is_traced(thr))
     D = jnp.full((Nq, Nc), INF, jnp.float32).at[rows, seed_idx].set(seed_d)
+    if cand is not None:
+        D = D.at[rows[:, 0], cand].set(d_cand)
     if eager and impl_r == "ref":
         # gather the survivors: the DP only ever touches those pairs
         qi, ci = np.nonzero(np.asarray(alive))
@@ -330,11 +433,13 @@ def knn_cascade(Q: jnp.ndarray, index: CorpusIndex, *, impl: str = "auto",
     if not return_stats:
         return nn, nnd
     total = Nq * Nc
-    dp_pairs = alive.sum() + Nq * seed_k
+    dp_pairs = alive.sum() + Nq * (seed_k + (n_centroids + 1
+                                             if cand is not None else 0))
     abandoned = (alive & (D >= 1e29)) if G_ab is None else \
         (alive & (G_ab >= 1e29))
     stats = {
         "n_queries": Nq, "n_candidates": Nc, "seed_k": seed_k,
+        "n_centroids": n_centroids,
         "prefix_tiles": n_prefix, "plan_tiles": index.bsp.n_active,
         "stage1_prune": jnp.mean((lb1 > thr[:, None]).astype(jnp.float32)),
         "stage2_prune": jnp.mean((lb2 > thr[:, None]).astype(jnp.float32)),

@@ -1,0 +1,377 @@
+"""Block-sparse soft-SP-DTW engines over the active-tile schedule
+(DESIGN.md §10).
+
+The differentiable measure layer (``repro.core.softdtw``) smooths the
+masked min-plus DP into the (logaddexp, +) semiring; these engines run
+that recursion on the *same* block-sparse plan as the hard kernels —
+``gram_block._tile_scan`` is shared verbatim, parameterized by
+``soft_tile_sweep`` (the log-semiring twin of ``spdtw_block.tile_sweep``,
+identical edge dataflow) with neutral NEG instead of +INF. All inter-tile
+edges carry ``L = -R/gamma``; forward work is Na*Nb*n_active*S^2, exactly
+the hard Gram engine's accounting.
+
+Engines:
+  * ``gram_soft_spdtw_scan``   — all-pairs soft Gram, jnp lax.scan
+                                 (CPU/GPU production path + oracle);
+  * ``soft_spdtw_paired_scan`` — batched aligned-pair forward;
+  * ``gram_soft_spdtw_block``  — fused Pallas kernel, same grid /
+                                 BlockSpec / VMEM-scratch layout as
+                                 ``gram_block.gram_spdtw_block`` (tested
+                                 under the ``tpu`` marker);
+  * ``soft_spdtw_batch``       — the differentiable entry: custom VJP
+                                 whose forward runs the active-tile scan
+                                 (when the weight grid is host-concrete)
+                                 and whose backward is the
+                                 expected-alignment recursion of
+                                 ``core.softdtw`` vmapped over the pair
+                                 batch — E is zero outside the support,
+                                 so gradients never leave the learned
+                                 search space. A Pallas/block-sparse
+                                 *backward* is deliberately deferred
+                                 (ROADMAP "Open items").
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.occupancy import BlockSparsePaths
+from repro.core.softdtw import NEG, _soft_forward, _soft_grads
+from .spdtw_block import INF, result_tile_step
+from .gram_block import _pad_rows_cols, _pair_batch, _tile_scan
+
+
+def _logaddexp_scan_lanes(m, s, width):
+    """Hillis-Steele solve of L_j = logaddexp(m_j, L_{j-1} + s_j) over
+    lanes — ``spdtw_block._minplus_scan_lanes`` in the log semiring."""
+    d = 1
+    while d < width:
+        bt = m.shape[0]
+        m_sh = jnp.concatenate(
+            [jnp.full((bt, d), NEG, jnp.float32), m[:, :-d]], axis=1)
+        s_sh = jnp.concatenate(
+            [jnp.zeros((bt, d), jnp.float32), s[:, :-d]], axis=1)
+        m = jnp.logaddexp(m, m_sh + s)
+        s = jnp.maximum(s_sh + s, jnp.float32(-1e35))  # floor inf creep
+        d *= 2
+    return m
+
+
+def soft_tile_sweep(x, y, w, top_vec, left_vec, c_first, *, S: int, ri: int,
+                    gamma: float):
+    """Sweep one S x S tile of the *soft* SP-DTW DP for a batch of pairs.
+
+    Same signature, edge dataflow and in-tile structure as
+    ``spdtw_block.tile_sweep``, with every value in L = -R/gamma space
+    (NEG = unreachable). Shared by the jnp scan engines and the fused
+    Pallas kernel below.
+    """
+    bt = x.shape[0]
+
+    def logit_row(t):
+        xt = jax.lax.dynamic_slice_in_dim(x, t, 1, axis=1)      # (bt,1)
+        wt = jax.lax.dynamic_slice_in_dim(w, t, 1, axis=0)      # (1,S)
+        c = (xt - y) ** 2 * wt
+        return jnp.where(wt > 0, -c / gamma, NEG)
+
+    def row_update(t, L_prev, topleft0, left_t):
+        tr = logit_row(t)
+        topleft = jnp.concatenate([topleft0, L_prev[:, :-1]], axis=1)
+        g = tr + jnp.logaddexp(L_prev, topleft)
+        # inject the left-tile boundary as a virtual L_{-1}
+        g0 = jnp.logaddexp(g[:, 0:1], left_t + tr[:, 0:1])
+        g = jnp.concatenate([g0, g[:, 1:]], axis=1)
+        return _logaddexp_scan_lanes(g, tr, S)
+
+    d0 = row_update(0, top_vec, c_first, left_vec[:, 0:1])
+
+    def body(t, carry):
+        L_prev, rightcol, dri = carry
+        tl0 = jax.lax.dynamic_slice_in_dim(left_vec, t - 1, 1, axis=1)
+        lt = jax.lax.dynamic_slice_in_dim(left_vec, t, 1, axis=1)
+        L_row = row_update(t, L_prev, tl0, lt)
+        rightcol = jax.lax.dynamic_update_slice(
+            rightcol, L_row[:, S - 1:S], (0, t))
+        dri = jnp.where(t == ri, L_row, dri)
+        return L_row, rightcol, dri
+
+    rightcol0 = jnp.full((bt, S), NEG, jnp.float32)
+    rightcol0 = jax.lax.dynamic_update_slice(rightcol0, d0[:, S - 1:S], (0, 0))
+    dri0 = jnp.where(ri == 0, d0, jnp.full((bt, S), NEG, jnp.float32))
+    return jax.lax.fori_loop(1, S, body, (d0, rightcol0, dri0))
+
+
+def _from_L(L_val, gamma):
+    """Map captured L back to the soft distance (+INF when unreachable)."""
+    return jnp.where(L_val > 0.5 * NEG, -gamma * L_val,
+                     jnp.float32(INF))
+
+
+# ---------------------------------------------------------------------------
+# jnp scan engines (tier-1 production path + oracle for the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("S", "T_orig", "g_out", "gamma"))
+def _gram_soft_scan_call(meta, A, B, blocks, *, S, T_orig, g_out, gamma):
+    Na, Tp = A.shape
+    Nb = B.shape[0]
+    P = Na * Nb
+    last = T_orig - 1
+    ri, rj = last % S, last % S
+
+    def get_xy(ti, tj):
+        xa = jax.lax.dynamic_slice(A, (0, ti * S), (Na, S))
+        yb = jax.lax.dynamic_slice(B, (0, tj * S), (Nb, S))
+        return _pair_batch(xa, yb, Na, Nb)
+
+    sweep = functools.partial(soft_tile_sweep, gamma=gamma)
+    _, dri, _ = _tile_scan(meta, blocks, get_xy, P, Tp,
+                           jnp.full((P, 1), INF, jnp.float32),
+                           jnp.ones((P, 1), bool),
+                           S=S, g_out=g_out, ri=ri, sweep=sweep, neutral=NEG)
+    L_val = jax.lax.dynamic_slice_in_dim(dri, rj, 1, axis=1)
+    return _from_L(L_val, gamma).reshape(Na, Nb)
+
+
+def gram_soft_spdtw_scan(A: jnp.ndarray, B: jnp.ndarray,
+                         bsp: BlockSparsePaths, gamma: float,
+                         T_orig: int | None = None,
+                         block_a: int = 64) -> jnp.ndarray:
+    """All-pairs soft-SP-DTW Gram matrix over the active-tile schedule."""
+    Na, T = A.shape
+    Nb = B.shape[0]
+    T_orig = T if T_orig is None else T_orig
+    assert T_orig <= bsp.T
+    g_out = result_tile_step(bsp.plan(), bsp.tile, T_orig)
+    if g_out < 0:   # corner cell outside the support: no admissible path
+        return jnp.full((Na, Nb), INF, jnp.float32)
+    meta = jnp.asarray(bsp.plan())
+    blocks = jnp.asarray(bsp.blocks)
+    Ap = jnp.pad(A.astype(jnp.float32), ((0, 0), (0, bsp.T - T)))
+    Bp = jnp.pad(B.astype(jnp.float32), ((0, 0), (0, bsp.T - T)))
+    rows = []
+    for s in range(0, Na, block_a):
+        rows.append(_gram_soft_scan_call(
+            meta, Ap[s:s + block_a], Bp, blocks,
+            S=bsp.tile, T_orig=T_orig, g_out=g_out, gamma=float(gamma)))
+    return jnp.concatenate(rows, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("S", "T_orig", "g_out", "gamma"))
+def _soft_paired_scan_call(meta, X, Y, blocks, *, S, T_orig, g_out, gamma):
+    P, Tp = X.shape
+    last = T_orig - 1
+    ri, rj = last % S, last % S
+
+    def get_xy(ti, tj):
+        return (jax.lax.dynamic_slice(X, (0, ti * S), (P, S)),
+                jax.lax.dynamic_slice(Y, (0, tj * S), (P, S)))
+
+    sweep = functools.partial(soft_tile_sweep, gamma=gamma)
+    _, dri, _ = _tile_scan(meta, blocks, get_xy, P, Tp,
+                           jnp.full((P, 1), INF, jnp.float32),
+                           jnp.ones((P, 1), bool),
+                           S=S, g_out=g_out, ri=ri, sweep=sweep, neutral=NEG)
+    L_val = jax.lax.dynamic_slice_in_dim(dri, rj, 1, axis=1)
+    return _from_L(L_val, gamma).reshape(P)
+
+
+def soft_spdtw_paired_scan(x: jnp.ndarray, y: jnp.ndarray,
+                           bsp: BlockSparsePaths, gamma: float,
+                           T_orig: int | None = None,
+                           block_p: int = 4096) -> jnp.ndarray:
+    """Batched *aligned-pair* soft-SP-DTW forward: (B, T) x (B, T) -> (B,).
+
+    Same schedule and work accounting as ``gram_block.spdtw_paired_scan``;
+    the forward half of ``soft_spdtw_batch``.
+    """
+    B, T = x.shape
+    T_orig = T if T_orig is None else T_orig
+    assert T_orig <= bsp.T
+    g_out = result_tile_step(bsp.plan(), bsp.tile, T_orig)
+    if g_out < 0:
+        return jnp.full((B,), INF, jnp.float32)
+    meta = jnp.asarray(bsp.plan())
+    blocks = jnp.asarray(bsp.blocks)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, bsp.T - T)))
+    yp = jnp.pad(y.astype(jnp.float32), ((0, 0), (0, bsp.T - T)))
+    outs = []
+    for s in range(0, B, block_p):
+        outs.append(_soft_paired_scan_call(
+            meta, xp[s:s + block_p], yp[s:s + block_p], blocks,
+            S=bsp.tile, T_orig=T_orig, g_out=g_out, gamma=float(gamma)))
+    return jnp.concatenate(outs, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Fused Pallas kernel (TPU path; tested under the `tpu` marker)
+# ---------------------------------------------------------------------------
+
+def _gram_soft_kernel(meta_ref, a_ref, b_ref, w_ref, out_ref,
+                      row_edge, col_edge, corner_next, d_ri,
+                      *, S: int, g_out: int, ri: int, rj: int,
+                      ba: int, bb: int, gamma: float):
+    """One grid step = one active tile for one (A-stripe, B-stripe) block —
+    ``gram_block._gram_spdtw_kernel`` in the log semiring (no abandon
+    sweep: the row-min bound is a min-plus construct)."""
+    g = pl.program_id(2)
+    bt = ba * bb
+
+    @pl.when(g == 0)
+    def _():
+        row_edge[...] = jnp.full((bt, row_edge.shape[1]), NEG, jnp.float32)
+
+    ti = meta_ref[g, 0]
+    tj = meta_ref[g, 1]
+    top_ok = meta_ref[g, 3] > 0
+    left_ok = meta_ref[g, 4] > 0
+    diag_ok = meta_ref[g, 5] > 0
+
+    xa = pl.load(a_ref, (slice(None), pl.dslice(ti * S, S)))   # (ba, S)
+    yb = pl.load(b_ref, (slice(None), pl.dslice(tj * S, S)))   # (bb, S)
+    x, y = _pair_batch(xa, yb, ba, bb)                         # (bt, S)
+    w = w_ref[0]                                               # (S, S)
+
+    neg_row = jnp.full((bt, S), NEG, jnp.float32)
+    top_raw = pl.load(row_edge, (slice(None), pl.dslice(tj * S, S)))
+    top_vec = jnp.where(top_ok, top_raw, neg_row)
+    left_vec = jnp.where(left_ok, col_edge[...], neg_row)
+    c_first = jnp.where(
+        g == 0, jnp.zeros((bt, 1), jnp.float32),
+        jnp.where(diag_ok,
+                  jnp.where(left_ok, corner_next[...],
+                            # guarded: only read when diag_ok (=> tj > 0);
+                            # clamp keeps the untaken branch in-bounds
+                            pl.load(row_edge,
+                                    (slice(None),
+                                     pl.dslice(jnp.maximum(tj * S - 1, 0),
+                                               1)))),
+                  jnp.full((bt, 1), NEG, jnp.float32)))
+    new_corner = top_vec[:, S - 1:S]
+
+    d_last, rightcol, dri = soft_tile_sweep(x, y, w, top_vec, left_vec,
+                                            c_first, S=S, ri=ri, gamma=gamma)
+
+    corner_next[...] = new_corner
+    pl.store(row_edge, (slice(None), pl.dslice(tj * S, S)), d_last)
+    col_edge[...] = rightcol
+    d_ri[...] = dri
+
+    @pl.when(g == g_out)
+    def _():
+        res = jax.lax.dynamic_slice_in_dim(d_ri[...], rj, 1, axis=1)
+        out_ref[...] = _from_L(res, gamma).reshape(ba, bb)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("S", "n_active", "T_orig", "g_out",
+                                    "ba", "bb", "gamma", "interpret"))
+def _gram_soft_call(meta, A, B, blocks, *, S, n_active, T_orig, g_out,
+                    ba, bb, gamma, interpret):
+    Nap, Tp = A.shape
+    Nbp = B.shape[0]
+    last = T_orig - 1
+    ri, rj = last % S, last % S
+    grid = (Nap // ba, Nbp // bb, n_active)
+    kernel = functools.partial(_gram_soft_kernel, S=S, g_out=g_out,
+                               ri=ri, rj=rj, ba=ba, bb=bb, gamma=gamma)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ba, Tp), lambda i, j, g, m: (i, 0)),
+            pl.BlockSpec((bb, Tp), lambda i, j, g, m: (j, 0)),
+            pl.BlockSpec((1, S, S), lambda i, j, g, m: (m[g, 2], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ba, bb), lambda i, j, g, m: (i, j)),
+        scratch_shapes=[
+            pltpu.VMEM((ba * bb, Tp), jnp.float32),   # row_edge (L space)
+            pltpu.VMEM((ba * bb, S), jnp.float32),    # col_edge
+            pltpu.VMEM((ba * bb, 1), jnp.float32),    # corner_next
+            pltpu.VMEM((ba * bb, S), jnp.float32),    # d_ri capture
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Nap, Nbp), jnp.float32),
+        interpret=interpret,
+    )(meta, A, B, blocks)
+
+
+def gram_soft_spdtw_block(A: jnp.ndarray, B: jnp.ndarray,
+                          bsp: BlockSparsePaths, gamma: float,
+                          T_orig: int | None = None, ba: int = 8, bb: int = 8,
+                          interpret: bool = False) -> jnp.ndarray:
+    """All-pairs soft-SP-DTW Gram matrix via the fused Pallas kernel."""
+    Na, T = A.shape
+    Nb = B.shape[0]
+    T_orig = T if T_orig is None else T_orig
+    assert T_orig <= bsp.T
+    meta = bsp.plan()
+    n_active = meta.shape[0]
+    g_out = result_tile_step(meta, bsp.tile, T_orig)
+    if g_out < 0:
+        return jnp.full((Na, Nb), INF, jnp.float32)
+    Nap = ((Na + ba - 1) // ba) * ba
+    Nbp = ((Nb + bb - 1) // bb) * bb
+    out = _gram_soft_call(
+        jnp.asarray(meta), _pad_rows_cols(A, Nap, bsp.T),
+        _pad_rows_cols(B, Nbp, bsp.T), jnp.asarray(bsp.blocks),
+        S=bsp.tile, n_active=n_active, T_orig=T_orig, g_out=g_out,
+        ba=ba, bb=bb, gamma=float(gamma), interpret=interpret)
+    return out[:Na, :Nb]
+
+
+# ---------------------------------------------------------------------------
+# Differentiable batched entry (custom VJP)
+# ---------------------------------------------------------------------------
+
+def _is_traced(v) -> bool:
+    return isinstance(v, jax.core.Tracer)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def soft_spdtw_batch(x: jnp.ndarray, y: jnp.ndarray, weights: jnp.ndarray,
+                     gamma: float) -> jnp.ndarray:
+    """Batched aligned-pair soft-SP-DTW, differentiable in x, y, weights.
+
+    x, y: (B, T) — pair p is (x[p], y[p]). Forward runs the block-sparse
+    active-tile scan when ``weights`` is host-concrete (the usual case:
+    the learned grid is a frozen compile-time artifact closed over by the
+    training step); a traced weight grid falls back to the vmapped core
+    recursion, which is fully traceable. Backward is the
+    expected-alignment VJP of ``core.softdtw`` per pair; the weight-grid
+    cotangent sums over the batch.
+    """
+    return _soft_batch_value(x, y, weights, gamma)
+
+
+def _soft_batch_value(x, y, weights, gamma):
+    if not _is_traced(weights):
+        from .ops import _resolve_bsp  # deferred: ops imports this module
+        bsp = _resolve_bsp(weights=weights)
+        return soft_spdtw_paired_scan(x, y, bsp, gamma, T_orig=x.shape[1])
+    return jax.vmap(
+        lambda a, b: _soft_forward(a, b, weights, gamma)[0])(x, y)
+
+
+def _soft_batch_fwd(x, y, weights, gamma):
+    return _soft_batch_value(x, y, weights, gamma), (x, y, weights)
+
+
+def _soft_batch_bwd(gamma, res, gbar):
+    x, y, weights = res
+    # the block-sparse forward keeps no residuals, so the backward runs
+    # the core forward + expected-alignment recursion per pair
+    gx, gy, gw = jax.vmap(
+        lambda a, b: _soft_grads(a, b, weights, gamma))(x, y)
+    return (gbar[:, None] * gx, gbar[:, None] * gy,
+            jnp.einsum("b,bij->ij", gbar, gw).astype(weights.dtype))
+
+
+soft_spdtw_batch.defvjp(_soft_batch_fwd, _soft_batch_bwd)

@@ -1,4 +1,4 @@
-"""Streaming SP-DTW similarity-search driver (DESIGN.md §4/§8).
+"""Streaming SP-DTW similarity-search driver (DESIGN.md §4/§8/§10).
 
 The serving side of the paper plane: a fixed corpus is indexed once
 (``Measure.build_index`` — envelopes, support windows, block-sparse tile
@@ -9,8 +9,18 @@ for the next arrivals. Every batch runs bounds -> survivors -> fused
 masked DP (``kernels.ops.knn_cascade``) and reports per-stage prune
 rates; results are bit-identical to the full-Gram path.
 
+With ``--centroids N`` the engine serves in nearest-centroid mode
+(DESIGN.md §10): N soft-SP-DTW barycenters per class are fitted on the
+corpus labels at startup and each query pays k = n_classes * N masked
+DPs instead of a corpus-sized cascade — approximate classification at a
+fraction of the query cost. In cascade mode a fitted model still helps:
+it seeds the per-query threshold (centroid-seeded cascade, exactness
+untouched).
+
   PYTHONPATH=src python -m repro.launch.search --dataset CBF --queries 64
   PYTHONPATH=src python -m repro.launch.search --workload retrieval --check
+  PYTHONPATH=src python -m repro.launch.search --workload classify \\
+      --centroids 1
 """
 from __future__ import annotations
 
@@ -47,20 +57,38 @@ class QueryResult:
 
 
 class SearchEngine:
-    """Exact 1-NN engine over a fixed, indexed corpus.
+    """1-NN / nearest-centroid engine over a fixed, indexed corpus.
 
     Construction builds the corpus index once (the expensive part:
     envelopes + tile plan); ``search`` then serves arbitrarily many query
-    batches against it through the lower-bound cascade.
+    batches against it. ``mode="cascade"`` (default) is the exact 1-NN
+    lower-bound cascade — a fitted ``centroid_model`` only seeds its
+    thresholds. ``mode="centroid"`` serves the nearest *centroid* instead
+    (k DPs per query; ``search`` then returns centroid indices, and
+    ``labels`` maps them to class labels, so the streaming loop is
+    unchanged).
     """
 
     def __init__(self, corpus, labels=None, *, kind: str = "spdtw",
                  sp: Optional[SparsePaths] = None, impl: str = "auto",
-                 seed_k: int = 2, prefix_frac: float = 0.5):
+                 seed_k: int = 2, prefix_frac: float = 0.5,
+                 centroid_model=None, mode: str = "cascade"):
+        assert mode in ("cascade", "centroid")
+        if mode == "centroid":
+            assert centroid_model is not None, \
+                "centroid mode needs a fitted cluster.CentroidModel"
         corpus = jnp.asarray(corpus, jnp.float32)
         self.measure = make_measure(kind, corpus.shape[1], sp=sp)
         self.index = self.measure.build_index(corpus)
-        self.labels = None if labels is None else np.asarray(labels)
+        self.mode = mode
+        self.centroid_model = centroid_model
+        if mode == "centroid":
+            # unsupervised models (soft_kmeans) have labels=None: serve
+            # centroid ids with label=None rather than crashing the loop
+            self.labels = None if centroid_model.labels is None else \
+                np.asarray(centroid_model.labels)
+        else:
+            self.labels = None if labels is None else np.asarray(labels)
         self.impl = impl
         self.seed_k = seed_k
         self.prefix_frac = prefix_frac
@@ -70,13 +98,25 @@ class SearchEngine:
         self._queries = 0
 
     def search(self, queries) -> Tuple[np.ndarray, np.ndarray]:
-        """(Nq, T) -> (nn_idx, nn_dist); prune stats accumulate on self."""
-        from repro.kernels import ops
+        """(Nq, T) -> (nn_idx, nn_dist); prune stats accumulate on self.
+
+        In centroid mode ``nn_idx`` indexes the centroid set (k DPs per
+        query, counted as such in the pair stats)."""
         Q = jnp.asarray(queries, jnp.float32)
+        n = Q.shape[0]
+        if self.mode == "centroid":
+            from repro.cluster import nearest_centroid
+            idx, dist = nearest_centroid(Q, self.centroid_model,
+                                         impl=self.impl)
+            self._queries += n
+            self._pairs_total += n * self.index.size
+            self._pairs_dp += n * self.centroid_model.k
+            return np.asarray(idx), np.asarray(dist)
+        from repro.kernels import ops
         nn, dist, st = ops.knn_cascade(
             Q, self.index, impl=self.impl, seed_k=self.seed_k,
-            prefix_frac=self.prefix_frac, return_stats=True)
-        n = Q.shape[0]
+            prefix_frac=self.prefix_frac, return_stats=True,
+            centroid_model=self.centroid_model)
         for k in _STAT_KEYS:
             self._stats_acc[k] += float(st[k]) * n
         self._queries += n
@@ -85,10 +125,13 @@ class SearchEngine:
         return np.asarray(nn), np.asarray(dist)
 
     def stats(self) -> Dict[str, float]:
-        """Aggregated per-stage prune rates over everything served."""
+        """Aggregated per-stage prune rates over everything served (the
+        stage keys only exist in cascade mode — centroid serving runs no
+        bounds, and all-zero prune rates would read as a broken cascade)."""
         if self._queries == 0:
             return {}
-        out = {k: v / self._queries for k, v in self._stats_acc.items()}
+        out = {} if self.mode == "centroid" else \
+            {k: v / self._queries for k, v in self._stats_acc.items()}
         out["queries"] = self._queries
         out["pairs_total"] = self._pairs_total
         out["pairs_dp"] = self._pairs_dp
@@ -142,14 +185,21 @@ def stream_search(engine: SearchEngine, queries: Sequence[np.ndarray],
     return sorted(results, key=lambda r: r.rid)
 
 
-def _make_workload(ds, kind: str, n_queries: int, seed: int) -> np.ndarray:
+def _make_workload(ds, kind: str, n_queries: int, seed: int,
+                   with_labels: bool = False):
     """Query stream: "classify" takes test-split series; "retrieval" takes
     warped + renoised corpus entries (the similarity-search case where the
-    query has a genuinely close neighbour)."""
+    query has a genuinely close neighbour). ``with_labels`` additionally
+    returns the per-query ground-truth labels (classify only — built here
+    so they can never drift out of step with the query tiling; None for
+    retrieval)."""
     rng = np.random.default_rng(seed)
     if kind == "classify":
         reps = -(-n_queries // len(ds.X_test))
-        return np.tile(ds.X_test, (reps, 1))[:n_queries]
+        Q = np.tile(ds.X_test, (reps, 1))[:n_queries]
+        if with_labels:
+            return Q, np.tile(ds.y_test, reps)[:n_queries]
+        return Q
     T = ds.X_train.shape[1]
     src = rng.integers(0, len(ds.X_train), n_queries)
     out = np.empty((n_queries, T), np.float32)
@@ -157,20 +207,35 @@ def _make_workload(ds, kind: str, n_queries: int, seed: int) -> np.ndarray:
         idx = np.sort(np.clip(np.arange(T) + rng.integers(-3, 4, T), 0, T - 1))
         q = ds.X_train[s][idx] + 0.1 * rng.normal(size=T)
         out[i] = (q - q.mean()) / (q.std() + 1e-8)
-    return out
+    return (out, None) if with_labels else out
 
 
 def run(dataset: str = "CBF", workload: str = "retrieval",
         n_queries: int = 64, batch: int = 16, theta: float = 8.0,
         n_sp_train: int = 32, impl: str = "auto", seed: int = 0,
         arrivals_per_step: Optional[int] = None, check: bool = False,
-        n_train: int = 128) -> dict:
+        n_train: int = 128, centroids: int = 0, gamma: float = 0.1,
+        fit_steps: int = 60, T: Optional[int] = None) -> dict:
     from repro.data import load
-    ds = load(dataset, n_train=n_train)
+    kw = {} if T is None else {"T": T}
+    ds = load(dataset, n_train=n_train, **kw)
     Xtr = jnp.asarray(ds.X_train)
     sp = learn_sparse_paths(Xtr[:n_sp_train], theta=theta)
-    engine = SearchEngine(Xtr, ds.y_train, sp=sp, impl=impl)
-    queries = _make_workload(ds, workload, n_queries, seed)
+    model = None
+    fit_s = 0.0
+    if centroids > 0:
+        from repro.cluster import fit_class_centroids
+        t0 = time.time()
+        model = fit_class_centroids(Xtr, ds.y_train, sp.weights, gamma,
+                                    n_per_class=centroids, steps=fit_steps,
+                                    impl=impl)
+        jax.block_until_ready(model.centroids)
+        fit_s = time.time() - t0
+    engine = SearchEngine(Xtr, ds.y_train, sp=sp, impl=impl,
+                          centroid_model=model,
+                          mode="centroid" if centroids > 0 else "cascade")
+    queries, truth = _make_workload(ds, workload, n_queries, seed,
+                                    with_labels=True)
 
     t0 = time.time()
     results = stream_search(engine, queries, batch=batch,
@@ -182,19 +247,35 @@ def run(dataset: str = "CBF", workload: str = "retrieval",
         "dataset": dataset, "workload": workload, "backend":
         jax.default_backend(), "n_queries": len(results), "batch": batch,
         "corpus": engine.index.size, "theta": theta,
+        "mode": engine.mode,
         "support_cells_frac": sp.n_cells / (ds.T * ds.T),
         "wall_s": dt, "queries_per_s": len(results) / dt,
         "mean_wait_steps": float(np.mean([r.wait_steps for r in results])),
         "stats": engine.stats(),
     }
+    if model is not None:
+        out["n_centroids"] = model.k
+        out["centroid_fit_s"] = fit_s
+    if workload == "classify":
+        pred = np.array([r.label for r in results])
+        out["accuracy"] = float(np.mean(pred == truth))
     if check:
-        # exactness: bit-identical neighbours vs the dense full-Gram path
-        dense = np.asarray(engine.measure.cross(
-            jnp.asarray(queries), Xtr, block=64))
-        nn_dense = np.argmin(dense, axis=1)
         nn_got = np.array([r.nn for r in results])
-        out["exact_match"] = bool((nn_got == nn_dense).all())
-        assert out["exact_match"], "cascade diverged from full-Gram 1-NN"
+        if engine.mode == "centroid":
+            # nearest-centroid is exact over the *centroid* set (same
+            # impl as the engine: float ordering differs across engines)
+            Dc = np.asarray(model.distances(jnp.asarray(queries),
+                                            impl=engine.impl))
+            out["exact_match"] = bool((nn_got == Dc.argmin(1)).all())
+            assert out["exact_match"], \
+                "engine diverged from brute-force nearest centroid"
+        else:
+            # exactness: bit-identical neighbours vs the dense full-Gram
+            dense = np.asarray(engine.measure.cross(
+                jnp.asarray(queries), Xtr, block=64))
+            out["exact_match"] = bool((nn_got == dense.argmin(1)).all())
+            assert out["exact_match"], \
+                "cascade diverged from full-Gram 1-NN"
     return out
 
 
@@ -211,10 +292,16 @@ def main():
                     help="arrivals per step (default: all up front)")
     ap.add_argument("--check", action="store_true",
                     help="verify against the dense full-Gram path")
+    ap.add_argument("--centroids", type=int, default=0,
+                    help="serve nearest-centroid with N centroids per "
+                         "class (0 = exact cascade)")
+    ap.add_argument("--gamma", type=float, default=0.1,
+                    help="soft-SP-DTW temperature for centroid fitting")
     args = ap.parse_args()
     out = run(args.dataset, args.workload, args.queries, args.batch,
               theta=args.theta, impl=args.impl,
-              arrivals_per_step=args.arrivals, check=args.check)
+              arrivals_per_step=args.arrivals, check=args.check,
+              centroids=args.centroids, gamma=args.gamma)
     print(json.dumps(out, indent=1, default=float))
 
 

@@ -1,0 +1,90 @@
+"""Tier-1 guard on the CI artifact gate (``benchmarks/check_artifacts``)
+and on the workflow file itself, so neither can rot silently."""
+import json
+import os
+
+import numpy as np
+
+from benchmarks import check_artifacts as ca
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def test_committed_artifacts_clean():
+    """Every committed BENCH_*.json / artifacts/bench/*.json passes the
+    schema — exactly what the CI step runs."""
+    paths = ca.collect_artifacts(ROOT)
+    names = {os.path.basename(p) for p in paths}
+    # the headline artifacts must exist, not just validate when present
+    assert {"BENCH_gram.json", "BENCH_search.json",
+            "BENCH_centroid.json"} <= names
+    for p in paths:
+        assert ca.check_file(p) == [], p
+    assert ca.main(["--root", ROOT]) == 0
+
+
+def test_gate_rejects_nonfinite_numbers(tmp_path):
+    bad = tmp_path / "whatever.json"
+    bad.write_text(json.dumps({"a": {"b": [1.0, float("nan")]}}))
+    errs = ca.check_file(str(bad))
+    assert len(errs) == 1 and "non-finite" in errs[0]
+    bad.write_text(json.dumps({"v": float("inf")}))
+    assert any("non-finite" in e for e in ca.check_file(str(bad)))
+
+
+def test_gate_rejects_schema_violations(tmp_path):
+    # missing required key
+    f = tmp_path / "BENCH_gram.json"
+    f.write_text(json.dumps({"backend": "cpu", "speedup": 2.0}))
+    errs = ca.check_file(str(f))
+    assert any("missing required key" in e for e in errs)
+    # exactness flag false
+    f2 = tmp_path / "BENCH_search.json"
+    f2.write_text(json.dumps({
+        "backend": "cpu", "pre_dp_prune": 0.7,
+        "workloads": {"retrieval": {"exact": False, "speedup": 1.5}}}))
+    errs2 = ca.check_file(str(f2))
+    assert any("exactness flag" in e for e in errs2)
+    # accuracy gap above the centroid contract
+    f3 = tmp_path / "BENCH_centroid.json"
+    f3.write_text(json.dumps({
+        "backend": "cpu", "max_acc_delta": 0.5, "min_speedup": 9.0,
+        "families": {"CBF": {"cascade_exact": True}}}))
+    errs3 = ca.check_file(str(f3))
+    assert any("accuracy gap" in e for e in errs3)
+
+
+def test_gate_rejects_unreadable_json(tmp_path):
+    f = tmp_path / "BENCH_gram.json"
+    f.write_text("{not json")
+    errs = ca.check_file(str(f))
+    assert len(errs) == 1 and "unreadable" in errs[0]
+
+
+def test_gate_main_exit_codes(tmp_path):
+    # empty dir: nothing to validate is a failure, not silent success
+    assert ca.main(["--root", str(tmp_path)]) == 1
+    good = tmp_path / "BENCH_custom.json"
+    good.write_text(json.dumps({"ok": 1.0}))
+    assert ca.main(["--root", str(tmp_path)]) == 0
+    good.write_text(json.dumps({"ok": float("nan")}))
+    assert ca.main(["--root", str(tmp_path)]) == 1
+
+
+def test_ci_workflow_encodes_the_gate():
+    """The workflow must run the tier-1 suite, the smoke sweep and the
+    artifact gate — the exact commands the acceptance criteria name."""
+    wf = os.path.join(ROOT, ".github", "workflows", "ci.yml")
+    assert os.path.exists(wf)
+    text = open(wf).read()
+    assert "python -m pytest -x -q" in text
+    assert "python -m benchmarks.run --smoke" in text
+    assert "python -m benchmarks.check_artifacts" in text
+    assert "timeout-minutes" in text
+    assert "cache: pip" in text
+
+
+def test_gitignore_covers_scratch():
+    gi = open(os.path.join(ROOT, ".gitignore")).read()
+    for pat in ("__pycache__/", ".pytest_cache/", "bench-smoke-"):
+        assert pat in gi
