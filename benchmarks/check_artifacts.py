@@ -62,6 +62,22 @@ SCHEMAS: Dict[str, Dict] = {
              "nearest-centroid speedup below 2x"),
         ],
     },
+    "BENCH_softgrad.json": {
+        "required": ["backend", "shapes", "e_parity_f64", "grad_rel_err_f32",
+                     "min_bwd_speedup"],
+        "checks": [
+            ("exact", lambda v: v is True,
+             "reverse-sweep exactness flag must be true"),
+            ("e_parity_f64", lambda v: v <= 1e-6,
+             "E-matrix parity vs the dense backward broke"),
+            ("grad_rel_err_f32", lambda v: v <= 1e-3,
+             "f32 gradient parity broke"),
+            ("min_bwd_speedup", lambda v: v > 1.0,
+             "block-sparse backward must beat the dense backward"),
+            ("shapes/*/sparser_is_faster", lambda v: v is True,
+             "backward wall-clock must improve with tile sparsity"),
+        ],
+    },
 }
 
 
@@ -88,6 +104,10 @@ def _lookup(obj, key_path: str):
             yield prefix, o
             return
         p = parts[idx]
+        if isinstance(o, (list, tuple)) and p == "*":
+            for i, v in enumerate(o):
+                yield from rec(v, idx + 1, f"{prefix}[{i}]".lstrip("/"))
+            return
         if not isinstance(o, dict):
             yield prefix + "/" + p, KeyError(p)
             return

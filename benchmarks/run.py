@@ -99,7 +99,7 @@ def main(argv=None):
     if smoke:
         # tiny shapes end to end: kernels, fused Gram, cascade, centroid;
         # the paper tables (minutes of meta-parameter search) are skipped
-        from . import centroid_speedup, gram_speedup
+        from . import centroid_speedup, gram_speedup, softgrad_speedup
         run_bench("kernel_walltime", lambda: bench_kernel_walltime(B=8, T=32))
         run_bench("gram_speedup",
                   lambda: gram_speedup.run(fast=True, smoke=True))
@@ -107,14 +107,18 @@ def main(argv=None):
                   lambda: search_cascade.run(fast=True, smoke=True))
         run_bench("centroid_speedup",
                   lambda: centroid_speedup.run(fast=True, smoke=True))
+        run_bench("softgrad_speedup",
+                  lambda: softgrad_speedup.run(fast=True, smoke=True))
     else:
         run_bench("kernel_walltime", bench_kernel_walltime)
 
         from . import (centroid_speedup, gram_speedup, occupancy_fig,
-                       table2_knn, table4_svm, table6_speedup)
+                       softgrad_speedup, table2_knn, table4_svm,
+                       table6_speedup)
         run_bench("gram_speedup", lambda: gram_speedup.run(fast=fast))
         run_bench("search_cascade", lambda: search_cascade.run(fast=fast))
         run_bench("centroid_speedup", lambda: centroid_speedup.run(fast=fast))
+        run_bench("softgrad_speedup", lambda: softgrad_speedup.run(fast=fast))
         run_bench("table6_speedup", lambda: table6_speedup.run(fast=fast))
         run_bench("table2_knn", lambda: table2_knn.run(fast=fast))
         run_bench("table4_svm", lambda: table4_svm.run(fast=fast))

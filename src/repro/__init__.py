@@ -1,0 +1,68 @@
+"""repro — Sparsification of the Alignment Path Search Space in DTW.
+
+A production-scale jax/Pallas reproduction and extension of the paper:
+learn an occupancy prior over optimal alignment paths on the training
+set, threshold it into a sparse search space, and run every downstream
+workload — distances, retrieval, classification, differentiable
+averaging — only on the surviving cells.
+
+Layer map (one directory per layer; see README.md and DESIGN.md):
+
+  core/      measures, DPs and the learned sparsification
+             (index -> plan -> execute; DESIGN.md §1-§2)
+  kernels/   Pallas TPU kernels + jnp scan twins for every DP hot loop
+             (block-sparse schedule §3, cascade bounds §4, soft §10-§11)
+  cluster/   soft-SP-DTW barycenters, k-means, centroid models (§10)
+  classify/  1-NN / SVM / nearest-centroid evaluation harness
+  launch/    serving drivers and sharded jobs (SearchEngine, Gram,
+             centroid fitting; §8)
+  data/      offline synthetic-UCR datasets (§7.1)
+
+This module re-exports the supported public API; the training stack
+(models/, train/, configs/) is imported explicitly by its entry points.
+"""
+from .core import (
+    ALL_MEASURES, BlockSparsePaths, CorpusIndex, Measure, SparsePaths,
+    band_mask, block_sparsify, build_corpus_index, default_tile, dtw,
+    dtw_sc, learn_sparse_paths, log_krdtw, log_krdtw_sc, log_sp_krdtw,
+    make_measure, normalize_grid, optimal_path_mask, pairwise,
+    pairwise_path_counts, soft_alignment, soft_dtw, soft_spdtw, soft_wdtw,
+    spdtw, spdtw_pairwise, wdtw,
+)
+from .kernels import (
+    dtw_gram, dtw_pairs, knn_cascade, log_krdtw_gram, log_krdtw_pairs,
+    soft_spdtw_gram, soft_spdtw_pairs, spdtw_gram, spdtw_pairs,
+)
+from .kernels.soft_block import (
+    soft_alignment_pairs, soft_spdtw_batch, soft_spdtw_gram_batch,
+)
+from .cluster import (
+    CentroidModel, fit_class_centroids, soft_barycenter, soft_kmeans,
+)
+from .classify import (
+    centroid_error_series, knn_error, knn_error_series, svm_error,
+    svm_gram_series,
+)
+
+__all__ = [
+    # core: learned sparsification + measures
+    "ALL_MEASURES", "BlockSparsePaths", "CorpusIndex", "Measure",
+    "SparsePaths", "band_mask", "block_sparsify", "build_corpus_index",
+    "default_tile", "dtw", "dtw_sc", "learn_sparse_paths", "log_krdtw",
+    "log_krdtw_sc", "log_sp_krdtw", "make_measure", "normalize_grid",
+    "optimal_path_mask", "pairwise", "pairwise_path_counts",
+    "soft_alignment", "soft_dtw", "soft_spdtw", "soft_wdtw", "spdtw",
+    "spdtw_pairwise", "wdtw",
+    # kernels: dispatching batched/Gram entry points + cascade
+    "dtw_gram", "dtw_pairs", "knn_cascade", "log_krdtw_gram",
+    "log_krdtw_pairs", "soft_spdtw_gram", "soft_spdtw_pairs", "spdtw_gram",
+    "spdtw_pairs",
+    # differentiable layer
+    "soft_alignment_pairs", "soft_spdtw_batch", "soft_spdtw_gram_batch",
+    # cluster: barycenters and centroid models
+    "CentroidModel", "fit_class_centroids", "soft_barycenter",
+    "soft_kmeans",
+    # classify: evaluation harness
+    "centroid_error_series", "knn_error", "knn_error_series", "svm_error",
+    "svm_gram_series",
+]

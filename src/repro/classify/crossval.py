@@ -49,6 +49,8 @@ def select_radius(X_train, y_train, fracs=RADIUS_FRACS) -> Selected:
 
 def select_nu(X_train, y_train, name="krdtw", radius=0,
               grid=NU_GRID, sp=None) -> Selected:
+    """Pick the local-kernel bandwidth nu by leave-one-out 1-NN error
+    on train (paper Sec. V-B); X_train: (N, T)."""
     T = X_train.shape[1]
     best = Selected()
     for nu in grid:

@@ -15,10 +15,13 @@ def knn_predict(cross: jnp.ndarray, y_train: jnp.ndarray) -> jnp.ndarray:
 
 
 def error_rate(pred: jnp.ndarray, truth: jnp.ndarray) -> float:
+    """Fraction of mismatched labels (host float in [0, 1])."""
     return float(jnp.mean((pred != truth).astype(jnp.float32)))
 
 
 def knn_error(cross: jnp.ndarray, y_train, y_test) -> float:
+    """1-NN test error from a precomputed (N_test, N_train)
+    dissimilarity matrix (exact argmin — no bounds involved)."""
     return error_rate(knn_predict(cross, jnp.asarray(y_train)),
                       jnp.asarray(y_test))
 

@@ -1,4 +1,4 @@
-"""Soft-SP-DTW barycenter averaging (DESIGN.md §10).
+"""Soft-SP-DTW barycenter averaging (DESIGN.md §10, §11).
 
 A barycenter under the smoothed sparsified measure is the minimizer of
 
@@ -6,15 +6,18 @@ A barycenter under the smoothed sparsified measure is the minimizer of
 
 over the member set {x_b} with non-negative member weights a_b. F is
 differentiable through the custom VJP of the measure layer
-(``kernels.soft_block.soft_spdtw_batch``: block-sparse active-tile
-forward, expected-alignment backward), so the centroid is fitted by plain
-first-order optimization — Adam via the in-house ``train.optimizer.AdamW``
-(weight decay off), ``lax.scan`` over steps. Everything here is pure and
-traceable: ``soft_barycenter`` runs unchanged inside jit / vmap /
-shard_map (the sharded fitting job in ``launch/cluster.py`` vmaps it over
-a centroid stripe), provided the weight grid is a host-concrete
-compile-time artifact — which the learned support always is (DESIGN.md
-§2).
+(``kernels.soft_block.soft_spdtw_batch``): the forward runs the
+block-sparse active-tile scan *stashing per-tile L blocks*, and the
+backward walks the cached tile plan in reverse (the expected-alignment
+sweep of DESIGN.md §11) — both passes scale with active tiles, so every
+Adam step of the fit pays work proportional to the learned support, not
+O(T^2). The centroid is fitted by plain first-order optimization — Adam
+via the in-house ``train.optimizer.AdamW`` (weight decay off),
+``lax.scan`` over steps. Everything here is pure and traceable:
+``soft_barycenter`` runs unchanged inside jit / vmap / shard_map (the
+sharded fitting job in ``launch/cluster.py`` vmaps it over a centroid
+stripe), provided the weight grid is a host-concrete compile-time
+artifact — which the learned support always is (DESIGN.md §2).
 """
 from __future__ import annotations
 
@@ -32,8 +35,10 @@ def barycenter_loss(z: jnp.ndarray, X: jnp.ndarray, weights: jnp.ndarray,
                     sample_weights: Optional[jnp.ndarray] = None
                     ) -> jnp.ndarray:
     """Weighted mean soft-SP-DTW from candidate centroid ``z`` (T,) to the
-    member set ``X`` (B, T). An all-zero ``sample_weights`` row (a padding
-    centroid in the sharded job) yields loss 0 with zero gradient."""
+    member set ``X`` (B, T); ``weights`` is the learned (T, T) grid and
+    must stay host-concrete for the block-sparse passes to engage. An
+    all-zero ``sample_weights`` row (a padding centroid in the sharded
+    job) yields loss 0 with zero gradient. Returns a scalar."""
     zb = jnp.broadcast_to(z, X.shape)
     d = soft_spdtw_batch(zb, X, weights, float(gamma))
     if sample_weights is None:
@@ -50,10 +55,13 @@ def soft_barycenter(X: jnp.ndarray, weights: jnp.ndarray, gamma: float = 0.1,
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fit one barycenter by Adam on the soft-SP-DTW VJP.
 
-    X: (B, T) members; ``init`` defaults to the (weighted) Euclidean mean.
+    X: (B, T) members; ``init`` defaults to the (weighted) Euclidean
+    mean; ``weights`` is the learned (T, T) grid (keep it host-concrete:
+    a traced grid silently falls back to the dense O(T^2) backward).
     Returns (centroid (T,), per-step loss history (steps,)). Pure and
     traceable; callers jit (the sharded job in ``launch/cluster.py``
-    does).
+    does). Every step runs the block-sparse stash forward + reverse
+    active-tile backward (DESIGN.md §11).
     """
     X = jnp.asarray(X, jnp.float32)
     if init is None:

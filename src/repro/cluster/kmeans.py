@@ -7,7 +7,8 @@ This module owns the centroid *models*:
   * ``soft_kmeans``       — k-means under SP-DTW: hard block-sparse Gram
                             assignment (``kernels.ops.spdtw_gram``),
                             soft-SP-DTW barycenter update (Adam on the
-                            expected-alignment VJP, warm-started from the
+                            block-sparse stash-forward / reverse-sweep
+                            VJP of DESIGN.md §11, warm-started from the
                             previous centroid);
   * ``fit_class_centroids`` — the supervised variant: ``n_per_class``
                             centroids per class label (1 = one barycenter
@@ -56,6 +57,7 @@ class CentroidModel:
 
     @property
     def k(self) -> int:
+        """Number of fitted centroids."""
         return int(self.centroids.shape[0])
 
     def distances(self, Q, impl: str = "auto") -> jnp.ndarray:

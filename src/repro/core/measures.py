@@ -128,6 +128,7 @@ class CorpusIndex:
 
     @property
     def size(self) -> int:
+        """Number of indexed corpus series."""
         return int(self.corpus.shape[0])
 
 
@@ -216,6 +217,8 @@ class Measure:
     # ---- pair-level evaluators -------------------------------------------
     @property
     def is_kernel(self) -> bool:
+        """True for similarity (log-kernel) measures; False for
+        dissimilarities."""
         return self.name in _KERNELS
 
     def pair(self, x, y):
@@ -250,10 +253,13 @@ class Measure:
     # (x, y) -> scalar callables)
     @property
     def pair_fn(self) -> Callable:
+        """(x, y) -> scalar dissimilarity callable (kernels negated)."""
         return self.pair
 
     @property
     def logk_fn(self) -> Optional[Callable]:
+        """(x, y) -> scalar log-kernel callable; None for
+        dissimilarity measures."""
         return self.logk if self.is_kernel else None
 
     # ---- all-pairs execute layer -----------------------------------------

@@ -152,6 +152,36 @@ def _tile_plan(active: np.ndarray, slot: np.ndarray) -> np.ndarray:
                     axis=1).astype(np.int32)
 
 
+def _reverse_tile_plan(active: np.ndarray, meta: np.ndarray,
+                       g_out: int) -> np.ndarray:
+    """Reverse active-tile schedule for the expected-alignment sweep
+    (DESIGN.md §11), one int32 row per reverse grid step.
+
+    Walks the forward plan steps ``g_out .. 0`` in reverse row-major order
+    (the E recursion's wavefront: every *successor* tile of an edge runs
+    before its consumer). Columns: (ti, tj, slot, below_active,
+    right_active, diagbr_active, fwd_step). The neighbour bits are taken
+    against the *walked* prefix ``meta[:g_out+1]`` — tiles past the result
+    tile carry no alignment mass, so their halo edges must read as
+    E = 0 / L = NEG, never as computed data. ``fwd_step`` is the forward
+    plan index of the tile: the stash-lookup key for the per-tile L blocks
+    saved by the forward engines (``kernels.soft_block``).
+    """
+    sub = meta[:g_out + 1]
+    ii, jj = sub[:, 0], sub[:, 1]
+    Ti, Tj = active.shape
+    walked = np.zeros_like(active, dtype=bool)
+    walked[ii, jj] = True
+    below = (ii + 1 < Ti) & walked[np.minimum(ii + 1, Ti - 1), jj]
+    right = (jj + 1 < Tj) & walked[ii, np.minimum(jj + 1, Tj - 1)]
+    diagbr = ((ii + 1 < Ti) & (jj + 1 < Tj)
+              & walked[np.minimum(ii + 1, Ti - 1),
+                       np.minimum(jj + 1, Tj - 1)])
+    fwd = np.arange(g_out + 1)
+    rp = np.stack([ii, jj, sub[:, 2], below, right, diagbr, fwd], axis=1)
+    return np.ascontiguousarray(rp[::-1]).astype(np.int32)
+
+
 @dataclasses.dataclass(frozen=True)
 class BlockSparsePaths:
     """Compressed block-sparse view of a SparsePaths grid.
@@ -166,6 +196,8 @@ class BlockSparsePaths:
     meta:        cached (n_active, 7) int32 host-side tile plan (see
                  ``_tile_plan``); filled by ``block_sparsify`` and computed
                  lazily via ``plan()`` for hand-built instances.
+    rmeta:       lazily-filled cache of reverse plans keyed by the result
+                 tile step (see ``reverse_plan``).
     """
     tile: int
     active: np.ndarray
@@ -173,9 +205,11 @@ class BlockSparsePaths:
     blocks: np.ndarray
     T: int
     meta: Optional[np.ndarray] = None
+    rmeta: Optional[dict] = None
 
     @property
     def n_active(self) -> int:
+        """Number of surviving (scheduled) tiles."""
         return int(self.active.sum())
 
     @property
@@ -189,6 +223,19 @@ class BlockSparsePaths:
             object.__setattr__(self, "meta",
                                _tile_plan(self.active, self.slot))
         return self.meta
+
+    def reverse_plan(self, g_out: int) -> np.ndarray:
+        """The cached reverse schedule through forward step ``g_out``
+        (the result-tile step for the query length at hand; see
+        ``kernels.spdtw_block.result_tile_step``). One cache entry per
+        distinct g_out — ragged corpora reuse the few lengths they have.
+        """
+        if self.rmeta is None:
+            object.__setattr__(self, "rmeta", {})
+        if g_out not in self.rmeta:
+            self.rmeta[g_out] = _reverse_tile_plan(self.active, self.plan(),
+                                                   g_out)
+        return self.rmeta[g_out]
 
 
 def default_tile(T: int) -> int:

@@ -14,7 +14,12 @@ from .krdtw_wavefront import (krdtw_sweep, mask_to_diagonal_major,
 from .gram_block import (gram_log_krdtw_block, gram_prefix_bound,
                          gram_spdtw_block, gram_spdtw_scan,
                          prefix_tile_count, spdtw_paired_scan)
-from .soft_block import (gram_soft_spdtw_block, gram_soft_spdtw_scan,
-                         soft_spdtw_batch, soft_spdtw_paired_scan,
-                         soft_tile_sweep)
+from .soft_block import (gram_soft_bwd_pallas, gram_soft_bwd_scan,
+                         gram_soft_fwd_stash, gram_soft_fwd_stash_pallas,
+                         gram_soft_spdtw_block, gram_soft_spdtw_scan,
+                         soft_alignment_pairs, soft_reverse_tile_sweep,
+                         soft_spdtw_batch, soft_spdtw_bwd_block,
+                         soft_spdtw_fwd_stash, soft_spdtw_gram_batch,
+                         soft_spdtw_paired_scan, soft_tile_sweep,
+                         soft_tile_sweep_stash)
 from . import ref

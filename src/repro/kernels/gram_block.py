@@ -269,7 +269,7 @@ def gram_spdtw_block(A: jnp.ndarray, B: jnp.ndarray, bsp: BlockSparsePaths,
 # ---------------------------------------------------------------------------
 
 def _tile_scan(meta, blocks, get_xy, P, Tp, thr_p, alive_p, *, S, g_out, ri,
-               sweep=tile_sweep, neutral: float = INF):
+               sweep=tile_sweep, neutral: float = INF, stash: bool = False):
     """Shared lax.scan over the active-tile schedule (DP wavefront order).
 
     ``get_xy(ti, tj) -> ((P, S), (P, S))`` supplies the per-pair series
@@ -286,9 +286,16 @@ def _tile_scan(meta, blocks, get_xy, P, Tp, thr_p, alive_p, *, S, g_out, ri,
     sweep with neutral = NEG (edges then carry L = -R/gamma). The
     early-abandon row-min check only makes sense in min-plus space —
     soft callers pass +INF thresholds, which keep every pair alive.
+
+    ``stash=True`` expects a sweep returning a fourth value — the full
+    (P, S*S) tile block — and stacks it as the scan's ys (the soft
+    backward's L-block residual, DESIGN.md §11): the return grows a
+    fourth element, Lstash (n_active, P, S*S). DP state dtype follows
+    ``blocks`` (f64 for the oracle-grade parity checks).
     """
     n_active = meta.shape[0]
-    inf_row = jnp.full((P, S), neutral, jnp.float32)
+    dtype = blocks.dtype
+    inf_row = jnp.full((P, S), neutral, dtype)
 
     def step(carry, inp):
         row_edge, col_edge, corner, dri_out, alive = carry
@@ -302,28 +309,32 @@ def _tile_scan(meta, blocks, get_xy, P, Tp, thr_p, alive_p, *, S, g_out, ri,
         alive = alive & jnp.where(check, bound <= thr_p, True)
         x, y = get_xy(ti, tj)
         w = blocks[slot]
-        top_raw = jax.lax.dynamic_slice(row_edge, (0, tj * S), (P, S))
+        top_raw = jax.lax.dynamic_slice_in_dim(row_edge, tj * S, S, axis=1)
         top_vec = jnp.where(m[3] > 0, top_raw, inf_row)
         left_vec = jnp.where(m[4] > 0, col_edge, inf_row)
-        corner_row = jax.lax.dynamic_slice(
-            row_edge, (0, jnp.maximum(tj * S - 1, 0)), (P, 1))
+        corner_row = jax.lax.dynamic_slice_in_dim(
+            row_edge, jnp.maximum(tj * S - 1, 0), 1, axis=1)
         c_first = jnp.where(
-            k == 0, jnp.zeros((P, 1), jnp.float32),
+            k == 0, jnp.zeros((P, 1), dtype),
             jnp.where(m[5] > 0,
                       jnp.where(m[4] > 0, corner, corner_row),
-                      jnp.full((P, 1), neutral, jnp.float32)))
-        d_last, rightcol, dri = sweep(x, y, w, top_vec, left_vec,
-                                      c_first, S=S, ri=ri)
-        row_edge = jax.lax.dynamic_update_slice(row_edge, d_last, (0, tj * S))
+                      jnp.full((P, 1), neutral, dtype)))
+        out = sweep(x, y, w, top_vec, left_vec, c_first, S=S, ri=ri)
+        (d_last, rightcol, dri), rest = out[:3], out[3:]
+        row_edge = jax.lax.dynamic_update_slice_in_dim(row_edge, d_last,
+                                                       tj * S, axis=1)
         # keep the dri of the tile holding the global result cell (see
         # ``result_tile_step``), not whatever tile happens to run last
         dri_out = jnp.where(k == g_out, dri, dri_out)
-        return (row_edge, rightcol, top_vec[:, S - 1:S], dri_out, alive), None
+        carry = (row_edge, rightcol, top_vec[:, S - 1:S], dri_out, alive)
+        return carry, (rest[0] if stash else None)
 
-    init = (jnp.full((P, Tp), neutral, jnp.float32), inf_row,
-            jnp.full((P, 1), neutral, jnp.float32), inf_row, alive_p)
-    (row_edge, _, _, dri, alive), _ = jax.lax.scan(
+    init = (jnp.full((P, Tp), neutral, dtype), inf_row,
+            jnp.full((P, 1), neutral, dtype), inf_row, alive_p)
+    (row_edge, _, _, dri, alive), Lstash = jax.lax.scan(
         step, init, (jnp.arange(n_active), meta))
+    if stash:
+        return row_edge, dri, alive, Lstash
     return row_edge, dri, alive
 
 

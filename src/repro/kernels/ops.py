@@ -33,7 +33,8 @@ from .gram_block import (gram_log_krdtw_block, gram_prefix_bound,
                          gram_spdtw_block, gram_spdtw_scan,
                          prefix_tile_count, spdtw_paired_scan)
 from .soft_block import (gram_soft_spdtw_block, gram_soft_spdtw_scan,
-                         soft_spdtw_batch, soft_spdtw_paired_scan)
+                         soft_spdtw_batch, soft_spdtw_gram_batch,
+                         soft_spdtw_paired_scan)
 
 
 def _on_tpu() -> bool:
@@ -203,14 +204,15 @@ def soft_spdtw_pairs(x: jnp.ndarray, y: jnp.ndarray, *,
     """Batched aligned-pair soft-SP-DTW, differentiable. (B, T) -> (B,).
 
     The default routes through ``soft_block.soft_spdtw_batch`` (custom
-    VJP: block-sparse active-tile forward, expected-alignment backward);
-    ``impl="dense"`` runs the vmapped core recursion — same values, kept
-    as the parity baseline. A *bsp-only* caller is a serving call: it
-    runs the paired scan on the caller's own plan (tile size preserved,
-    no densify/re-sparsify round trip; autodiff still works by
-    differentiating through the scan). There is no separate Pallas
-    *paired* soft kernel; the Gram kernel covers the TPU path
-    (``soft_spdtw_gram``).
+    VJP: block-sparse stash forward, reverse active-tile backward —
+    DESIGN.md §11; gradients never leave the learned support);
+    ``impl="dense"`` runs the vmapped core recursion — same values and
+    the dense expected-alignment backward, kept as the parity baseline.
+    A *bsp-only* caller is a serving call: it runs the paired scan on
+    the caller's own plan (tile size preserved, no densify/re-sparsify
+    round trip; autodiff still works by differentiating through the
+    scan). There is no separate Pallas *paired* soft kernel; the Gram
+    kernels cover the TPU path (``soft_spdtw_gram``).
     """
     if _resolve(impl) == "dense":
         w = _resolve_dense_weights(sp, bsp, weights, T=x.shape[1])
@@ -234,21 +236,37 @@ def soft_spdtw_gram(A: jnp.ndarray, B: jnp.ndarray, *,
                     gamma: float = 1.0, impl: str = "auto",
                     tile: Optional[int] = None,
                     block_a: int = 64) -> jnp.ndarray:
-    """(Na, Nb) soft-SP-DTW Gram matrix (forward-only serving path).
+    """(Na, Nb) soft-SP-DTW Gram matrix, differentiable on the default
+    path.
 
-    impl mirrors ``spdtw_gram``: "auto" (Pallas soft kernel on TPU, scan
-    elsewhere), "pallas" (interpret off TPU; what the tpu-marked parity
-    test sweeps), "ref" (jnp scan engine), "dense" (nested-vmap core
-    recursion — traceable, and the only path for traced weight grids).
+    impl mirrors ``spdtw_gram``: "auto" routes through
+    ``soft_block.soft_spdtw_gram_batch`` — custom VJP whose forward is
+    the block-sparse Gram engine (Pallas on TPU, active-tile scan
+    elsewhere) and whose backward is the reverse active-tile sweep over
+    the stashed L blocks (fused Pallas Gram-backward kernel on TPU;
+    DESIGN.md §11). "pallas" forces the forward kernel directly
+    (interpret off TPU; what the tpu-marked parity test sweeps), "ref"
+    the forward jnp scan engine, "dense" the nested-vmap core recursion
+    (traceable, and the only path for traced weight grids; its backward
+    is the dense expected-alignment oracle). A caller-supplied ``bsp``
+    or ``tile`` pins the plan, so those calls keep the direct engine
+    path (forward-only) instead of the VJP wrapper, which resolves its
+    own default-tile plan from the weight bytes.
     """
-    impl = _resolve(impl)
-    if impl == "dense" or (bsp is None and sp is None and
-                           _is_traced(weights)):
+    impl_r = _resolve(impl)
+    if impl_r == "dense" or (bsp is None and sp is None and
+                             _is_traced(weights)):
         w = _resolve_dense_weights(sp, bsp, weights, T=A.shape[1])
         return _nested_cross(
             lambda a, b: soft_wdtw(a, b, w, float(gamma)), A, B, block_a)
+    if impl == "auto" and bsp is None and tile is None and \
+            (sp is not None or weights is not None):
+        w = sp.weights if sp is not None else weights
+        return soft_spdtw_gram_batch(jnp.asarray(A, jnp.float32),
+                                     jnp.asarray(B, jnp.float32),
+                                     jnp.asarray(w), float(gamma))
     bspr = _resolve_bsp(sp, bsp, weights, tile)
-    if impl == "ref":
+    if impl_r == "ref":
         return gram_soft_spdtw_scan(A, B, bspr, float(gamma),
                                     T_orig=A.shape[1], block_a=block_a)
     return gram_soft_spdtw_block(A, B, bspr, float(gamma),

@@ -1,17 +1,18 @@
-"""Distributed soft-SP-DTW centroid fitting (DESIGN.md §10).
+"""Distributed soft-SP-DTW centroid fitting (DESIGN.md §10, §11).
 
 Barycenter fitting is embarrassingly parallel over centroids, so the job
 mirrors ``launch/gram.py``: shard_map over the flattened mesh axes with
 the centroid stripe (k, T) row-sharded, the member set X (N, T) and the
 (k, N) assignment-weight matrix riding along (weights sharded with the
 centroids). Each chip runs the full Adam loop
-(``cluster.barycenter.soft_barycenter``: block-sparse active-tile soft
-forward, expected-alignment backward, ``train.optimizer.AdamW``) on its
-centroid rows — no cross-chip communication at all until the final
-all-gather of the fitted stripe. The learned weight grid is resolved
-host-side once per job and closed over as a constant, exactly like the
-Gram job; ``--dryrun`` lowers + compiles on the 512-chip production mesh
-from ShapeDtypeStructs only.
+(``cluster.barycenter.soft_barycenter``: block-sparse active-tile stash
+forward, reverse active-tile expected-alignment backward,
+``train.optimizer.AdamW``) on its centroid rows — no cross-chip
+communication at all until the final all-gather of the fitted stripe,
+and per-step work on both passes proportional to the learned support.
+The learned weight grid is resolved host-side once per job and closed
+over as a constant, exactly like the Gram job; ``--dryrun`` lowers +
+compiles on the 512-chip production mesh from ShapeDtypeStructs only.
 
   PYTHONPATH=src python -m repro.launch.cluster --k 8 --n 64 --t 64
   PYTHONPATH=src python -m repro.launch.cluster --dryrun --multi-pod

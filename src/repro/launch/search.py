@@ -53,6 +53,7 @@ class QueryResult:
 
     @property
     def wait_steps(self) -> int:
+        """Streaming-loop steps between submission and completion."""
         return self.completed_step - self.submitted_step
 
 
@@ -216,6 +217,10 @@ def run(dataset: str = "CBF", workload: str = "retrieval",
         arrivals_per_step: Optional[int] = None, check: bool = False,
         n_train: int = 128, centroids: int = 0, gamma: float = 0.1,
         fit_steps: int = 60, T: Optional[int] = None) -> dict:
+    """Build an engine over a synthetic-UCR corpus and stream a query
+    workload through it; returns throughput / prune-rate / accuracy
+    metrics (with ``check``, exactness vs the dense path is asserted —
+    see the CLI flags in ``main``)."""
     from repro.data import load
     kw = {} if T is None else {"T": T}
     ds = load(dataset, n_train=n_train, **kw)
@@ -280,6 +285,8 @@ def run(dataset: str = "CBF", workload: str = "retrieval",
 
 
 def main():
+    """CLI entry: ``python -m repro.launch.search [--centroids N]
+    [--check] ...`` (serving driver; DESIGN.md §8, §10)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="CBF")
     ap.add_argument("--workload", default="retrieval",
