@@ -63,6 +63,58 @@ def bench_kernel_walltime(B: int = 64, T: int = 128):
     return out
 
 
+def bench_engine_dispatch(B: int = 16, T: int = 64, reps: int = 15):
+    """Engine-dispatch overhead micro-check (DESIGN.md §12).
+
+    The fitted-engine redesign claims zero dispatch overhead: a
+    fit-once ``SimilarityEngine.gram`` loop must not be measurably
+    slower than the per-call module-level path that re-resolves
+    ``weights -> plan`` every call (both hit the same cached resolver
+    and the same execute kernel). Gated: the median-timed fit-once /
+    per-call ratio must stay under 1.5x — this is what keeps the API
+    redesign honest in CI.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import learn_sparse_paths
+    from repro.core.engine import fit
+    from repro.core.spec import MeasureSpec
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    base = np.sin(np.linspace(0, 3 * np.pi, T))
+    Xtr = (base[None] + 0.3 * rng.normal(size=(12, T))).astype(np.float32)
+    sp = learn_sparse_paths(jnp.asarray(Xtr), theta=1.0)
+    Q = jnp.asarray(rng.normal(size=(B, T)).astype(np.float32))
+    C = jnp.asarray(rng.normal(size=(B, T)).astype(np.float32))
+    engine = fit(MeasureSpec("spdtw"), sp=sp, T=T)
+
+    def per_call():
+        return ops._spdtw_gram(Q, C, weights=sp.weights)
+
+    def fit_once():
+        return engine.gram(Q, C)
+
+    def median_time(fn):
+        jax.block_until_ready(fn())            # compile + warm the caches
+        ts = []
+        for _ in range(reps):
+            t0 = time.time()
+            jax.block_until_ready(fn())
+            ts.append(time.time() - t0)
+        return float(np.median(ts))
+
+    t_call = median_time(per_call)
+    t_fit = median_time(fit_once)
+    ratio = t_fit / t_call
+    out = {"per_call_us": t_call * 1e6, "fit_once_us": t_fit * 1e6,
+           "overhead_ratio": ratio, "ok": bool(ratio < 1.5)}
+    assert out["ok"], (
+        f"engine dispatch overhead {ratio:.2f}x vs per-call resolution "
+        f"— the fit-once API must stay zero-overhead")
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -101,6 +153,7 @@ def main(argv=None):
         # the paper tables (minutes of meta-parameter search) are skipped
         from . import centroid_speedup, gram_speedup, softgrad_speedup
         run_bench("kernel_walltime", lambda: bench_kernel_walltime(B=8, T=32))
+        run_bench("engine_dispatch", lambda: bench_engine_dispatch(B=8, T=32))
         run_bench("gram_speedup",
                   lambda: gram_speedup.run(fast=True, smoke=True))
         run_bench("search_cascade",
@@ -111,6 +164,7 @@ def main(argv=None):
                   lambda: softgrad_speedup.run(fast=True, smoke=True))
     else:
         run_bench("kernel_walltime", bench_kernel_walltime)
+        run_bench("engine_dispatch", bench_engine_dispatch)
 
         from . import (centroid_speedup, gram_speedup, occupancy_fig,
                        softgrad_speedup, table2_knn, table4_svm,
@@ -142,6 +196,10 @@ def main(argv=None):
         if k.endswith("fraction"):
             continue
         print(f"kernel/{k},{v:.1f},us_per_pair")
+    if "engine_dispatch" in results:
+        e = results["engine_dispatch"]
+        print(f"engine/fit_once,{e['fit_once_us']:.1f},"
+              f"{e['overhead_ratio']:.2f}x_vs_per_call")
     if "gram_speedup" in results:
         g = results["gram_speedup"]
         print(f"gram/dense,{g['dense_us_per_pair']:.1f},us_per_pair")

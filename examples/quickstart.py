@@ -1,13 +1,16 @@
-"""Quickstart: learn a sparsified alignment search space and use it.
+"""Quickstart: spec → fit → engine (DESIGN.md §12).
+
+Learn a sparsified alignment search space from training data, fit a
+SimilarityEngine once, and run every workload — distances, Gram
+matrices, exact 1-NN, classification, gradients, barycenters — through
+it.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 import numpy as np
 
-from repro.classify import knn_error
-from repro.core import (block_sparsify, dtw, learn_sparse_paths,
-                        make_measure, spdtw, wdtw)
+from repro import MeasureSpec, fit, knn_error
 from repro.data import load
 
 # 1. a UCR-like dataset (synthesized offline; z-normalized)
@@ -15,23 +18,40 @@ ds = load("CBF", n_train=24, n_test=60)
 Xtr, Xte = jnp.asarray(ds.X_train), jnp.asarray(ds.X_test)
 print(f"CBF: {len(Xtr)} train / {len(Xte)} test, T={ds.T}")
 
-# 2. learn the occupancy grid from training alignments (paper Fig. 3)
-sp = learn_sparse_paths(Xtr, theta=2.0, gamma=0.5)
-print(f"sparse support: {sp.n_cells} of {ds.T**2} cells "
-      f"({100*(1-sp.n_cells/ds.T**2):.1f}% pruned)")
+# 2. describe the measure, then fit it: the occupancy prior (paper
+#    Fig. 3), the block-sparse tile plan and the 1-NN search index are
+#    all resolved exactly once here
+spec = MeasureSpec("spdtw", theta=2.0, weight_gamma=0.5, gamma=0.1)
+engine = fit(spec, Xtr, labels=ds.y_train)
+print(f"sparse support: {engine.sp.n_cells} of {ds.T**2} cells "
+      f"({100 * (1 - engine.sp.n_cells / ds.T**2):.1f}% pruned); "
+      f"plan: {engine.bsp.n_active} active of {engine.bsp.active.size} "
+      f"tiles ({100 * engine.bsp.tile_sparsity:.1f}% skipped)")
 
-# 3. SP-DTW between two series (vs plain DTW)
-d_sp = float(spdtw(Xte[0], Xtr[0], sp))
-d_dtw = float(dtw(Xte[0], Xtr[0]))
+# 3. SP-DTW between two series (vs a plain-DTW engine)
+d_sp = float(engine.pairs(Xte[:1], Xtr[:1])[0])
+d_dtw = float(fit(MeasureSpec("dtw"), Xtr).pairs(Xte[:1], Xtr[:1])[0])
 print(f"SP-DTW={d_sp:.3f}  DTW={d_dtw:.3f}")
 
-# 4. block-sparse layout for the TPU kernel (DESIGN.md §3)
-bsp = block_sparsify(sp, tile=16)
-print(f"TPU tiles: {bsp.n_active} active of {bsp.active.size} "
-      f"({100*bsp.tile_sparsity:.1f}% skipped)")
+# 4. retrieval + classification: the exact 1-NN lower-bound cascade and
+#    label prediction, both on the fitted index
+nn, dist = engine.knn(Xte[:8])
+pred = engine.classify(Xte)
+acc = float(np.mean(pred == np.asarray(ds.y_test)))
+print(f"1-NN spdtw accuracy={acc:.3f} "
+      f"(first neighbours: {np.asarray(nn)[:4]})")
 
-# 5. end-to-end: 1-NN error with each measure
-for name in ("euclidean", "dtw", "spdtw", "sp_krdtw"):
-    m = make_measure(name, ds.T, sp=sp, nu=0.5)
-    err = knn_error(m.cross(Xte, Xtr), ds.y_train, ds.y_test)
-    print(f"1-NN {name:10s} err={err:.3f} visited={m.visited_cells}")
+# 5. the differentiable layer: soft-SP-DTW gradients and a barycenter,
+#    both restricted to the learned support (DESIGN.md §11)
+val, gx = engine.grad(Xte[:4], Xtr[:4])
+z, losses = engine.barycenter(Xtr[:8], steps=20)
+print(f"soft values {np.asarray(val).round(2)}; barycenter loss "
+      f"{float(losses[0]):.2f} -> {float(losses[-1]):.2f}")
+
+# 6. every measure family through the same engine API
+for family in ("euclidean", "dtw", "spdtw", "sp_krdtw"):
+    eng = fit(MeasureSpec(family, nu=0.5) if family != "spdtw" else spec,
+              Xtr, labels=ds.y_train, sp=engine.sp)
+    err = knn_error(eng.gram(Xte), ds.y_train, ds.y_test)
+    print(f"1-NN {family:10s} err={err:.3f} "
+          f"visited={eng.measure.visited_cells}")

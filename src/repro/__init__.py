@@ -20,17 +20,29 @@ Layer map (one directory per layer; see README.md and DESIGN.md):
 
 This module re-exports the supported public API; the training stack
 (models/, train/, configs/) is imported explicitly by its entry points.
+
+The supported entry point is the fitted engine (DESIGN.md §12):
+
+    spec = MeasureSpec("spdtw", theta=2.0)
+    engine = fit(spec, corpus, labels=labels)
+    nn, dist = engine.knn(queries)
+
+The module-level kernel entries (``spdtw_gram`` …) are deprecated
+wrappers over the same execute bodies, kept bit-identical for
+back-compat.
 """
 from .core import (
-    ALL_MEASURES, BlockSparsePaths, CorpusIndex, Measure, SparsePaths,
-    band_mask, block_sparsify, build_corpus_index, default_tile, dtw,
-    dtw_sc, learn_sparse_paths, log_krdtw, log_krdtw_sc, log_sp_krdtw,
+    ALL_MEASURES, BlockSparsePaths, CorpusIndex, Measure, MeasureSpec,
+    SimilarityEngine, SparsePaths, band_mask, block_sparsify,
+    build_corpus_index, default_tile, dtw, dtw_sc, engine_for, fit,
+    learn_sparse_paths, log_krdtw, log_krdtw_sc, log_sp_krdtw,
     make_measure, normalize_grid, optimal_path_mask, pairwise,
     pairwise_path_counts, soft_alignment, soft_dtw, soft_spdtw, soft_wdtw,
     spdtw, spdtw_pairwise, wdtw,
 )
 from .kernels import (
-    dtw_gram, dtw_pairs, knn_cascade, log_krdtw_gram, log_krdtw_pairs,
+    Backend, available_backends, dtw_gram, dtw_pairs, knn_cascade,
+    log_krdtw_gram, log_krdtw_pairs, resolve, resolve_plan,
     soft_spdtw_gram, soft_spdtw_pairs, spdtw_gram, spdtw_pairs,
 )
 from .kernels.soft_block import (
@@ -45,6 +57,10 @@ from .classify import (
 )
 
 __all__ = [
+    # fitted-engine API (the supported surface; DESIGN.md §12)
+    "MeasureSpec", "SimilarityEngine", "engine_for", "fit",
+    # backend registry
+    "Backend", "available_backends", "resolve", "resolve_plan",
     # core: learned sparsification + measures
     "ALL_MEASURES", "BlockSparsePaths", "CorpusIndex", "Measure",
     "SparsePaths", "band_mask", "block_sparsify", "build_corpus_index",
@@ -53,7 +69,7 @@ __all__ = [
     "optimal_path_mask", "pairwise", "pairwise_path_counts",
     "soft_alignment", "soft_dtw", "soft_spdtw", "soft_wdtw", "spdtw",
     "spdtw_pairwise", "wdtw",
-    # kernels: dispatching batched/Gram entry points + cascade
+    # kernels: deprecated batched/Gram wrappers + cascade (use the engine)
     "dtw_gram", "dtw_pairs", "knn_cascade", "log_krdtw_gram",
     "log_krdtw_pairs", "soft_spdtw_gram", "soft_spdtw_pairs", "spdtw_gram",
     "spdtw_pairs",

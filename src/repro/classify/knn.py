@@ -29,29 +29,33 @@ def knn_error(cross: jnp.ndarray, y_train, y_test) -> float:
 def knn_error_series(X_test, X_train, y_train, y_test, *,
                      kind: str = "spdtw", sp=None, nu: float = 1.0,
                      impl: str = "auto", cascade: bool = True) -> float:
-    """1-NN error straight from raw series.
+    """1-NN error straight from raw series, through the fitted engine.
 
-    For the dissimilarity kinds ("dtw" / "spdtw") the default routes
-    through the lower-bound cascade (``kernels.ops.knn_cascade``):
-    bounds prune most candidates before any DP runs and the survivors go
-    through the fused masked engine — exact by construction, so the error
-    is identical to the full cross-matrix path. ``impl="dense"`` (the
-    historical baseline) or ``cascade=False`` fall back to the full
-    (N_test, N_train) cross matrix via ``pairwise`` (block-sparse Pallas
-    kernel on TPU, active-tile scan elsewhere — never a repeat/tile pair
-    expansion). Kernel kinds always take the full-Gram path (negated into
-    dissimilarities): the cascade has no admissible bounds for them.
+    The engine (``core.engine.fit``) resolves support, plan and index
+    once; for the dissimilarity kinds ("dtw" / "spdtw") ``engine.knn``
+    runs the lower-bound cascade — bounds prune most candidates before
+    any DP runs and the survivors go through the fused masked engine —
+    exact by construction, so the error is identical to the full
+    cross-matrix path. ``impl="dense"`` (the historical baseline) or
+    ``cascade=False`` fall back to the full (N_test, N_train) Gram
+    argmin (block-sparse Pallas kernel on TPU, active-tile scan
+    elsewhere — never a repeat/tile pair expansion). Kernel kinds always
+    take the full-Gram path (negated into dissimilarities): the cascade
+    has no admissible bounds for them. Accepts (N, T) or (N, T, d)
+    series (multivariate 1-NN runs the exact Gram argmin).
     """
-    from repro.core.measures import make_measure, pairwise
+    from repro.core.engine import engine_for
     X_test = jnp.asarray(X_test)
     X_train = jnp.asarray(X_train)
+    eng = engine_for(kind, sp=sp, nu=nu, T=X_train.shape[1])
     if cascade and kind in ("dtw", "spdtw") and impl != "dense":
-        m = make_measure(kind, X_train.shape[1], sp=sp)
-        nn, _ = m.knn(X_test, X_train, impl=impl)
-        return error_rate(jnp.asarray(y_train)[nn], jnp.asarray(y_test))
-    cross = pairwise(X_test, X_train, kind, sp=sp, nu=nu, impl=impl)
-    if kind in ("krdtw", "sp_krdtw"):
-        cross = -cross
+        # index construction (envelopes + windows) only on the branch
+        # that consumes it; the Gram paths below never read the index
+        nn, _ = eng.with_corpus(X_train, labels=y_train).knn(X_test,
+                                                             impl=impl)
+        return error_rate(jnp.asarray(np.asarray(y_train))[nn],
+                          jnp.asarray(np.asarray(y_test)))
+    cross = eng.gram(X_test, X_train, impl=impl)
     return knn_error(cross, y_train, y_test)
 
 

@@ -61,21 +61,24 @@ def svm_gram_series(X_train, X_test, *, kind: str = "sp_krdtw", sp=None,
                     nu: float = 1.0, impl: str = "auto"):
     """Cosine-normalized SVM Gram blocks straight from raw series.
 
-    Routes the two all-pairs log-kernel blocks through the fused Gram engine
-    (``repro.core.measures.pairwise``); only the test-set self-similarities
-    fall back to a vmapped single-pair evaluation. Returns (K_train, K_test)
-    ready for ``svm_fit`` / ``svm_predict``.
+    Fits a kernel engine once (``core.engine.engine_for``) and routes
+    the two all-pairs log-kernel blocks through ``engine.gram_log`` (the
+    fused Gram engine); only the test-set self-similarities fall back to
+    a vmapped single-pair evaluation. Returns (K_train, K_test) ready
+    for ``svm_fit`` / ``svm_predict``.
     """
+    from repro.core.engine import engine_for
     from repro.core.krdtw import log_krdtw, normalized_gram
-    from repro.core.measures import pairwise
     Xtr = jnp.asarray(X_train)
     Xte = jnp.asarray(X_test)
     support = None
     if kind == "sp_krdtw":
         assert sp is not None, "sp_krdtw needs the learned SparsePaths"
         support = sp.support
-    lg_tt = pairwise(Xtr, Xtr, kind, sp=sp, nu=nu, impl=impl)
-    lg_et = pairwise(Xte, Xtr, kind, sp=sp, nu=nu, impl=impl)
+    eng = engine_for(kind, sp=sp, nu=nu, T=Xtr.shape[1]) \
+        .with_corpus(Xtr)
+    lg_tt = eng.gram_log(Xtr, impl=impl)
+    lg_et = eng.gram_log(Xte, impl=impl)
     d_tt = jnp.diag(lg_tt)
     d_ee = jax.vmap(lambda x: log_krdtw(x, x, nu, support))(Xte)
     return (normalized_gram(lg_tt, d_tt, d_tt),

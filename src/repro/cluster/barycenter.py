@@ -69,7 +69,8 @@ def soft_barycenter(X: jnp.ndarray, weights: jnp.ndarray, gamma: float = 0.1,
             z0 = jnp.mean(X, axis=0)
         else:
             sw = jnp.asarray(sample_weights, jnp.float32)
-            z0 = jnp.sum(X * sw[:, None], axis=0) / \
+            swb = sw.reshape((-1,) + (1,) * (X.ndim - 1))
+            z0 = jnp.sum(X * swb, axis=0) / \
                 jnp.maximum(jnp.sum(sw), 1e-8)
     else:
         z0 = jnp.asarray(init, jnp.float32)

@@ -5,7 +5,7 @@ corpus-sized) work per query; k centroids collapse that to k masked DPs.
 This module owns the centroid *models*:
 
   * ``soft_kmeans``       — k-means under SP-DTW: hard block-sparse Gram
-                            assignment (``kernels.ops.spdtw_gram``),
+                            assignment (``SimilarityEngine.gram``),
                             soft-SP-DTW barycenter update (Adam on the
                             block-sparse stash-forward / reverse-sweep
                             VJP of DESIGN.md §11, warm-started from the
@@ -17,7 +17,7 @@ This module owns the centroid *models*:
                             and per-centroid *medoids* (the corpus entry
                             nearest each centroid) — the exact-candidate
                             handle the centroid-seeded cascade needs
-                            (``kernels.ops.knn_cascade``).
+                            (``SimilarityEngine.knn``).
 
 Nearest-centroid *classification* wrappers live in
 ``classify/centroid.py``; the sharded fitting job in
@@ -31,10 +31,15 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.occupancy import (BlockSparsePaths, block_sparsify,
-                                  default_tile)
-from repro.kernels import ops
+from repro.core.occupancy import BlockSparsePaths
 from .barycenter import soft_barycenter
+
+
+def _spdtw_engine(weights=None, bsp=None, gamma: float = 0.1):
+    """Support-only spdtw engine over the model's grid (plan resolution
+    hits the cached resolver in ``kernels.backends``)."""
+    from repro.core.engine import engine_for
+    return engine_for("spdtw", weights=weights, bsp=bsp, gamma=gamma)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,16 +66,19 @@ class CentroidModel:
         return int(self.centroids.shape[0])
 
     def distances(self, Q, impl: str = "auto") -> jnp.ndarray:
-        """(Nq, k) hard SP-DTW distances query -> centroid."""
-        return ops.spdtw_gram(jnp.asarray(Q, jnp.float32), self.centroids,
-                              bsp=self.bsp, weights=self.weights, impl=impl)
+        """(Nq, k) hard SP-DTW distances query -> centroid (routed
+        through the fitted-engine execute layer)."""
+        eng = _spdtw_engine(weights=self.weights, bsp=self.bsp,
+                            gamma=self.gamma)
+        return eng.gram(jnp.asarray(Q, jnp.float32), self.centroids,
+                        impl=impl)
 
 
 def _model_bsp(weights, bsp=None) -> BlockSparsePaths:
     if bsp is not None:
         return bsp
-    w = np.asarray(weights, np.float32)
-    return block_sparsify(w, tile=default_tile(w.shape[0]))
+    from repro.kernels.backends import resolve_plan
+    return resolve_plan(weights=np.asarray(weights, np.float32))
 
 
 def nearest_centroid(Q, model: CentroidModel,
@@ -84,9 +92,9 @@ def nearest_centroid(Q, model: CentroidModel,
 def medoid_indices(X, centroids, weights, bsp=None,
                    impl: str = "auto") -> np.ndarray:
     """Corpus index of the member nearest each centroid (hard SP-DTW)."""
-    D = ops.spdtw_gram(jnp.asarray(centroids, jnp.float32),
-                       jnp.asarray(X, jnp.float32),
-                       bsp=bsp, weights=weights, impl=impl)
+    eng = _spdtw_engine(weights=weights, bsp=bsp)
+    D = eng.gram(jnp.asarray(centroids, jnp.float32),
+                 jnp.asarray(X, jnp.float32), impl=impl)
     return np.asarray(jnp.argmin(D, axis=1), np.int32)
 
 
@@ -108,11 +116,12 @@ def soft_kmeans(X, k: int, weights, gamma: float = 0.1, *, iters: int = 4,
     k = min(k, N)
     rng = np.random.default_rng(seed)
     bsp = _model_bsp(weights, bsp)
+    eng = _spdtw_engine(weights=weights, bsp=bsp, gamma=gamma)
     Z = X[jnp.asarray(rng.choice(N, size=k, replace=False))]
     inertia = []
     assign = None
     for _ in range(iters):
-        D = ops.spdtw_gram(X, Z, bsp=bsp, weights=weights, impl=impl)
+        D = eng.gram(X, Z, impl=impl)
         assign = jnp.argmin(D, axis=1)
         inertia.append(float(jnp.mean(jnp.min(D, axis=1))))
         A = (assign[None, :] == jnp.arange(k)[:, None])        # (k, N)

@@ -9,6 +9,8 @@ Public API:
   log_krdtw, log_krdtw_sc, log_sp_krdtw             (krdtw.py)
   lb_kim_cross, lb_keogh_cross, envelopes, ...      (bounds.py)
   make_measure, Measure, CorpusIndex, ALL_MEASURES  (measures.py)
+  MeasureSpec                                       (spec.py)
+  fit, SimilarityEngine, engine_for                 (engine.py)
 """
 from .dtw import (INF, band_cells, band_mask, dtw, dtw_matrix, dtw_sc,
                   local_cost, minplus_scan, wdtw)
@@ -26,3 +28,5 @@ from .bounds import (envelopes, lb_keogh_cross, lb_kim_cross,
                      row_min_weights, support_extents)
 from .measures import (ALL_MEASURES, CorpusIndex, Measure,
                        build_corpus_index, make_measure, pairwise)
+from .spec import MeasureSpec
+from .engine import SimilarityEngine, engine_for, fit

@@ -58,10 +58,10 @@ def pairwise(A: jnp.ndarray, B: jnp.ndarray, kind: str = "spdtw", *,
     """
     from repro.kernels import ops  # deferred: kernels package imports core
     if kind == "spdtw":
-        return ops.spdtw_gram(A, B, sp=sp, bsp=bsp, weights=weights,
-                              impl=impl, block_a=block_a)
+        return ops._spdtw_gram(A, B, sp=sp, bsp=bsp, weights=weights,
+                               impl=impl, block_a=block_a)
     if kind == "dtw":
-        return ops.dtw_gram(A, B, impl=impl, block_a=block_a)
+        return ops._dtw_gram(A, B, impl=impl, block_a=block_a)
     if kind in ("krdtw", "sp_krdtw"):
         support = None
         if kind == "sp_krdtw":
@@ -71,8 +71,8 @@ def pairwise(A: jnp.ndarray, B: jnp.ndarray, kind: str = "spdtw", *,
                 support = weights > 0
             else:
                 raise ValueError("sp_krdtw needs sp or weights")
-        return ops.log_krdtw_gram(A, B, nu, support=support, radius=radius,
-                                  impl=impl, block_a=block_a)
+        return ops._log_krdtw_gram(A, B, nu, support=support, radius=radius,
+                                   impl=impl, block_a=block_a)
     raise ValueError(f"pairwise does not support kind {kind!r}")
 
 
@@ -336,9 +336,9 @@ class Measure:
         Returns (nn_idx, nn_dist[, stats])."""
         from repro.kernels import ops  # deferred: kernels imports core
         index = self.build_index(corpus)
-        return ops.knn_cascade(jnp.asarray(queries, jnp.float32), index,
-                               impl=impl, seed_k=seed_k,
-                               return_stats=return_stats)
+        return ops._knn_cascade(jnp.asarray(queries, jnp.float32), index,
+                                impl=impl, seed_k=seed_k,
+                                return_stats=return_stats)
 
 
 def make_measure(name: str, T: int, *,

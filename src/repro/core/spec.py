@@ -1,0 +1,115 @@
+"""MeasureSpec: the frozen description of a measure (DESIGN.md §12).
+
+One immutable record fully describes a (dis)similarity measure before
+any corpus is seen: the family (which DP recursion), the support source
+(where the sparse search space comes from), and every meta-parameter
+(theta / weighting exponent / soft temperature / kernel bandwidth / band
+radius / tile edge). ``repro.core.engine.fit(spec, corpus)`` turns a
+spec plus data into a ``SimilarityEngine``; nothing in the spec itself
+touches arrays, so it is hashable, comparable, and registered as a
+leafless pytree — it crosses jit boundaries as static metadata.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+FAMILIES = ("euclidean", "corr", "daco", "dtw", "dtw_sc", "spdtw",
+            "krdtw", "krdtw_sc", "sp_krdtw")
+SUPPORTS = ("learned", "band", "dense")
+
+# families whose support grid comes from the learned occupancy prior
+SPARSE_FAMILIES = ("spdtw", "sp_krdtw")
+# families evaluated in the log-kernel semiring (similarities, not
+# dissimilarities; SVM-ready via ``gram_log``)
+KERNEL_FAMILIES = ("krdtw", "krdtw_sc", "sp_krdtw")
+# families the fused block-sparse Gram engines cover
+GRAM_FAMILIES = ("dtw", "spdtw", "krdtw", "sp_krdtw")
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasureSpec:
+    """Frozen, array-free description of one measure.
+
+    family:       which recursion — "dtw", "spdtw", "krdtw",
+                  "sp_krdtw", "dtw_sc", "krdtw_sc", or a baseline
+                  ("euclidean" / "corr" / "daco").
+    support:      where the search space comes from — "learned" (the
+                  paper's occupancy prior, thresholded at ``theta``,
+                  weighted by ``f(p) = p^-weight_gamma``), "band" (a
+                  Sakoe-Chiba corridor of half-width ``radius``), or
+                  "dense" (the full grid).
+    theta:        occupancy threshold for the learned support (Fig. 4).
+    weight_gamma: weighting exponent of Eq. 9 (0 = unit weights).
+    gamma:        soft-min temperature of the differentiable layer
+                  (``engine.soft_pairs`` / ``grad`` / ``barycenter``).
+    nu:           local-kernel bandwidth of the K_rdtw families.
+    radius:       Sakoe-Chiba half-width ("band" support and the *_sc
+                  families).
+    lags:         DACO lag count (baseline family only).
+    tile:         block edge of the block-sparse plan (None = pick by
+                  series length, ``occupancy.default_tile``).
+    """
+    family: str = "spdtw"
+    support: str = "learned"
+    theta: float = 1.0
+    weight_gamma: float = 0.0
+    gamma: float = 0.1
+    nu: float = 1.0
+    radius: int = 10
+    lags: int = 10
+    tile: Optional[int] = None
+
+    def __post_init__(self):
+        if self.family not in FAMILIES:
+            raise ValueError(f"unknown family {self.family!r}; "
+                             f"one of {FAMILIES}")
+        if self.support not in SUPPORTS:
+            raise ValueError(f"unknown support {self.support!r}; "
+                             f"one of {SUPPORTS}")
+        if self.family in SPARSE_FAMILIES and self.support == "dense":
+            # spdtw with a dense all-ones grid *is* dtw; keep the spec
+            # honest rather than silently aliasing measures
+            raise ValueError(f"{self.family} requires a sparse support "
+                             f"('learned' or 'band'); use family='dtw' "
+                             f"or 'krdtw' for the dense measure")
+        if self.gamma <= 0:
+            raise ValueError("gamma must be positive (soft-min "
+                             "temperature)")
+
+    # ---- derived properties ----------------------------------------------
+    @property
+    def is_kernel(self) -> bool:
+        """True for similarity (log-kernel) families."""
+        return self.family in KERNEL_FAMILIES
+
+    @property
+    def is_sparse(self) -> bool:
+        """True when the support is learned from data (SP-* families)."""
+        return self.family in SPARSE_FAMILIES
+
+    @property
+    def needs_weights(self) -> bool:
+        """True when fitting must produce a (T, T) weight grid (every
+        family the block-sparse plan layer covers)."""
+        return self.family in GRAM_FAMILIES or self.family == "dtw_sc"
+
+    def replace(self, **changes) -> "MeasureSpec":
+        """Functional update (specs are frozen)."""
+        return dataclasses.replace(self, **changes)
+
+
+def spec(family: str = "spdtw", **kw) -> MeasureSpec:
+    """Shorthand factory: ``spec("spdtw", theta=2.0)``."""
+    return MeasureSpec(family=family, **kw)
+
+
+# A MeasureSpec is pure static metadata: register it as a leafless
+# pytree so jitted code can close over it / take it as an argument
+# without tracing anything.
+jax.tree_util.register_pytree_node(
+    MeasureSpec,
+    lambda s: ((), s),
+    lambda s, _: s)

@@ -1,8 +1,13 @@
 """repro.kernels — Pallas TPU kernels for the paper's DP hot loops.
 
-Each kernel has a pure-jnp oracle in ref.py; ops.py is the dispatching
-public API (pallas on TPU, reference path elsewhere, interpret in tests).
+Each kernel has a pure-jnp oracle in ref.py; backends.py is the backend
+registry + capability resolver (DESIGN.md §12); ops.py hosts the
+execute-layer dispatch bodies the fitted engine calls (its module-level
+names are deprecated wrappers kept for back-compat).
 """
+from . import backends
+from .backends import (Backend, available_backends, get_backend,
+                       register_backend, resolve, resolve_plan)
 from .ops import (dtw_pairs, dtw_banded_pairs, spdtw_pairs, log_krdtw_pairs,
                   spdtw_gram, dtw_gram, log_krdtw_gram, knn_cascade,
                   soft_spdtw_pairs, soft_spdtw_gram)

@@ -86,7 +86,7 @@ def _pair_batch(xa: jnp.ndarray, yb: jnp.ndarray, ba: int, bb: int):
 def _gram_spdtw_kernel(meta_ref, a_ref, b_ref, w_ref, thr_ref, alive0_ref,
                        out_ref, row_edge, col_edge, corner_next, d_ri, alive,
                        *, S: int, g_out: int, ri: int, rj: int,
-                       ba: int, bb: int):
+                       ba: int, bb: int, d: int):
     """One grid step = one active tile for one (A-stripe, B-stripe) block."""
     g = pl.program_id(2)
     bt = ba * bb
@@ -121,9 +121,10 @@ def _gram_spdtw_kernel(meta_ref, a_ref, b_ref, w_ref, thr_ref, alive0_ref,
         left_ok = meta_ref[g, 4] > 0
         diag_ok = meta_ref[g, 5] > 0
 
-        xa = pl.load(a_ref, (slice(None), pl.dslice(ti * S, S)))   # (ba, S)
-        yb = pl.load(b_ref, (slice(None), pl.dslice(tj * S, S)))   # (bb, S)
-        x, y = _pair_batch(xa, yb, ba, bb)                         # (bt, S)
+        # tile-major layout: tile ti's d channel planes are contiguous
+        xa = pl.load(a_ref, (slice(None), pl.dslice(ti * d * S, d * S)))
+        yb = pl.load(b_ref, (slice(None), pl.dslice(tj * d * S, d * S)))
+        x, y = _pair_batch(xa, yb, ba, bb)                         # (bt, d*S)
         w = w_ref[0]                                               # (S, S)
 
         # --- gather incoming edges (guarded against inactive neighbours) ---
@@ -145,7 +146,7 @@ def _gram_spdtw_kernel(meta_ref, a_ref, b_ref, w_ref, thr_ref, alive0_ref,
         new_corner = top_vec[:, S - 1:S]
 
         d_last, rightcol, dri = tile_sweep(x, y, w, top_vec, left_vec,
-                                           c_first, S=S, ri=ri)
+                                           c_first, S=S, ri=ri, d=d)
 
         # --- publish edges for downstream tiles of this pair block ---
         corner_next[...] = new_corner
@@ -166,24 +167,25 @@ def _gram_spdtw_kernel(meta_ref, a_ref, b_ref, w_ref, thr_ref, alive0_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("S", "n_active", "T_orig", "g_out",
-                                    "ba", "bb", "interpret"))
+                                    "ba", "bb", "d", "interpret"))
 def _gram_spdtw_call(meta, A, B, blocks, thr, alive0, *, S, n_active, T_orig,
-                     g_out, ba, bb, interpret):
-    Nap, Tp = A.shape
+                     g_out, ba, bb, d, interpret):
+    Nap, Tw = A.shape
     Nbp = B.shape[0]
+    Tp = Tw // d                    # DP grid edge (padded)
     last = T_orig - 1
     ri, rj = last % S, last % S
     grid = (Nap // ba, Nbp // bb, n_active)
     kernel = functools.partial(_gram_spdtw_kernel, S=S, g_out=g_out,
-                               ri=ri, rj=rj, ba=ba, bb=bb)
+                               ri=ri, rj=rj, ba=ba, bb=bb, d=d)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
             # index maps constant in the inner axes: each stripe is copied to
             # VMEM once per (A-tile, B-tile) and revisited for every g
-            pl.BlockSpec((ba, Tp), lambda i, j, g, m: (i, 0)),
-            pl.BlockSpec((bb, Tp), lambda i, j, g, m: (j, 0)),
+            pl.BlockSpec((ba, Tw), lambda i, j, g, m: (i, 0)),
+            pl.BlockSpec((bb, Tw), lambda i, j, g, m: (j, 0)),
             pl.BlockSpec((1, S, S), lambda i, j, g, m: (m[g, 2], 0, 0)),
             pl.BlockSpec((ba, 1), lambda i, j, g, m: (i, 0)),    # thresholds
             pl.BlockSpec((ba, bb), lambda i, j, g, m: (i, j)),   # alive0
@@ -238,14 +240,17 @@ def gram_spdtw_block(A: jnp.ndarray, B: jnp.ndarray, bsp: BlockSparsePaths,
                      interpret: bool = False) -> jnp.ndarray:
     """All-pairs SP-DTW Gram matrix via the fused block-sparse Pallas kernel.
 
-    A: (Na, T), B: (Nb, T) f32. Returns (Na, Nb) SP-DTW values (>= 1e29
-    where the support admits no path). Ragged Na/Nb are padded to the tile
-    batch and sliced back. ``thresholds`` ((Na,), per-A-row) and ``alive0``
-    ((Na, Nb) bool) switch on the early-abandon sweep: pairs that start
-    dead or whose running row-min exceeds the threshold report +INF.
+    A: (Na, T) or (Na, T, d); B likewise. Returns (Na, Nb) SP-DTW values
+    (>= 1e29 where the support admits no path). Ragged Na/Nb are padded to
+    the tile batch and sliced back. ``thresholds`` ((Na,), per-A-row) and
+    ``alive0`` ((Na, Nb) bool) switch on the early-abandon sweep: pairs
+    that start dead or whose running row-min exceeds the threshold report
+    +INF.
     """
-    Na, T = A.shape
+    from .backends import series_dim, to_tile_major
+    Na, T = A.shape[0], A.shape[1]
     Nb = B.shape[0]
+    d = series_dim(A)
     T_orig = T if T_orig is None else T_orig
     assert T_orig <= bsp.T
     meta = bsp.plan()
@@ -257,10 +262,10 @@ def gram_spdtw_block(A: jnp.ndarray, B: jnp.ndarray, bsp: BlockSparsePaths,
     Nbp = ((Nb + bb - 1) // bb) * bb
     thr, alive = _pad_abandon_state(thresholds, alive0, Na, Nb, Nap, Nbp)
     out = _gram_spdtw_call(
-        jnp.asarray(meta), _pad_rows_cols(A, Nap, bsp.T),
-        _pad_rows_cols(B, Nbp, bsp.T), jnp.asarray(bsp.blocks), thr, alive,
-        S=bsp.tile, n_active=n_active, T_orig=T_orig, g_out=g_out,
-        ba=ba, bb=bb, interpret=interpret)
+        jnp.asarray(meta), to_tile_major(A, bsp.tile, bsp.T, n_to=Nap),
+        to_tile_major(B, bsp.tile, bsp.T, n_to=Nbp), jnp.asarray(bsp.blocks),
+        thr, alive, S=bsp.tile, n_active=n_active, T_orig=T_orig,
+        g_out=g_out, ba=ba, bb=bb, d=d, interpret=interpret)
     return out[:Na, :Nb]
 
 
@@ -269,11 +274,13 @@ def gram_spdtw_block(A: jnp.ndarray, B: jnp.ndarray, bsp: BlockSparsePaths,
 # ---------------------------------------------------------------------------
 
 def _tile_scan(meta, blocks, get_xy, P, Tp, thr_p, alive_p, *, S, g_out, ri,
-               sweep=tile_sweep, neutral: float = INF, stash: bool = False):
+               sweep=tile_sweep, neutral: float = INF, stash: bool = False,
+               d: int = 1):
     """Shared lax.scan over the active-tile schedule (DP wavefront order).
 
-    ``get_xy(ti, tj) -> ((P, S), (P, S))`` supplies the per-pair series
-    tiles — the cross-product Gram engine expands (A-stripe x B-stripe)
+    ``get_xy(ti, tj) -> ((P, d*S), (P, d*S))`` supplies the per-pair series
+    tiles (tile-major / channel-inner; d = 1 is the historical (P, S)) —
+    the cross-product Gram engine expands (A-stripe x B-stripe)
     batches, the paired engine slices aligned rows. Returns
     (row_edge, dri, alive) after the sweep: the final bottom-edge state
     (its row-min is an admissible lower bound — the prefix-bound stage),
@@ -319,7 +326,7 @@ def _tile_scan(meta, blocks, get_xy, P, Tp, thr_p, alive_p, *, S, g_out, ri,
             jnp.where(m[5] > 0,
                       jnp.where(m[4] > 0, corner, corner_row),
                       jnp.full((P, 1), neutral, dtype)))
-        out = sweep(x, y, w, top_vec, left_vec, c_first, S=S, ri=ri)
+        out = sweep(x, y, w, top_vec, left_vec, c_first, S=S, ri=ri, d=d)
         (d_last, rightcol, dri), rest = out[:3], out[3:]
         row_edge = jax.lax.dynamic_update_slice_in_dim(row_edge, d_last,
                                                        tj * S, axis=1)
@@ -338,10 +345,11 @@ def _tile_scan(meta, blocks, get_xy, P, Tp, thr_p, alive_p, *, S, g_out, ri,
     return row_edge, dri, alive
 
 
-@functools.partial(jax.jit, static_argnames=("S", "T_orig", "g_out"))
+@functools.partial(jax.jit, static_argnames=("S", "T_orig", "g_out", "d"))
 def _gram_spdtw_scan_call(meta, A, B, blocks, thr, alive0, *, S, T_orig,
-                          g_out):
-    Na, Tp = A.shape
+                          g_out, d):
+    Na = A.shape[0]
+    Tp = A.shape[1] // d
     Nb = B.shape[0]
     P = Na * Nb
     last = T_orig - 1
@@ -349,13 +357,13 @@ def _gram_spdtw_scan_call(meta, A, B, blocks, thr, alive0, *, S, T_orig,
     thr_p = jnp.repeat(thr.reshape(Na, 1), Nb, axis=0)         # (P, 1)
 
     def get_xy(ti, tj):
-        xa = jax.lax.dynamic_slice(A, (0, ti * S), (Na, S))
-        yb = jax.lax.dynamic_slice(B, (0, tj * S), (Nb, S))
+        xa = jax.lax.dynamic_slice(A, (0, ti * d * S), (Na, d * S))
+        yb = jax.lax.dynamic_slice(B, (0, tj * d * S), (Nb, d * S))
         return _pair_batch(xa, yb, Na, Nb)
 
     _, dri, alive = _tile_scan(meta, blocks, get_xy, P, Tp, thr_p,
                                alive0.reshape(P, 1) > 0,
-                               S=S, g_out=g_out, ri=ri)
+                               S=S, g_out=g_out, ri=ri, d=d)
     val = jax.lax.dynamic_slice_in_dim(dri, rj, 1, axis=1)
     return jnp.where(alive, val, INF).reshape(Na, Nb)
 
@@ -366,17 +374,20 @@ def gram_spdtw_scan(A: jnp.ndarray, B: jnp.ndarray, bsp: BlockSparsePaths,
                     alive0: jnp.ndarray | None = None) -> jnp.ndarray:
     """All-pairs SP-DTW Gram matrix: lax.scan over the active-tile schedule.
 
-    Same schedule, edge dataflow and ``tile_sweep`` math as the Pallas
-    kernel, expressed as a scan — work is Na*Nb*n_active*S^2 on any backend
-    and the pair batch is broadcast per tile, never materialized in HBM at
-    (Na*Nb, T). A rows are chunked (``block_a``) to bound the carried
-    edge-state footprint. ``thresholds`` / ``alive0`` drive the same
-    early-abandon sweep as the Pallas kernel (abandoned pairs report +INF;
-    lanes still stream through the vector engine — the wall-clock win on
-    this path comes from the cascade never scheduling pruned pairs).
+    A: (Na, T) or (Na, T, d); B likewise. Same schedule, edge dataflow and
+    ``tile_sweep`` math as the Pallas kernel, expressed as a scan — work
+    is Na*Nb*n_active*S^2 on any backend and the pair batch is broadcast
+    per tile, never materialized in HBM at (Na*Nb, T). A rows are chunked
+    (``block_a``) to bound the carried edge-state footprint.
+    ``thresholds`` / ``alive0`` drive the same early-abandon sweep as the
+    Pallas kernel (abandoned pairs report +INF; lanes still stream
+    through the vector engine — the wall-clock win on this path comes
+    from the cascade never scheduling pruned pairs).
     """
-    Na, T = A.shape
+    from .backends import series_dim, to_tile_major
+    Na, T = A.shape[0], A.shape[1]
     Nb = B.shape[0]
+    d = series_dim(A)
     T_orig = T if T_orig is None else T_orig
     assert T_orig <= bsp.T
     g_out = result_tile_step(bsp.plan(), bsp.tile, T_orig)
@@ -384,30 +395,32 @@ def gram_spdtw_scan(A: jnp.ndarray, B: jnp.ndarray, bsp: BlockSparsePaths,
         return jnp.full((Na, Nb), INF, jnp.float32)
     meta = jnp.asarray(bsp.plan())
     blocks = jnp.asarray(bsp.blocks)
-    Ap = jnp.pad(A.astype(jnp.float32), ((0, 0), (0, bsp.T - T)))
-    Bp = jnp.pad(B.astype(jnp.float32), ((0, 0), (0, bsp.T - T)))
+    Ap = to_tile_major(A, bsp.tile, bsp.T)
+    Bp = to_tile_major(B, bsp.tile, bsp.T)
     thr, alive = _pad_abandon_state(thresholds, alive0, Na, Nb, Na, Nb)
     rows = []
     for s in range(0, Na, block_a):
         rows.append(_gram_spdtw_scan_call(
             meta, Ap[s:s + block_a], Bp, blocks, thr[s:s + block_a],
-            alive[s:s + block_a], S=bsp.tile, T_orig=T_orig, g_out=g_out))
+            alive[s:s + block_a], S=bsp.tile, T_orig=T_orig, g_out=g_out,
+            d=d))
     return jnp.concatenate(rows, axis=0)
 
 
-@functools.partial(jax.jit, static_argnames=("S", "T_orig", "g_out"))
-def _spdtw_paired_scan_call(meta, X, Y, blocks, thr, *, S, T_orig, g_out):
-    P, Tp = X.shape
+@functools.partial(jax.jit, static_argnames=("S", "T_orig", "g_out", "d"))
+def _spdtw_paired_scan_call(meta, X, Y, blocks, thr, *, S, T_orig, g_out, d):
+    P = X.shape[0]
+    Tp = X.shape[1] // d
     last = T_orig - 1
     ri, rj = last % S, last % S
 
     def get_xy(ti, tj):
-        return (jax.lax.dynamic_slice(X, (0, ti * S), (P, S)),
-                jax.lax.dynamic_slice(Y, (0, tj * S), (P, S)))
+        return (jax.lax.dynamic_slice(X, (0, ti * d * S), (P, d * S)),
+                jax.lax.dynamic_slice(Y, (0, tj * d * S), (P, d * S)))
 
     _, dri, alive = _tile_scan(meta, blocks, get_xy, P, Tp,
                                thr.reshape(P, 1), jnp.ones((P, 1), bool),
-                               S=S, g_out=g_out, ri=ri)
+                               S=S, g_out=g_out, ri=ri, d=d)
     val = jax.lax.dynamic_slice_in_dim(dri, rj, 1, axis=1)
     return jnp.where(alive, val, INF).reshape(P)
 
@@ -418,14 +431,17 @@ def spdtw_paired_scan(x: jnp.ndarray, y: jnp.ndarray, bsp: BlockSparsePaths,
                       block_p: int = 4096) -> jnp.ndarray:
     """Batched *aligned-pair* SP-DTW over the active-tile schedule.
 
-    x, y: (B, T) — pair p is (x[p], y[p]), no cross product. Same schedule
-    and ``tile_sweep`` math as the Gram engines, so work is B*n_active*S^2:
-    unlike ``ref.wdtw_batch`` this exploits the learned sparsity on CPU/GPU
-    too. The cascade's survivor stage runs here after gathering the pairs
-    that outlived the bounds. Optional per-pair ``thresholds`` engage the
-    early-abandon sweep (abandoned pairs report +INF).
+    x, y: (B, T) or (B, T, d) — pair p is (x[p], y[p]), no cross product.
+    Same schedule and ``tile_sweep`` math as the Gram engines, so work is
+    B*n_active*S^2: unlike ``ref.wdtw_batch`` this exploits the learned
+    sparsity on CPU/GPU too. The cascade's survivor stage runs here after
+    gathering the pairs that outlived the bounds. Optional per-pair
+    ``thresholds`` engage the early-abandon sweep (abandoned pairs report
+    +INF).
     """
-    B, T = x.shape
+    from .backends import series_dim, to_tile_major
+    B, T = x.shape[0], x.shape[1]
+    d = series_dim(x)
     T_orig = T if T_orig is None else T_orig
     assert T_orig <= bsp.T
     g_out = result_tile_step(bsp.plan(), bsp.tile, T_orig)
@@ -433,15 +449,16 @@ def spdtw_paired_scan(x: jnp.ndarray, y: jnp.ndarray, bsp: BlockSparsePaths,
         return jnp.full((B,), INF, jnp.float32)
     meta = jnp.asarray(bsp.plan())
     blocks = jnp.asarray(bsp.blocks)
-    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, bsp.T - T)))
-    yp = jnp.pad(y.astype(jnp.float32), ((0, 0), (0, bsp.T - T)))
+    xp = to_tile_major(x, bsp.tile, bsp.T)
+    yp = to_tile_major(y, bsp.tile, bsp.T)
     thr = jnp.full((B,), INF, jnp.float32) if thresholds is None \
         else jnp.asarray(thresholds, jnp.float32)
     outs = []
     for s in range(0, B, block_p):
         outs.append(_spdtw_paired_scan_call(
             meta, xp[s:s + block_p], yp[s:s + block_p], blocks,
-            thr[s:s + block_p], S=bsp.tile, T_orig=T_orig, g_out=g_out))
+            thr[s:s + block_p], S=bsp.tile, T_orig=T_orig, g_out=g_out,
+            d=d))
     return jnp.concatenate(outs, axis=0)
 
 
@@ -462,20 +479,21 @@ def prefix_tile_count(bsp: BlockSparsePaths, frac: float,
     return int((meta[:, 0] < kt).sum())
 
 
-@functools.partial(jax.jit, static_argnames=("S",))
-def _gram_prefix_bound_call(meta_p, A, B, blocks, *, S):
-    Na, Tp = A.shape
+@functools.partial(jax.jit, static_argnames=("S", "d"))
+def _gram_prefix_bound_call(meta_p, A, B, blocks, *, S, d):
+    Na = A.shape[0]
+    Tp = A.shape[1] // d
     Nb = B.shape[0]
     P = Na * Nb
 
     def get_xy(ti, tj):
-        xa = jax.lax.dynamic_slice(A, (0, ti * S), (Na, S))
-        yb = jax.lax.dynamic_slice(B, (0, tj * S), (Nb, S))
+        xa = jax.lax.dynamic_slice(A, (0, ti * d * S), (Na, d * S))
+        yb = jax.lax.dynamic_slice(B, (0, tj * d * S), (Nb, d * S))
         return _pair_batch(xa, yb, Na, Nb)
 
     row_edge, _, _ = _tile_scan(
         meta_p, blocks, get_xy, P, Tp, jnp.full((P, 1), INF, jnp.float32),
-        jnp.ones((P, 1), bool), S=S, g_out=-2, ri=0)
+        jnp.ones((P, 1), bool), S=S, g_out=-2, ri=0, d=d)
     # min over the final bottom-edge state: every entry is a true D value
     # of some prefix row (or +INF init), so the min lower-bounds the final
     # DP value of each pair — the sDTW/PrunedDTW prefix bound at tile
@@ -490,7 +508,9 @@ def gram_prefix_bound(A: jnp.ndarray, B: jnp.ndarray, bsp: BlockSparsePaths,
     the active-tile schedule (see ``prefix_tile_count``). Costs
     n_prefix / n_active of the full Gram sweep; used by the cascade to
     prune candidates the cheap envelope bounds cannot."""
-    Na, T = A.shape
+    from .backends import series_dim, to_tile_major
+    Na, T = A.shape[0], A.shape[1]
+    d = series_dim(A)
     T_orig = T if T_orig is None else T_orig
     assert T_orig <= bsp.T
     meta = bsp.plan()
@@ -499,12 +519,12 @@ def gram_prefix_bound(A: jnp.ndarray, B: jnp.ndarray, bsp: BlockSparsePaths,
         return jnp.zeros((Na, B.shape[0]), jnp.float32)
     meta_p = jnp.asarray(meta[:n_prefix])
     blocks = jnp.asarray(bsp.blocks)
-    Ap = jnp.pad(A.astype(jnp.float32), ((0, 0), (0, bsp.T - T)))
-    Bp = jnp.pad(B.astype(jnp.float32), ((0, 0), (0, bsp.T - T)))
+    Ap = to_tile_major(A, bsp.tile, bsp.T)
+    Bp = to_tile_major(B, bsp.tile, bsp.T)
     rows = []
     for s in range(0, Na, block_a):
         rows.append(_gram_prefix_bound_call(meta_p, Ap[s:s + block_a], Bp,
-                                            blocks, S=bsp.tile))
+                                            blocks, S=bsp.tile, d=d))
     return jnp.concatenate(rows, axis=0)
 
 

@@ -1,13 +1,24 @@
-"""Public jit'd entry points for the alignment kernels.
+"""Execute-layer entry points for the alignment kernels (DESIGN.md §12).
 
-Backend policy: on TPU the Pallas kernels run compiled (interpret=False); on
-CPU/GPU the default is the pure-jnp reference path (faster than interpreting
-Pallas cell-by-cell), with ``impl="pallas"`` forcing interpret mode — that is
-what the correctness tests sweep.
+Backend policy lives in ``repro.kernels.backends``: every ``impl=``
+argument ("auto" | "pallas" | "scan" | "ref" (alias) | "dense") is
+interpreted by ``backends.resolve`` — one auditable capability lookup
+(on TPU the Pallas kernels run compiled; elsewhere the scan engines are
+the default and ``impl="pallas"`` forces interpret mode, which is what
+the correctness tests sweep; traced weight grids and other unsupported
+requirements walk the fallback chain down to the dense oracle).
+
+The supported public API is the fitted engine
+(``repro.core.engine.fit`` → ``SimilarityEngine``); the module-level
+functions here (``spdtw_gram``, ``knn_cascade``, …) are kept as thin
+deprecated wrappers over the same ``_impl`` bodies the engine methods
+call — bit-identical by construction, with a one-shot
+``DeprecationWarning`` pointing at the engine method that replaces them.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional
 
 import jax
@@ -21,9 +32,9 @@ from repro.core.dtw import (band_mask as _band_mask, dtw as _dtw_pair,
 from repro.core.krdtw import log_krdtw as _log_krdtw_pair
 from repro.core.measures import CorpusIndex
 from repro.core.measures import _chunked_cross as _nested_cross
-from repro.core.occupancy import (BlockSparsePaths, SparsePaths,
-                                  block_sparsify, default_tile)
+from repro.core.occupancy import BlockSparsePaths, SparsePaths
 from repro.core.softdtw import soft_wdtw
+from . import backends as bk
 from . import ref
 from .dtw_wavefront import wavefront_dtw
 from .dtw_banded import banded_dtw
@@ -36,58 +47,101 @@ from .soft_block import (gram_soft_spdtw_block, gram_soft_spdtw_scan,
                          soft_spdtw_batch, soft_spdtw_gram_batch,
                          soft_spdtw_paired_scan)
 
+# legacy helper names, re-exported from the backend layer (the scattered
+# per-function copies these replaced are gone — satellite of DESIGN.md §12)
+_on_tpu = bk.on_tpu
+_is_traced = bk.is_traced
+_resolve_bsp = bk.resolve_plan
+_resolve_dense_weights = bk.resolve_dense_weights
+_densify = bk.densify
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+
+# ---------------------------------------------------------------------------
+# Deprecation shim: public names warn once, then behave exactly as before
+# ---------------------------------------------------------------------------
+
+_WARNED: set = set()
 
 
-def _resolve(impl: str) -> str:
-    if impl == "auto":
-        return "pallas" if _on_tpu() else "ref"
-    return impl
+def _deprecated(name: str, replacement: str) -> None:
+    """One-shot DeprecationWarning for a legacy module-level entry."""
+    if name not in _WARNED:
+        _WARNED.add(name)
+        warnings.warn(
+            f"repro.kernels.ops.{name} is deprecated; use {replacement} "
+            f"(MeasureSpec -> fit -> SimilarityEngine; DESIGN.md §12)",
+            DeprecationWarning, stacklevel=3)
+
+
+def _series_d(x) -> int:
+    return bk.series_dim(x)
+
+
+# ---------------------------------------------------------------------------
+# Batched aligned-pair implementations
+# ---------------------------------------------------------------------------
+
+def _dtw_pairs(x: jnp.ndarray, y: jnp.ndarray, impl: str = "auto",
+               radius: Optional[int] = None) -> jnp.ndarray:
+    require = (bk.MULTIVARIATE,) if _series_d(x) > 1 else ()
+    backend = bk.resolve(impl, require=require).name
+    # the wavefront kernel is univariate; scan/dense route to the vmapped
+    # core DP (full support => no tiles to skip)
+    if backend in ("scan", "dense") or _series_d(x) > 1:
+        if radius is None:
+            return ref.dtw_batch(x, y)
+        return ref.dtw_band_batch(x, y, radius)
+    return wavefront_dtw(x, y, radius=radius, interpret=not bk.on_tpu())
 
 
 def dtw_pairs(x: jnp.ndarray, y: jnp.ndarray, impl: str = "auto",
               radius: Optional[int] = None) -> jnp.ndarray:
-    """Batched DTW (optionally Sakoe-Chiba banded). x, y: (B, T) -> (B,)."""
-    impl = _resolve(impl)
-    if impl == "ref":
-        if radius is None:
-            return ref.dtw_batch(x, y)
-        return ref.dtw_band_batch(x, y, radius)
-    interp = not _on_tpu()
-    return wavefront_dtw(x, y, radius=radius, interpret=interp)
+    """Batched DTW (optionally Sakoe-Chiba banded). x, y: (B, T) or
+    (B, T, d) -> (B,). Deprecated: use ``engine.pairs``."""
+    _deprecated("dtw_pairs", "fit(MeasureSpec('dtw'), ...).pairs")
+    return _dtw_pairs(x, y, impl=impl, radius=radius)
 
 
 def dtw_banded_pairs(x: jnp.ndarray, y: jnp.ndarray, radius: int,
                      impl: str = "auto") -> jnp.ndarray:
     """Batched banded DTW via the slanted-strip kernel (O(T*(2r+1)) work)."""
-    impl = _resolve(impl)
-    if impl == "ref":
+    backend = bk.resolve(impl).name
+    if backend in ("scan", "dense") or _series_d(x) > 1:
         return ref.dtw_band_batch(x, y, radius)
-    return banded_dtw(x, y, radius, interpret=not _on_tpu())
+    return banded_dtw(x, y, radius, interpret=not bk.on_tpu())
+
+
+def _spdtw_pairs(x: jnp.ndarray, y: jnp.ndarray, sp: SparsePaths = None,
+                 bsp: Optional[BlockSparsePaths] = None,
+                 impl: str = "auto", tile: int = 128) -> jnp.ndarray:
+    backend = bk.resolve(impl).name
+    if backend in ("scan", "dense"):
+        # historical "ref": the vmapped dense masked DP (the paired
+        # active-tile scan serves the cascade via ``_pair_dp``)
+        return ref.wdtw_batch(
+            x, y, bk.resolve_dense_weights(sp, bsp, T=x.shape[1]))
+    if bsp is None:
+        bsp = bk.resolve_plan(sp, tile=tile)
+    return spdtw_block(x, y, bsp, T_orig=x.shape[1],
+                       interpret=not bk.on_tpu())
 
 
 def spdtw_pairs(x: jnp.ndarray, y: jnp.ndarray, sp: SparsePaths,
                 bsp: Optional[BlockSparsePaths] = None,
                 impl: str = "auto", tile: int = 128) -> jnp.ndarray:
-    """Batched SP-DTW over a learned sparse search space. (B, T) -> (B,)."""
-    impl = _resolve(impl)
-    if impl == "ref":
-        return ref.wdtw_batch(x, y, sp.weights)
-    if bsp is None:
-        bsp = block_sparsify(sp, tile=tile)
-    return spdtw_block(x, y, bsp, T_orig=x.shape[1],
-                       interpret=not _on_tpu())
+    """Batched SP-DTW over a learned sparse search space. x, y: (B, T) or
+    (B, T, d) -> (B,). Deprecated: use ``engine.pairs``."""
+    _deprecated("spdtw_pairs", "fit(MeasureSpec('spdtw'), ...).pairs")
+    return _spdtw_pairs(x, y, sp, bsp=bsp, impl=impl, tile=tile)
 
 
-def log_krdtw_pairs(x: jnp.ndarray, y: jnp.ndarray, nu: float,
-                    radius: Optional[int] = None,
-                    support: Optional[jnp.ndarray] = None,
-                    impl: str = "auto") -> jnp.ndarray:
-    """Batched log K_rdtw / K_rdtw_sc / SP-K_rdtw. (B, T) -> (B,)."""
-    impl = _resolve(impl)
-    if impl == "ref":
+def _log_krdtw_pairs(x: jnp.ndarray, y: jnp.ndarray, nu: float,
+                     radius: Optional[int] = None,
+                     support: Optional[jnp.ndarray] = None,
+                     impl: str = "auto") -> jnp.ndarray:
+    backend = bk.resolve(impl).name
+    # the anti-diagonal wavefront kernel is univariate
+    if backend in ("scan", "dense") or _series_d(x) > 1:
         if support is not None:
             return ref.log_krdtw_masked_batch(x, y, nu, support)
         if radius is not None:
@@ -97,51 +151,50 @@ def log_krdtw_pairs(x: jnp.ndarray, y: jnp.ndarray, nu: float,
     if support is not None:
         mask_diag = jnp.asarray(mask_to_diagonal_major(np.asarray(support)))
     return wavefront_log_krdtw(x, y, nu, radius=radius, mask_diag=mask_diag,
-                               interpret=not _on_tpu())
+                               interpret=not bk.on_tpu())
+
+
+def log_krdtw_pairs(x: jnp.ndarray, y: jnp.ndarray, nu: float,
+                    radius: Optional[int] = None,
+                    support: Optional[jnp.ndarray] = None,
+                    impl: str = "auto") -> jnp.ndarray:
+    """Batched log K_rdtw / K_rdtw_sc / SP-K_rdtw. (B, T) -> (B,).
+    Deprecated: use ``engine.pairs`` / ``engine.gram_log``."""
+    _deprecated("log_krdtw_pairs", "fit(MeasureSpec('krdtw'), ...).pairs")
+    return _log_krdtw_pairs(x, y, nu, radius=radius, support=support,
+                            impl=impl)
 
 
 # ---------------------------------------------------------------------------
 # All-pairs Gram engines (the classification hot path; no repeat/tile)
 # ---------------------------------------------------------------------------
 
-def _is_traced(x) -> bool:
-    return isinstance(x, jax.core.Tracer)
-
-
-@functools.lru_cache(maxsize=16)
-def _cached_bsp(w_bytes: bytes, T: int, tile: int) -> BlockSparsePaths:
-    w = np.frombuffer(w_bytes, np.float32).reshape(T, T)
-    return block_sparsify(w, tile=tile)
-
-
-@functools.lru_cache(maxsize=8)
-def _ones_bsp(T: int) -> BlockSparsePaths:
-    """Fully-dense plan for plain DTW, keyed on T alone (no per-call
-    ones-array allocation or hashing)."""
-    return block_sparsify(np.ones((T, T), np.float32), tile=default_tile(T))
-
-
-def _densify(bsp: BlockSparsePaths) -> np.ndarray:
-    """Reassemble the dense (T, T) weight grid from the compressed blocks."""
-    S = bsp.tile
-    Ti = bsp.slot.shape[0]
-    w = bsp.blocks[bsp.slot]                       # (Ti, Tj, S, S)
-    return w.transpose(0, 2, 1, 3).reshape(Ti * S, Ti * S)
-
-
-def _resolve_bsp(sp=None, bsp=None, weights=None,
-                 tile: Optional[int] = None) -> BlockSparsePaths:
-    """Host-side block plan; cached on the weight bytes so repeated calls
-    with the same grid (e.g. chunked evaluation loops) sparsify once."""
-    if bsp is not None:
-        return bsp
-    w = sp.weights if sp is not None else weights
-    assert w is not None, "need one of sp / bsp / weights"
-    w = np.asarray(w, np.float32)
-    T = w.shape[0]
-    if tile is None:
-        tile = default_tile(T)
-    return _cached_bsp(w.tobytes(), T, tile)
+def _spdtw_gram(A: jnp.ndarray, B: jnp.ndarray, *,
+                sp: Optional[SparsePaths] = None,
+                bsp: Optional[BlockSparsePaths] = None,
+                weights: Optional[jnp.ndarray] = None,
+                impl: str = "auto", tile: Optional[int] = None,
+                block_a: int = 64,
+                thresholds: Optional[jnp.ndarray] = None,
+                alive0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    require = []
+    if bsp is None and sp is None and bk.is_traced(weights):
+        require.append(bk.TRACED_WEIGHTS)
+    backend = bk.resolve(impl, require=tuple(require)).name
+    if backend == "dense":
+        w = bk.resolve_dense_weights(sp, bsp, weights, T=A.shape[1])
+        out = _nested_cross(lambda a, b: _wdtw_pair(a, b, w), A, B, block_a)
+        if alive0 is not None:
+            out = jnp.where(jnp.asarray(alive0), out, INF)
+        return out
+    bspr = bk.resolve_plan(sp, bsp, weights, tile=tile)
+    if backend == "scan":
+        return gram_spdtw_scan(A, B, bspr, T_orig=A.shape[1],
+                               block_a=block_a, thresholds=thresholds,
+                               alive0=alive0)
+    return gram_spdtw_block(A, B, bspr, T_orig=A.shape[1],
+                            thresholds=thresholds, alive0=alive0,
+                            interpret=not bk.on_tpu())
 
 
 def spdtw_gram(A: jnp.ndarray, B: jnp.ndarray, *,
@@ -154,68 +207,36 @@ def spdtw_gram(A: jnp.ndarray, B: jnp.ndarray, *,
                alive0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """(Na, Nb) SP-DTW Gram matrix through the fused block-sparse engine.
 
-    impl: "auto" (pallas on TPU, scan elsewhere), "pallas" (interpret off
-    TPU; what the parity tests sweep), "ref" (jnp scan engine), or "dense"
-    (chunked nested-vmap dense DP — the historical baseline, kept for
-    benchmarking the speed-up). Weights traced under jit/vmap/grad cannot
-    yield a host-side tile plan, so they transparently take the dense path
-    (the pre-engine behaviour, fully traceable).
+    A: (Na, T) or (Na, T, d); B likewise. impl: "auto" (pallas on TPU,
+    scan elsewhere), "pallas" (interpret off TPU; what the parity tests
+    sweep), "scan"/"ref" (jnp scan engine), or "dense" (chunked
+    nested-vmap dense DP — the historical baseline, kept for
+    benchmarking the speed-up). Weights traced under jit/vmap/grad
+    cannot yield a host-side tile plan, so they transparently take the
+    dense path (``backends.resolve`` walks the fallback chain — the
+    pre-engine behaviour, fully traceable).
 
     ``thresholds`` ((Na,) per-A-row) and ``alive0`` ((Na, Nb) bool) engage
     the early-abandon sweep of the block engines (see ``gram_block``):
     dead or abandoned pairs report +INF. The dense baseline has no
     abandon sweep; it honours ``alive0`` by masking so the cascade stays
     exact across every impl.
+
+    Deprecated as a module-level entry: use ``engine.gram``.
     """
-    impl = _resolve(impl)
-    if impl == "dense" or (bsp is None and sp is None and
-                           _is_traced(weights)):
-        w = _resolve_dense_weights(sp, bsp, weights, T=A.shape[1])
-        out = _nested_cross(lambda a, b: _wdtw_pair(a, b, w), A, B, block_a)
-        if alive0 is not None:
-            out = jnp.where(jnp.asarray(alive0), out, INF)
-        return out
-    bsp = _resolve_bsp(sp, bsp, weights, tile)
-    if impl == "ref":
-        return gram_spdtw_scan(A, B, bsp, T_orig=A.shape[1], block_a=block_a,
-                               thresholds=thresholds, alive0=alive0)
-    return gram_spdtw_block(A, B, bsp, T_orig=A.shape[1],
-                            thresholds=thresholds, alive0=alive0,
-                            interpret=not _on_tpu())
+    _deprecated("spdtw_gram", "fit(MeasureSpec('spdtw'), ...).gram")
+    return _spdtw_gram(A, B, sp=sp, bsp=bsp, weights=weights, impl=impl,
+                       tile=tile, block_a=block_a, thresholds=thresholds,
+                       alive0=alive0)
 
 
-def _resolve_dense_weights(sp=None, bsp=None, weights=None, T=None):
-    """Dense (T, T) weight grid from whichever sparse handle the caller
-    holds (``_densify`` reassembles it from a bare block plan)."""
-    if sp is not None:
-        return sp.weights
-    if weights is not None:
-        return weights
-    assert bsp is not None, "need one of sp / bsp / weights"
-    w = _densify(bsp)
-    return jnp.asarray(w if T is None else w[:T, :T])
-
-
-def soft_spdtw_pairs(x: jnp.ndarray, y: jnp.ndarray, *,
-                     sp: Optional[SparsePaths] = None,
-                     bsp: Optional[BlockSparsePaths] = None,
-                     weights: Optional[jnp.ndarray] = None,
-                     gamma: float = 1.0, impl: str = "auto") -> jnp.ndarray:
-    """Batched aligned-pair soft-SP-DTW, differentiable. (B, T) -> (B,).
-
-    The default routes through ``soft_block.soft_spdtw_batch`` (custom
-    VJP: block-sparse stash forward, reverse active-tile backward —
-    DESIGN.md §11; gradients never leave the learned support);
-    ``impl="dense"`` runs the vmapped core recursion — same values and
-    the dense expected-alignment backward, kept as the parity baseline.
-    A *bsp-only* caller is a serving call: it runs the paired scan on
-    the caller's own plan (tile size preserved, no densify/re-sparsify
-    round trip; autodiff still works by differentiating through the
-    scan). There is no separate Pallas *paired* soft kernel; the Gram
-    kernels cover the TPU path (``soft_spdtw_gram``).
-    """
-    if _resolve(impl) == "dense":
-        w = _resolve_dense_weights(sp, bsp, weights, T=x.shape[1])
+def _soft_spdtw_pairs(x: jnp.ndarray, y: jnp.ndarray, *,
+                      sp: Optional[SparsePaths] = None,
+                      bsp: Optional[BlockSparsePaths] = None,
+                      weights: Optional[jnp.ndarray] = None,
+                      gamma: float = 1.0, impl: str = "auto") -> jnp.ndarray:
+    if bk.resolve(impl).name == "dense":
+        w = bk.resolve_dense_weights(sp, bsp, weights, T=x.shape[1])
         return jax.vmap(
             lambda a, b: soft_wdtw(a, b, w, float(gamma)))(x, y)
     if sp is None and weights is None:
@@ -227,6 +248,64 @@ def soft_spdtw_pairs(x: jnp.ndarray, y: jnp.ndarray, *,
     return soft_spdtw_batch(jnp.asarray(x, jnp.float32),
                             jnp.asarray(y, jnp.float32),
                             jnp.asarray(w), float(gamma))
+
+
+def soft_spdtw_pairs(x: jnp.ndarray, y: jnp.ndarray, *,
+                     sp: Optional[SparsePaths] = None,
+                     bsp: Optional[BlockSparsePaths] = None,
+                     weights: Optional[jnp.ndarray] = None,
+                     gamma: float = 1.0, impl: str = "auto") -> jnp.ndarray:
+    """Batched aligned-pair soft-SP-DTW, differentiable. x, y: (B, T) or
+    (B, T, d) -> (B,).
+
+    The default routes through ``soft_block.soft_spdtw_batch`` (custom
+    VJP: block-sparse stash forward, reverse active-tile backward —
+    DESIGN.md §11; gradients never leave the learned support);
+    ``impl="dense"`` runs the vmapped core recursion — same values and
+    the dense expected-alignment backward, kept as the parity baseline.
+    A *bsp-only* caller is a serving call: it runs the paired scan on
+    the caller's own plan (tile size preserved, no densify/re-sparsify
+    round trip; autodiff still works by differentiating through the
+    scan). There is no separate Pallas *paired* soft kernel; the Gram
+    kernels cover the TPU path (``soft_spdtw_gram``).
+
+    Deprecated as a module-level entry: use ``engine.soft_pairs`` /
+    ``engine.grad``.
+    """
+    _deprecated("soft_spdtw_pairs",
+                "fit(MeasureSpec('spdtw'), ...).soft_pairs")
+    return _soft_spdtw_pairs(x, y, sp=sp, bsp=bsp, weights=weights,
+                             gamma=gamma, impl=impl)
+
+
+def _soft_spdtw_gram(A: jnp.ndarray, B: jnp.ndarray, *,
+                     sp: Optional[SparsePaths] = None,
+                     bsp: Optional[BlockSparsePaths] = None,
+                     weights: Optional[jnp.ndarray] = None,
+                     gamma: float = 1.0, impl: str = "auto",
+                     tile: Optional[int] = None,
+                     block_a: int = 64) -> jnp.ndarray:
+    require = []
+    if bsp is None and sp is None and bk.is_traced(weights):
+        require.append(bk.TRACED_WEIGHTS)
+    backend = bk.resolve(impl, require=tuple(require)).name
+    if backend == "dense":
+        w = bk.resolve_dense_weights(sp, bsp, weights, T=A.shape[1])
+        return _nested_cross(
+            lambda a, b: soft_wdtw(a, b, w, float(gamma)), A, B, block_a)
+    if impl == "auto" and bsp is None and tile is None and \
+            (sp is not None or weights is not None):
+        w = sp.weights if sp is not None else weights
+        return soft_spdtw_gram_batch(jnp.asarray(A, jnp.float32),
+                                     jnp.asarray(B, jnp.float32),
+                                     jnp.asarray(w), float(gamma))
+    bspr = bk.resolve_plan(sp, bsp, weights, tile=tile)
+    if backend == "scan":
+        return gram_soft_spdtw_scan(A, B, bspr, float(gamma),
+                                    T_orig=A.shape[1], block_a=block_a)
+    return gram_soft_spdtw_block(A, B, bspr, float(gamma),
+                                 T_orig=A.shape[1],
+                                 interpret=not bk.on_tpu())
 
 
 def soft_spdtw_gram(A: jnp.ndarray, B: jnp.ndarray, *,
@@ -245,48 +324,61 @@ def soft_spdtw_gram(A: jnp.ndarray, B: jnp.ndarray, *,
     elsewhere) and whose backward is the reverse active-tile sweep over
     the stashed L blocks (fused Pallas Gram-backward kernel on TPU;
     DESIGN.md §11). "pallas" forces the forward kernel directly
-    (interpret off TPU; what the tpu-marked parity test sweeps), "ref"
-    the forward jnp scan engine, "dense" the nested-vmap core recursion
-    (traceable, and the only path for traced weight grids; its backward
-    is the dense expected-alignment oracle). A caller-supplied ``bsp``
-    or ``tile`` pins the plan, so those calls keep the direct engine
-    path (forward-only) instead of the VJP wrapper, which resolves its
-    own default-tile plan from the weight bytes.
+    (interpret off TPU; what the tpu-marked parity test sweeps),
+    "scan"/"ref" the forward jnp scan engine, "dense" the nested-vmap
+    core recursion (traceable, and the only path for traced weight
+    grids; its backward is the dense expected-alignment oracle). A
+    caller-supplied ``bsp`` or ``tile`` pins the plan, so those calls
+    keep the direct engine path (forward-only) instead of the VJP
+    wrapper, which resolves its own default-tile plan from the weight
+    bytes.
+
+    Deprecated as a module-level entry: use ``engine.soft_gram``.
     """
-    impl_r = _resolve(impl)
-    if impl_r == "dense" or (bsp is None and sp is None and
-                             _is_traced(weights)):
-        w = _resolve_dense_weights(sp, bsp, weights, T=A.shape[1])
-        return _nested_cross(
-            lambda a, b: soft_wdtw(a, b, w, float(gamma)), A, B, block_a)
-    if impl == "auto" and bsp is None and tile is None and \
-            (sp is not None or weights is not None):
-        w = sp.weights if sp is not None else weights
-        return soft_spdtw_gram_batch(jnp.asarray(A, jnp.float32),
-                                     jnp.asarray(B, jnp.float32),
-                                     jnp.asarray(w), float(gamma))
-    bspr = _resolve_bsp(sp, bsp, weights, tile)
-    if impl_r == "ref":
-        return gram_soft_spdtw_scan(A, B, bspr, float(gamma),
-                                    T_orig=A.shape[1], block_a=block_a)
-    return gram_soft_spdtw_block(A, B, bspr, float(gamma),
-                                 T_orig=A.shape[1],
-                                 interpret=not _on_tpu())
+    _deprecated("soft_spdtw_gram",
+                "fit(MeasureSpec('spdtw'), ...).soft_gram")
+    return _soft_spdtw_gram(A, B, sp=sp, bsp=bsp, weights=weights,
+                            gamma=gamma, impl=impl, tile=tile,
+                            block_a=block_a)
+
+
+def _dtw_gram(A: jnp.ndarray, B: jnp.ndarray, *, impl: str = "auto",
+              block_a: int = 64) -> jnp.ndarray:
+    backend = bk.resolve(impl).name
+    if backend in ("scan", "dense"):
+        return _nested_cross(_dtw_pair, A, B, block_a)
+    return gram_spdtw_block(A, B, bk.resolve_plan(T=A.shape[1]),
+                            T_orig=A.shape[1], interpret=not bk.on_tpu())
 
 
 def dtw_gram(A: jnp.ndarray, B: jnp.ndarray, *, impl: str = "auto",
              block_a: int = 64) -> jnp.ndarray:
     """(Na, Nb) dense DTW Gram matrix (full support => no tiles to skip).
 
-    The reference path is a chunked nested vmap (never a repeat/tile HBM
-    expansion); the Pallas path reuses the fused engine with an all-ones
-    weight grid so each stripe is still loaded into VMEM only once.
+    The scan/dense path is a chunked nested vmap (never a repeat/tile
+    HBM expansion); the Pallas path reuses the fused engine with an
+    all-ones weight grid so each stripe is still loaded into VMEM only
+    once. Deprecated as a module-level entry: use ``engine.gram``.
     """
-    impl = _resolve(impl)
-    if impl in ("ref", "dense"):
-        return _nested_cross(_dtw_pair, A, B, block_a)
-    return gram_spdtw_block(A, B, _ones_bsp(A.shape[1]),
-                            T_orig=A.shape[1], interpret=not _on_tpu())
+    _deprecated("dtw_gram", "fit(MeasureSpec('dtw'), ...).gram")
+    return _dtw_gram(A, B, impl=impl, block_a=block_a)
+
+
+def _log_krdtw_gram(A: jnp.ndarray, B: jnp.ndarray, nu: float, *,
+                    support: Optional[jnp.ndarray] = None,
+                    radius: Optional[int] = None, impl: str = "auto",
+                    block_a: int = 64) -> jnp.ndarray:
+    backend = bk.resolve(impl).name
+    if backend in ("scan", "dense") or bk.is_traced(support) or \
+            _series_d(A) > 1:
+        sup = None if support is None else jnp.asarray(support)
+        if radius is not None:   # fold the corridor into the support mask
+            band = _band_mask(A.shape[1], B.shape[1], radius)
+            sup = band if sup is None else sup & band
+        return _nested_cross(lambda a, b: _log_krdtw_pair(a, b, nu, sup),
+                             A, B, block_a)
+    return gram_log_krdtw_block(A, B, nu, support=support, radius=radius,
+                                interpret=not bk.on_tpu())
 
 
 def log_krdtw_gram(A: jnp.ndarray, B: jnp.ndarray, nu: float, *,
@@ -296,18 +388,14 @@ def log_krdtw_gram(A: jnp.ndarray, B: jnp.ndarray, nu: float, *,
     """(Na, Nb) log K_rdtw / SP-K_rdtw Gram matrix via the fused kernel.
 
     A traced ``support`` (under jit/vmap/grad) cannot be re-laid-out
-    host-side, so it takes the masked nested-vmap path, which is traceable.
+    host-side, and the anti-diagonal wavefront kernel is univariate, so
+    those cases take the masked nested-vmap path, which is traceable and
+    accepts (N, T, d). Deprecated as a module-level entry: use
+    ``engine.gram_log``.
     """
-    impl = _resolve(impl)
-    if impl in ("ref", "dense") or _is_traced(support):
-        sup = None if support is None else jnp.asarray(support)
-        if radius is not None:   # fold the corridor into the support mask
-            band = _band_mask(A.shape[1], B.shape[1], radius)
-            sup = band if sup is None else sup & band
-        return _nested_cross(lambda a, b: _log_krdtw_pair(a, b, nu, sup),
-                             A, B, block_a)
-    return gram_log_krdtw_block(A, B, nu, support=support, radius=radius,
-                                interpret=not _on_tpu())
+    _deprecated("log_krdtw_gram", "fit(MeasureSpec('krdtw'), ...).gram_log")
+    return _log_krdtw_gram(A, B, nu, support=support, radius=radius,
+                           impl=impl, block_a=block_a)
 
 
 # ---------------------------------------------------------------------------
@@ -319,64 +407,31 @@ def _pair_dp(x: jnp.ndarray, y: jnp.ndarray, index: CorpusIndex, impl: str,
     """Batched aligned-pair SP-DTW for the cascade's seed/survivor stages.
 
     (B, T) -> (B,). "dense" keeps the historical dense masked DP (the
-    exactness baseline); "ref" runs the active-tile paired scan (work
+    exactness baseline); "scan" runs the active-tile paired scan (work
     proportional to surviving tiles); "pallas" the block kernel.
     """
     if impl == "dense":
         return ref.wdtw_batch(x, y, index.weights)
-    if impl == "ref":
+    if impl == "scan":
         return spdtw_paired_scan(x, y, index.bsp, T_orig=x.shape[1],
                                  thresholds=thresholds)
     return spdtw_block(x, y, index.bsp, T_orig=x.shape[1],
-                       interpret=not _on_tpu())
+                       interpret=not bk.on_tpu())
 
 
-def knn_cascade(Q: jnp.ndarray, index: CorpusIndex, *, impl: str = "auto",
-                seed_k: int = 2, prefix_frac: float = 0.5,
-                block_a: int = 64, return_stats: bool = False,
-                centroid_model=None):
-    """Exact 1-NN of queries against an indexed corpus (DESIGN.md §4).
-
-    The cascade: (1) LB_Kim endpoint bound, O(1)/pair; (2) support-windowed
-    LB_Keogh envelopes, both orientations, O(T)/pair; seed the per-query
-    threshold with the exact distance of the ``seed_k`` best-bounded
-    candidates; (3) truncated prefix-DP bound over the first
-    ``prefix_frac`` of the tile rows (sDTW/PrunedDTW-style, the strongest
-    and priciest bound — it only runs on pairs the envelopes kept);
-    (4) the fused masked DP on the survivors, with the early-abandon sweep
-    killing pairs mid-DP. All bounds are admissible, thresholds are exact
-    distances of real candidates, and within-DP abandoning is strict
-    (``bound > thr``), so the returned neighbours are bit-identical to a
-    full Gram evaluation followed by argmin — every candidate tied at the
-    minimum is evaluated exactly, preserving argmin's first-index tie rule.
-
-    Q: (Nq, T). Returns (nn_idx, nn_dist) int32/(float32); with
-    ``return_stats`` a dict of per-stage prune rates rides along (entries
-    are jnp scalars — convert host-side). Fully traceable: jit / shard_map
-    safe because the index's plan and windows are static host data. On
-    concrete (non-traced) inputs the survivor DP gathers the surviving
-    pairs and runs the aligned-pair engine on just those — the CPU/GPU
-    wall-clock win; under tracing it falls back to the masked Gram engine
-    (static shapes), where the Pallas kernel skips fully-dead pair blocks.
-
-    ``centroid_model`` (a ``cluster.CentroidModel``, or anything with
-    ``.centroids`` (k, T) and ``.medoids`` (k,) corpus indices) switches
-    on the centroid-seeded stage (DESIGN.md §10): the query's exact
-    SP-DTW distance to its nearest centroid's *medoid* — a real corpus
-    entry, found at fit time — seeds the per-query threshold with k + 1
-    cheap DPs before any bound runs. The threshold only ever tightens
-    with an exact distance of a real candidate, so exactness is
-    untouched; the bounds simply prune more.
-
-    Admissible bounds for the log-kernel recursion (K_rdtw) are an open
-    problem; this cascade covers the dissimilarity measures (dtw / spdtw).
-    """
+def _knn_cascade(Q: jnp.ndarray, index: CorpusIndex, *, impl: str = "auto",
+                 seed_k: int = 2, prefix_frac: float = 0.5,
+                 block_a: int = 64, return_stats: bool = False,
+                 centroid_model=None):
+    assert Q.ndim == 2, \
+        "the lower-bound cascade is univariate (envelope bounds); " \
+        "multivariate 1-NN routes through engine.knn's exact Gram argmin"
     Q = jnp.asarray(Q, jnp.float32)
     C = index.corpus
     Nq, T = Q.shape
     Nc = C.shape[0]
     seed_k = min(seed_k, Nc)
-    impl_r = _resolve(impl)
+    impl_r = bk.resolve(impl).name
 
     # --- stage 0: centroid-seeded threshold (k + 1 DPs per query) ---
     cand = d_cand = None
@@ -385,8 +440,8 @@ def knn_cascade(Q: jnp.ndarray, index: CorpusIndex, *, impl: str = "auto",
             getattr(centroid_model, "medoids", None) is not None:
         Z = jnp.asarray(centroid_model.centroids, jnp.float32)
         n_centroids = Z.shape[0]
-        Dc = spdtw_gram(Q, Z, bsp=index.bsp, weights=index.weights,
-                        impl=impl, block_a=block_a)
+        Dc = _spdtw_gram(Q, Z, bsp=index.bsp, weights=index.weights,
+                         impl=impl, block_a=block_a)
         best_c = jnp.argmin(Dc, axis=1)
         cand = jnp.take(jnp.asarray(centroid_model.medoids, jnp.int32),
                         best_c)                                # (Nq,)
@@ -428,11 +483,11 @@ def knn_cascade(Q: jnp.ndarray, index: CorpusIndex, *, impl: str = "auto",
         alive = alive2
 
     # --- stage 4: exact DP on the survivors, early abandoning ---
-    eager = not (_is_traced(Q) or _is_traced(C) or _is_traced(thr))
+    eager = not (bk.is_traced(Q) or bk.is_traced(C) or bk.is_traced(thr))
     D = jnp.full((Nq, Nc), INF, jnp.float32).at[rows, seed_idx].set(seed_d)
     if cand is not None:
         D = D.at[rows[:, 0], cand].set(d_cand)
-    if eager and impl_r == "ref":
+    if eager and impl_r == "scan":
         # gather the survivors: the DP only ever touches those pairs
         qi, ci = np.nonzero(np.asarray(alive))
         if len(qi):
@@ -442,8 +497,9 @@ def knn_cascade(Q: jnp.ndarray, index: CorpusIndex, *, impl: str = "auto",
             D = D.at[qi, ci].set(d_surv)
         G_ab = None
     else:
-        G = spdtw_gram(Q, C, bsp=index.bsp, weights=index.weights, impl=impl,
-                       block_a=block_a, thresholds=thr, alive0=alive)
+        G = _spdtw_gram(Q, C, bsp=index.bsp, weights=index.weights,
+                        impl=impl, block_a=block_a, thresholds=thr,
+                        alive0=alive)
         D = jnp.where(alive, G, D)
         G_ab = G
     nn = jnp.argmin(D, axis=1).astype(jnp.int32)
@@ -467,3 +523,52 @@ def knn_cascade(Q: jnp.ndarray, index: CorpusIndex, *, impl: str = "auto",
         "dp_abandoned": jnp.mean(abandoned.astype(jnp.float32)),
     }
     return nn, nnd, stats
+
+
+def knn_cascade(Q: jnp.ndarray, index: CorpusIndex, *, impl: str = "auto",
+                seed_k: int = 2, prefix_frac: float = 0.5,
+                block_a: int = 64, return_stats: bool = False,
+                centroid_model=None):
+    """Exact 1-NN of queries against an indexed corpus (DESIGN.md §4).
+
+    The cascade: (1) LB_Kim endpoint bound, O(1)/pair; (2) support-windowed
+    LB_Keogh envelopes, both orientations, O(T)/pair; seed the per-query
+    threshold with the exact distance of the ``seed_k`` best-bounded
+    candidates; (3) truncated prefix-DP bound over the first
+    ``prefix_frac`` of the tile rows (sDTW/PrunedDTW-style, the strongest
+    and priciest bound — it only runs on pairs the envelopes kept);
+    (4) the fused masked DP on the survivors, with the early-abandon sweep
+    killing pairs mid-DP. All bounds are admissible, thresholds are exact
+    distances of real candidates, and within-DP abandoning is strict
+    (``bound > thr``), so the returned neighbours are bit-identical to a
+    full Gram evaluation followed by argmin — every candidate tied at the
+    minimum is evaluated exactly, preserving argmin's first-index tie rule.
+
+    Q: (Nq, T). Returns (nn_idx, nn_dist) int32/(float32); with
+    ``return_stats`` a dict of per-stage prune rates rides along (entries
+    are jnp scalars — convert host-side). Fully traceable: jit / shard_map
+    safe because the index's plan and windows are static host data. On
+    concrete (non-traced) inputs the survivor DP gathers the surviving
+    pairs and runs the aligned-pair engine on just those — the CPU/GPU
+    wall-clock win; under tracing it falls back to the masked Gram engine
+    (static shapes), where the Pallas kernel skips fully-dead pair blocks.
+
+    ``centroid_model`` (a ``cluster.CentroidModel``, or anything with
+    ``.centroids`` (k, T) and ``.medoids`` (k,) corpus indices) switches
+    on the centroid-seeded stage (DESIGN.md §10): the query's exact
+    SP-DTW distance to its nearest centroid's *medoid* — a real corpus
+    entry, found at fit time — seeds the per-query threshold with k + 1
+    cheap DPs before any bound runs. The threshold only ever tightens
+    with an exact distance of a real candidate, so exactness is
+    untouched; the bounds simply prune more.
+
+    Admissible bounds for the log-kernel recursion (K_rdtw) are an open
+    problem; this cascade covers the dissimilarity measures (dtw / spdtw).
+
+    Deprecated as a module-level entry: use ``engine.knn``.
+    """
+    _deprecated("knn_cascade", "fit(MeasureSpec('spdtw'), corpus).knn")
+    return _knn_cascade(Q, index, impl=impl, seed_k=seed_k,
+                        prefix_frac=prefix_frac, block_a=block_a,
+                        return_stats=return_stats,
+                        centroid_model=centroid_model)

@@ -103,17 +103,30 @@ def _linrec_scan_lanes(a, b, width):
     return m
 
 
+def _tile_logit_row(x, y, w, t, *, S: int, gamma: float, d: int = 1):
+    """Masked logit row ``t`` of one tile: t(i, j) = -w*phi/gamma, NEG
+    outside the support. The soft twin of ``spdtw_block.tile_cost_row``
+    — x, y are (bt, d*S) tile-major / channel-inner and the squared
+    distance sums over channels before the weight multiply."""
+    wt = jax.lax.dynamic_slice_in_dim(w, t, 1, axis=0)          # (1,S)
+    acc = None
+    for k in range(d):
+        xt = jax.lax.dynamic_slice_in_dim(x, k * S + t, 1, axis=1)
+        yk = jax.lax.dynamic_slice_in_dim(y, k * S, S, axis=1)
+        dk = (xt - yk) ** 2
+        acc = dk if acc is None else acc + dk
+    c = acc * wt
+    return jnp.where(wt > 0, -c / gamma, NEG)
+
+
 def _soft_sweep_core(x, y, w, top_vec, left_vec, c_first, *, S: int, ri: int,
-                     gamma: float, stash: bool):
+                     gamma: float, stash: bool, d: int = 1):
     """Row loop shared by ``soft_tile_sweep`` (forward-only) and
     ``soft_tile_sweep_stash`` (forward + full L-block capture)."""
     bt = x.shape[0]
 
     def logit_row(t):
-        xt = jax.lax.dynamic_slice_in_dim(x, t, 1, axis=1)      # (bt,1)
-        wt = jax.lax.dynamic_slice_in_dim(w, t, 1, axis=0)      # (1,S)
-        c = (xt - y) ** 2 * wt
-        return jnp.where(wt > 0, -c / gamma, NEG)
+        return _tile_logit_row(x, y, w, t, S=S, gamma=gamma, d=d)
 
     def row_update(t, L_prev, topleft0, left_t):
         tr = logit_row(t)
@@ -153,31 +166,32 @@ def _soft_sweep_core(x, y, w, top_vec, left_vec, c_first, *, S: int, ri: int,
 
 
 def soft_tile_sweep(x, y, w, top_vec, left_vec, c_first, *, S: int, ri: int,
-                    gamma: float):
+                    gamma: float, d: int = 1):
     """Sweep one S x S tile of the *soft* SP-DTW DP for a batch of pairs.
 
     Same signature, edge dataflow and in-tile structure as
-    ``spdtw_block.tile_sweep``, with every value in L = -R/gamma space
+    ``spdtw_block.tile_sweep`` (x, y tile-major (bt, d*S); d = 1 is the
+    historical layout), with every value in L = -R/gamma space
     (NEG = unreachable). Shared by the jnp scan engines and the fused
     Pallas kernels. Returns (d_last, rightcol, dri): the tile's bottom
     row, right column and the row at in-tile index ``ri``.
     """
     return _soft_sweep_core(x, y, w, top_vec, left_vec, c_first,
-                            S=S, ri=ri, gamma=gamma, stash=False)
+                            S=S, ri=ri, gamma=gamma, stash=False, d=d)
 
 
 def soft_tile_sweep_stash(x, y, w, top_vec, left_vec, c_first, *, S: int,
-                          ri: int, gamma: float):
+                          ri: int, gamma: float, d: int = 1):
     """``soft_tile_sweep`` that additionally captures the full tile L
     block (DESIGN.md §11): returns (d_last, rightcol, dri, Lblk) with
     Lblk (bt, S*S) row-major — the per-tile residual the reverse
     expected-alignment sweep replays."""
     return _soft_sweep_core(x, y, w, top_vec, left_vec, c_first,
-                            S=S, ri=ri, gamma=gamma, stash=True)
+                            S=S, ri=ri, gamma=gamma, stash=True, d=d)
 
 
 def soft_reverse_tile_sweep(x, y, w, Lblk, bot, corner, right, inj,
-                            *, S: int, gamma: float):
+                            *, S: int, gamma: float, d: int = 1):
     """Sweep one S x S tile of the *reverse* expected-alignment recursion
     for a batch of pairs (DESIGN.md §11).
 
@@ -187,7 +201,8 @@ def soft_reverse_tile_sweep(x, y, w, Lblk, bot, corner, right, inj,
     in-row dependency ``E_j = b_j E_{j+1} + f_j`` is a lane-flipped
     Hillis-Steele linear recurrence (``_linrec_scan_lanes``).
 
-    x, y:    (bt, S) per-pair series tiles (rows of x, cols of y).
+    x, y:    (bt, d*S) per-pair series tiles, tile-major / channel-inner
+             (rows of x, cols of y; d = 1 is the historical (bt, S)).
     w:       (S, S) weight block (0 = masked cell).
     Lblk:    (bt, S*S) stashed forward L of this tile (row-major).
     bot:     (E, L, t) triples, each (bt, S): the tile below's top-row
@@ -206,10 +221,7 @@ def soft_reverse_tile_sweep(x, y, w, Lblk, bot, corner, right, inj,
     rE, rL, rt = right
 
     def logit_row(t):
-        xt = jax.lax.dynamic_slice_in_dim(x, t, 1, axis=1)      # (bt,1)
-        wt = jax.lax.dynamic_slice_in_dim(w, t, 1, axis=0)      # (1,S)
-        c = (xt - y) ** 2 * wt
-        return jnp.where(wt > 0, -c / gamma, NEG)
+        return _tile_logit_row(x, y, w, t, S=S, gamma=gamma, d=d)
 
     def body(u, carry):
         E_next, L_next, t_next, Eblk = carry
@@ -259,15 +271,27 @@ def _from_L(L_val, gamma):
                      jnp.asarray(INF, L_val.dtype))
 
 
-def _row0_logits(x, y, w, gamma):
-    """t of a tile's top row: t(0, j) = -w[0,j] (x_0 - y_j)^2 / gamma."""
-    c = (x[:, 0:1] - y) ** 2 * w[0][None, :]
+def _row0_logits(x, y, w, gamma, d: int = 1):
+    """t of a tile's top row: t(0, j) = -w[0,j] ||x_0 - y_j||^2 / gamma
+    (x, y tile-major (bt, d*S); channel distances sum)."""
+    S = w.shape[0]
+    acc = None
+    for k in range(d):
+        dk = (x[:, k * S:k * S + 1] - y[:, k * S:(k + 1) * S]) ** 2
+        acc = dk if acc is None else acc + dk
+    c = acc * w[0][None, :]
     return jnp.where(w[0][None, :] > 0, -c / gamma, NEG)
 
 
-def _col0_logits(x, y, w, gamma):
-    """t of a tile's left column: t(r, 0) = -w[r,0] (x_r - y_0)^2 / gamma."""
-    c = (x - y[:, 0:1]) ** 2 * w[:, 0][None, :]
+def _col0_logits(x, y, w, gamma, d: int = 1):
+    """t of a tile's left column: t(r, 0) = -w[r,0] ||x_r - y_0||^2 /
+    gamma (x, y tile-major (bt, d*S); channel distances sum)."""
+    S = w.shape[0]
+    acc = None
+    for k in range(d):
+        dk = (x[:, k * S:(k + 1) * S] - y[:, k * S:k * S + 1]) ** 2
+        acc = dk if acc is None else acc + dk
+    c = acc * w[:, 0][None, :]
     return jnp.where(w[:, 0][None, :] > 0, -c / gamma, NEG)
 
 
@@ -275,24 +299,28 @@ def _col0_logits(x, y, w, gamma):
 # jnp scan engines (tier-1 production path + oracle for the Pallas kernel)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("S", "T_orig", "g_out", "gamma"))
-def _gram_soft_scan_call(meta, A, B, blocks, *, S, T_orig, g_out, gamma):
-    Na, Tp = A.shape
+@functools.partial(jax.jit, static_argnames=("S", "T_orig", "g_out", "gamma",
+                                             "d"))
+def _gram_soft_scan_call(meta, A, B, blocks, *, S, T_orig, g_out, gamma,
+                         d=1):
+    Na = A.shape[0]
+    Tp = A.shape[1] // d
     Nb = B.shape[0]
     P = Na * Nb
     last = T_orig - 1
     ri, rj = last % S, last % S
 
     def get_xy(ti, tj):
-        xa = jax.lax.dynamic_slice_in_dim(A, ti * S, S, axis=1)
-        yb = jax.lax.dynamic_slice_in_dim(B, tj * S, S, axis=1)
+        xa = jax.lax.dynamic_slice_in_dim(A, ti * d * S, d * S, axis=1)
+        yb = jax.lax.dynamic_slice_in_dim(B, tj * d * S, d * S, axis=1)
         return _pair_batch(xa, yb, Na, Nb)
 
     sweep = functools.partial(soft_tile_sweep, gamma=gamma)
     _, dri, _ = _tile_scan(meta, blocks, get_xy, P, Tp,
                            jnp.full((P, 1), INF, jnp.float32),
                            jnp.ones((P, 1), bool),
-                           S=S, g_out=g_out, ri=ri, sweep=sweep, neutral=NEG)
+                           S=S, g_out=g_out, ri=ri, sweep=sweep, neutral=NEG,
+                           d=d)
     L_val = jax.lax.dynamic_slice_in_dim(dri, rj, 1, axis=1)
     return _from_L(L_val, gamma).reshape(Na, Nb)
 
@@ -303,12 +331,14 @@ def gram_soft_spdtw_scan(A: jnp.ndarray, B: jnp.ndarray,
                          block_a: int = 64) -> jnp.ndarray:
     """All-pairs soft-SP-DTW Gram matrix over the active-tile schedule.
 
-    A: (Na, T), B: (Nb, T) -> (Na, Nb) soft distances (+INF where the
-    support admits no path). Forward-only; the differentiable Gram entry
-    is ``soft_spdtw_gram_batch``.
+    A: (Na, T) or (Na, T, d); B likewise -> (Na, Nb) soft distances
+    (+INF where the support admits no path). Forward-only; the
+    differentiable Gram entry is ``soft_spdtw_gram_batch``.
     """
-    Na, T = A.shape
+    from .backends import series_dim, to_tile_major
+    Na, T = A.shape[0], A.shape[1]
     Nb = B.shape[0]
+    d = series_dim(A)
     T_orig = T if T_orig is None else T_orig
     assert T_orig <= bsp.T
     g_out = result_tile_step(bsp.plan(), bsp.tile, T_orig)
@@ -316,31 +346,36 @@ def gram_soft_spdtw_scan(A: jnp.ndarray, B: jnp.ndarray,
         return jnp.full((Na, Nb), INF, jnp.float32)
     meta = jnp.asarray(bsp.plan())
     blocks = jnp.asarray(bsp.blocks)
-    Ap = jnp.pad(A.astype(jnp.float32), ((0, 0), (0, bsp.T - T)))
-    Bp = jnp.pad(B.astype(jnp.float32), ((0, 0), (0, bsp.T - T)))
+    Ap = to_tile_major(A, bsp.tile, bsp.T)
+    Bp = to_tile_major(B, bsp.tile, bsp.T)
     rows = []
     for s in range(0, Na, block_a):
         rows.append(_gram_soft_scan_call(
             meta, Ap[s:s + block_a], Bp, blocks,
-            S=bsp.tile, T_orig=T_orig, g_out=g_out, gamma=float(gamma)))
+            S=bsp.tile, T_orig=T_orig, g_out=g_out, gamma=float(gamma),
+            d=d))
     return jnp.concatenate(rows, axis=0)
 
 
-@functools.partial(jax.jit, static_argnames=("S", "T_orig", "g_out", "gamma"))
-def _soft_paired_scan_call(meta, X, Y, blocks, *, S, T_orig, g_out, gamma):
-    P, Tp = X.shape
+@functools.partial(jax.jit, static_argnames=("S", "T_orig", "g_out", "gamma",
+                                             "d"))
+def _soft_paired_scan_call(meta, X, Y, blocks, *, S, T_orig, g_out, gamma,
+                           d=1):
+    P = X.shape[0]
+    Tp = X.shape[1] // d
     last = T_orig - 1
     ri, rj = last % S, last % S
 
     def get_xy(ti, tj):
-        return (jax.lax.dynamic_slice_in_dim(X, ti * S, S, axis=1),
-                jax.lax.dynamic_slice_in_dim(Y, tj * S, S, axis=1))
+        return (jax.lax.dynamic_slice_in_dim(X, ti * d * S, d * S, axis=1),
+                jax.lax.dynamic_slice_in_dim(Y, tj * d * S, d * S, axis=1))
 
     sweep = functools.partial(soft_tile_sweep, gamma=gamma)
     _, dri, _ = _tile_scan(meta, blocks, get_xy, P, Tp,
                            jnp.full((P, 1), INF, jnp.float32),
                            jnp.ones((P, 1), bool),
-                           S=S, g_out=g_out, ri=ri, sweep=sweep, neutral=NEG)
+                           S=S, g_out=g_out, ri=ri, sweep=sweep, neutral=NEG,
+                           d=d)
     L_val = jax.lax.dynamic_slice_in_dim(dri, rj, 1, axis=1)
     return _from_L(L_val, gamma).reshape(P)
 
@@ -351,10 +386,13 @@ def soft_spdtw_paired_scan(x: jnp.ndarray, y: jnp.ndarray,
                            block_p: int = 4096) -> jnp.ndarray:
     """Batched *aligned-pair* soft-SP-DTW forward: (B, T) x (B, T) -> (B,).
 
-    Same schedule and work accounting as ``gram_block.spdtw_paired_scan``;
-    the forward half of ``soft_spdtw_batch``.
+    x, y: (B, T) or (B, T, d). Same schedule and work accounting as
+    ``gram_block.spdtw_paired_scan``; the forward half of
+    ``soft_spdtw_batch``.
     """
-    B, T = x.shape
+    from .backends import series_dim, to_tile_major
+    B, T = x.shape[0], x.shape[1]
+    d = series_dim(x)
     T_orig = T if T_orig is None else T_orig
     assert T_orig <= bsp.T
     g_out = result_tile_step(bsp.plan(), bsp.tile, T_orig)
@@ -362,13 +400,14 @@ def soft_spdtw_paired_scan(x: jnp.ndarray, y: jnp.ndarray,
         return jnp.full((B,), INF, jnp.float32)
     meta = jnp.asarray(bsp.plan())
     blocks = jnp.asarray(bsp.blocks)
-    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, bsp.T - T)))
-    yp = jnp.pad(y.astype(jnp.float32), ((0, 0), (0, bsp.T - T)))
+    xp = to_tile_major(x, bsp.tile, bsp.T)
+    yp = to_tile_major(y, bsp.tile, bsp.T)
     outs = []
     for s in range(0, B, block_p):
         outs.append(_soft_paired_scan_call(
             meta, xp[s:s + block_p], yp[s:s + block_p], blocks,
-            S=bsp.tile, T_orig=T_orig, g_out=g_out, gamma=float(gamma)))
+            S=bsp.tile, T_orig=T_orig, g_out=g_out, gamma=float(gamma),
+            d=d))
     return jnp.concatenate(outs, axis=0)
 
 
@@ -376,7 +415,8 @@ def soft_spdtw_paired_scan(x: jnp.ndarray, y: jnp.ndarray,
 # Forward with L-block stashing + reverse sweep (jnp scan engines)
 # ---------------------------------------------------------------------------
 
-def _stash_tile_scan(meta, blocks, get_xy, P, Tp, *, S, g_out, ri, gamma):
+def _stash_tile_scan(meta, blocks, get_xy, P, Tp, *, S, g_out, ri, gamma,
+                     d=1):
     """Forward active-tile scan that stashes each tile's full L block:
     ``gram_block._tile_scan(stash=True)`` with the stashing soft sweep.
 
@@ -390,12 +430,12 @@ def _stash_tile_scan(meta, blocks, get_xy, P, Tp, *, S, g_out, ri, gamma):
     _, dri, _, Lstash = _tile_scan(
         meta, blocks, get_xy, P, Tp,
         jnp.full((P, 1), INF, dtype), jnp.ones((P, 1), bool),
-        S=S, g_out=g_out, ri=ri, sweep=sweep, neutral=NEG, stash=True)
+        S=S, g_out=g_out, ri=ri, sweep=sweep, neutral=NEG, stash=True, d=d)
     return dri, Lstash
 
 
 def _reverse_tile_scan(rmeta, blocks, get_xy, Lstash_rev, gbar, P, Tp,
-                       *, S, ri, rj, gamma, with_eblocks=False):
+                       *, S, ri, rj, gamma, with_eblocks=False, d=1):
     """lax.scan over the reverse active-tile schedule (DESIGN.md §11).
 
     The reverse twin of ``gram_block._tile_scan``: E/L/t halos flow
@@ -408,7 +448,9 @@ def _reverse_tile_scan(rmeta, blocks, get_xy, Lstash_rev, gbar, P, Tp,
     cotangents in-scan; per-tile E blocks ride along as scan ys when
     ``with_eblocks`` (parity tests / ``soft_alignment_pairs``).
 
-    Returns (gx (P, Tp), gy (P, Tp), gw (Tp, Tp), E-blocks or None).
+    Returns (gx (P, d*Tp), gy (P, d*Tp), gw (Tp, Tp), E-blocks or None);
+    the series cotangents are tile-major like the inputs (d = 1 is the
+    historical (P, Tp)).
     """
     K = rmeta.shape[0]
     dtype = blocks.dtype
@@ -446,7 +488,7 @@ def _reverse_tile_scan(rmeta, blocks, get_xy, Lstash_rev, gbar, P, Tp,
         inj_k = jnp.where(k == 0, inj, 0.0)
         Eblk = soft_reverse_tile_sweep(x, y, w, Lblk, (bE, bL, bt_),
                                        (cE, cL, ct), (rE, rL, rt), inj_k,
-                                       S=S, gamma=gamma)
+                                       S=S, gamma=gamma, d=d)
         E3 = Eblk.reshape(P, S, S)
         L3 = Lblk.reshape(P, S, S)
         # publish halos for the upstream (reverse-order) tiles
@@ -455,24 +497,33 @@ def _reverse_tile_scan(rmeta, blocks, get_xy, Lstash_rev, gbar, P, Tp,
         topL = jax.lax.dynamic_update_slice_in_dim(topL, L3[:, 0, :],
                                                    tj * S, axis=1)
         topt = jax.lax.dynamic_update_slice_in_dim(
-            topt, _row0_logits(x, y, w, gamma), tj * S, axis=1)
+            topt, _row0_logits(x, y, w, gamma, d=d), tj * S, axis=1)
         colE, colL = E3[:, :, 0], L3[:, :, 0]
-        colt = _col0_logits(x, y, w, gamma)
+        colt = _col0_logits(x, y, w, gamma, d=d)
         corE, corL, cort = bE[:, 0:1], bL[:, 0:1], bt_[:, 0:1]
-        # cotangent contributions of this tile
+        # cotangent contributions of this tile, channel by channel
         Ew = E3 * w[None]
-        gx_t = 2.0 * (x * Ew.sum(2) - (Ew * y[:, None, :]).sum(2)) \
-            * gbar[:, None]
-        gy_t = -2.0 * ((Ew * x[:, :, None]).sum(1) - y * Ew.sum(1)) \
-            * gbar[:, None]
-        phi3 = (x[:, :, None] - y[:, None, :]) ** 2
+        gx_parts, gy_parts, phi3 = [], [], None
+        for c in range(d):
+            xk = x[:, c * S:(c + 1) * S]
+            yk = y[:, c * S:(c + 1) * S]
+            gx_parts.append(
+                2.0 * (xk * Ew.sum(2) - (Ew * yk[:, None, :]).sum(2))
+                * gbar[:, None])
+            gy_parts.append(
+                -2.0 * ((Ew * xk[:, :, None]).sum(1) - yk * Ew.sum(1))
+                * gbar[:, None])
+            pk = (xk[:, :, None] - yk[:, None, :]) ** 2
+            phi3 = pk if phi3 is None else phi3 + pk
+        gx_t = jnp.concatenate(gx_parts, axis=1)               # (P, d*S)
+        gy_t = jnp.concatenate(gy_parts, axis=1)
         gw_t = (E3 * phi3 * gbar[:, None, None]).sum(0)
-        gx_cur = jax.lax.dynamic_slice_in_dim(gx, ti * S, S, axis=1)
+        gx_cur = jax.lax.dynamic_slice_in_dim(gx, ti * d * S, d * S, axis=1)
         gx = jax.lax.dynamic_update_slice_in_dim(gx, gx_cur + gx_t,
-                                                 ti * S, axis=1)
-        gy_cur = jax.lax.dynamic_slice_in_dim(gy, tj * S, S, axis=1)
+                                                 ti * d * S, axis=1)
+        gy_cur = jax.lax.dynamic_slice_in_dim(gy, tj * d * S, d * S, axis=1)
         gy = jax.lax.dynamic_update_slice_in_dim(gy, gy_cur + gy_t,
-                                                 tj * S, axis=1)
+                                                 tj * d * S, axis=1)
         gw_cur = jax.lax.dynamic_slice(gw, (ti * S, tj * S), (S, S))
         gw = jax.lax.dynamic_update_slice(gw, gw_cur + gw_t,
                                           (ti * S, tj * S))
@@ -489,44 +540,49 @@ def _reverse_tile_scan(rmeta, blocks, get_xy, Lstash_rev, gbar, P, Tp,
             jnp.zeros((P, 1), dtype),
             jnp.full((P, 1), NEG, dtype),
             jnp.full((P, 1), NEG, dtype),
-            zeros_w, zeros_w, jnp.zeros((Tp, Tp), dtype))
+            jnp.zeros((P, d * Tp), dtype), jnp.zeros((P, d * Tp), dtype),
+            jnp.zeros((Tp, Tp), dtype))
     carry, Es = jax.lax.scan(step, init, (jnp.arange(K), rmeta, Lstash_rev))
     gx, gy, gw = carry[9], carry[10], carry[11]
     return gx, gy, gw, Es
 
 
-@functools.partial(jax.jit, static_argnames=("S", "g_out", "ri", "gamma"))
-def _soft_paired_stash_call(meta_f, X, Y, blocks, *, S, g_out, ri, gamma):
-    P, Tp = X.shape
+@functools.partial(jax.jit, static_argnames=("S", "g_out", "ri", "gamma",
+                                             "d"))
+def _soft_paired_stash_call(meta_f, X, Y, blocks, *, S, g_out, ri, gamma,
+                            d=1):
+    P = X.shape[0]
+    Tp = X.shape[1] // d
 
     def get_xy(ti, tj):
-        return (jax.lax.dynamic_slice_in_dim(X, ti * S, S, axis=1),
-                jax.lax.dynamic_slice_in_dim(Y, tj * S, S, axis=1))
+        return (jax.lax.dynamic_slice_in_dim(X, ti * d * S, d * S, axis=1),
+                jax.lax.dynamic_slice_in_dim(Y, tj * d * S, d * S, axis=1))
 
     dri, Lstash = _stash_tile_scan(meta_f, blocks, get_xy, P, Tp,
-                                   S=S, g_out=g_out, ri=ri, gamma=gamma)
+                                   S=S, g_out=g_out, ri=ri, gamma=gamma, d=d)
     L_val = jax.lax.dynamic_slice_in_dim(dri, ri, 1, axis=1)
     return _from_L(L_val, gamma).reshape(P), Lstash
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("S", "ri", "gamma", "with_eblocks"))
+                   static_argnames=("S", "ri", "gamma", "with_eblocks", "d"))
 def _soft_paired_bwd_call(rmeta, X, Y, blocks, Lstash, gbar, *, S, ri,
-                          gamma, with_eblocks):
-    P, Tp = X.shape
+                          gamma, with_eblocks, d=1):
+    P = X.shape[0]
+    Tp = X.shape[1] // d
 
     def get_xy(ti, tj):
-        return (jax.lax.dynamic_slice_in_dim(X, ti * S, S, axis=1),
-                jax.lax.dynamic_slice_in_dim(Y, tj * S, S, axis=1))
+        return (jax.lax.dynamic_slice_in_dim(X, ti * d * S, d * S, axis=1),
+                jax.lax.dynamic_slice_in_dim(Y, tj * d * S, d * S, axis=1))
 
     return _reverse_tile_scan(rmeta, blocks, get_xy, Lstash[::-1], gbar,
                               P, Tp, S=S, ri=ri, rj=ri, gamma=gamma,
-                              with_eblocks=with_eblocks)
+                              with_eblocks=with_eblocks, d=d)
 
 
 def _pad_series(x, bsp, dtype=jnp.float32):
-    return jnp.pad(jnp.asarray(x, dtype),
-                   ((0, 0), (0, bsp.T - x.shape[1])))
+    from .backends import to_tile_major
+    return to_tile_major(x, bsp.tile, bsp.T, dtype=dtype)
 
 
 def soft_spdtw_fwd_stash(x: jnp.ndarray, y: jnp.ndarray,
@@ -534,14 +590,17 @@ def soft_spdtw_fwd_stash(x: jnp.ndarray, y: jnp.ndarray,
                          T_orig: int | None = None, dtype=jnp.float32):
     """Aligned-pair soft forward that stashes per-tile L blocks.
 
-    x, y: (B, T). Returns (values (B,), Lstash (g_out+1, B, S*S)) —
-    Lstash is the residual ``soft_spdtw_bwd_block`` replays; None when
-    the corner tile is inactive (values +INF, gradients identically 0).
-    Values are bit-identical to ``soft_spdtw_paired_scan``. ``dtype``
-    sets the compute precision of the scan engine (f64 for oracle-grade
-    parity checks; the VJPs use f32).
+    x, y: (B, T) or (B, T, d). Returns (values (B,), Lstash
+    (g_out+1, B, S*S)) — Lstash is the residual ``soft_spdtw_bwd_block``
+    replays; None when the corner tile is inactive (values +INF,
+    gradients identically 0). Values are bit-identical to
+    ``soft_spdtw_paired_scan``. ``dtype`` sets the compute precision of
+    the scan engine (f64 for oracle-grade parity checks; the VJPs use
+    f32).
     """
-    B, T = x.shape
+    from .backends import series_dim
+    B, T = x.shape[0], x.shape[1]
+    d = series_dim(x)
     T_orig = T if T_orig is None else T_orig
     assert T_orig <= bsp.T
     g_out = result_tile_step(bsp.plan(), bsp.tile, T_orig)
@@ -551,7 +610,7 @@ def soft_spdtw_fwd_stash(x: jnp.ndarray, y: jnp.ndarray,
     val, Lstash = _soft_paired_stash_call(
         meta_f, _pad_series(x, bsp, dtype), _pad_series(y, bsp, dtype),
         jnp.asarray(bsp.blocks, dtype), S=bsp.tile, g_out=g_out,
-        ri=(T_orig - 1) % bsp.tile, gamma=float(gamma))
+        ri=(T_orig - 1) % bsp.tile, gamma=float(gamma), d=d)
     return val, Lstash
 
 
@@ -565,10 +624,13 @@ def soft_spdtw_bwd_block(x: jnp.ndarray, y: jnp.ndarray,
     computing the expected-alignment matrix restricted to the learned
     support and contracting it with the local-cost derivatives in-scan.
     ``gbar`` (B,) is the per-pair output cotangent (callers fold the
-    feasibility mask into it). Returns (gx (B, T_orig), gy (B, T_orig),
-    gw (Tp, Tp) summed over pairs; slice to the weight-grid size).
+    feasibility mask into it). Returns (gx, gy, gw (Tp, Tp) summed over
+    pairs; slice to the weight-grid size) — gx/gy shaped like the
+    series ((B, T_orig) univariate, (B, T_orig, d) multivariate).
     """
-    B, T = x.shape
+    from .backends import from_tile_major, series_dim
+    B, T = x.shape[0], x.shape[1]
+    d = series_dim(x)
     T_orig = T if T_orig is None else T_orig
     g_out = result_tile_step(bsp.plan(), bsp.tile, T_orig)
     assert g_out >= 0, "no admissible path: backward has no mass to move"
@@ -577,8 +639,11 @@ def soft_spdtw_bwd_block(x: jnp.ndarray, y: jnp.ndarray,
         rmeta, _pad_series(x, bsp, dtype), _pad_series(y, bsp, dtype),
         jnp.asarray(bsp.blocks, dtype), Lstash,
         jnp.asarray(gbar, dtype), S=bsp.tile,
-        ri=(T_orig - 1) % bsp.tile, gamma=float(gamma), with_eblocks=False)
-    return gx[:, :T_orig], gy[:, :T_orig], gw
+        ri=(T_orig - 1) % bsp.tile, gamma=float(gamma), with_eblocks=False,
+        d=d)
+    squeeze = x.ndim == 2
+    return (from_tile_major(gx, bsp.tile, d, T_orig, squeeze=squeeze),
+            from_tile_major(gy, bsp.tile, d, T_orig, squeeze=squeeze), gw)
 
 
 def soft_alignment_pairs(x: jnp.ndarray, y: jnp.ndarray,
@@ -590,8 +655,11 @@ def soft_alignment_pairs(x: jnp.ndarray, y: jnp.ndarray,
     (with ``dtype=jnp.float64`` the two agree to ~1e-12; in f32 both
     carry ~1e-5 roundoff of their own). Zero outside the learned support
     and identically zero for pairs whose support admits no path.
+    x, y: (B, T) or (B, T, d).
     """
-    B, T = x.shape
+    from .backends import series_dim
+    B, T = x.shape[0], x.shape[1]
+    d = series_dim(x)
     T_orig = T if T_orig is None else T_orig
     val, Lstash = soft_spdtw_fwd_stash(x, y, bsp, gamma, T_orig=T_orig,
                                        dtype=dtype)
@@ -605,7 +673,7 @@ def soft_alignment_pairs(x: jnp.ndarray, y: jnp.ndarray,
         _pad_series(y, bsp, dtype),
         jnp.asarray(bsp.blocks, dtype), Lstash,
         jnp.ones((B,), dtype), S=S,
-        ri=(T_orig - 1) % S, gamma=float(gamma), with_eblocks=True)
+        ri=(T_orig - 1) % S, gamma=float(gamma), with_eblocks=True, d=d)
     Es = np.asarray(Es)
     E = np.zeros((B, bsp.T, bsp.T), Es.dtype)
     for k in range(rmeta.shape[0]):
@@ -615,39 +683,43 @@ def soft_alignment_pairs(x: jnp.ndarray, y: jnp.ndarray,
     return jnp.asarray(E[:, :T_orig, :T_orig])
 
 
-@functools.partial(jax.jit, static_argnames=("S", "g_out", "ri", "gamma"))
-def _gram_stash_call(meta_f, A, B, blocks, *, S, g_out, ri, gamma):
-    Na, Tp = A.shape
+@functools.partial(jax.jit, static_argnames=("S", "g_out", "ri", "gamma",
+                                             "d"))
+def _gram_stash_call(meta_f, A, B, blocks, *, S, g_out, ri, gamma, d=1):
+    Na = A.shape[0]
+    Tp = A.shape[1] // d
     Nb = B.shape[0]
     P = Na * Nb
 
     def get_xy(ti, tj):
-        xa = jax.lax.dynamic_slice_in_dim(A, ti * S, S, axis=1)
-        yb = jax.lax.dynamic_slice_in_dim(B, tj * S, S, axis=1)
+        xa = jax.lax.dynamic_slice_in_dim(A, ti * d * S, d * S, axis=1)
+        yb = jax.lax.dynamic_slice_in_dim(B, tj * d * S, d * S, axis=1)
         return _pair_batch(xa, yb, Na, Nb)
 
     dri, Lstash = _stash_tile_scan(meta_f, blocks, get_xy, P, Tp,
-                                   S=S, g_out=g_out, ri=ri, gamma=gamma)
+                                   S=S, g_out=g_out, ri=ri, gamma=gamma, d=d)
     L_val = jax.lax.dynamic_slice_in_dim(dri, ri, 1, axis=1)
     return _from_L(L_val, gamma).reshape(Na, Nb), Lstash
 
 
-@functools.partial(jax.jit, static_argnames=("S", "ri", "gamma"))
-def _gram_bwd_scan_call(rmeta, A, B, blocks, Lstash, gbar, *, S, ri, gamma):
-    Na, Tp = A.shape
+@functools.partial(jax.jit, static_argnames=("S", "ri", "gamma", "d"))
+def _gram_bwd_scan_call(rmeta, A, B, blocks, Lstash, gbar, *, S, ri, gamma,
+                        d=1):
+    Na = A.shape[0]
+    Tp = A.shape[1] // d
     Nb = B.shape[0]
     P = Na * Nb
 
     def get_xy(ti, tj):
-        xa = jax.lax.dynamic_slice_in_dim(A, ti * S, S, axis=1)
-        yb = jax.lax.dynamic_slice_in_dim(B, tj * S, S, axis=1)
+        xa = jax.lax.dynamic_slice_in_dim(A, ti * d * S, d * S, axis=1)
+        yb = jax.lax.dynamic_slice_in_dim(B, tj * d * S, d * S, axis=1)
         return _pair_batch(xa, yb, Na, Nb)
 
     gx, gy, gw, _ = _reverse_tile_scan(
         rmeta, blocks, get_xy, Lstash[::-1], gbar.reshape(P), P, Tp,
-        S=S, ri=ri, rj=ri, gamma=gamma, with_eblocks=False)
-    gA = gx.reshape(Na, Nb, Tp).sum(1)
-    gB = gy.reshape(Na, Nb, Tp).sum(0)
+        S=S, ri=ri, rj=ri, gamma=gamma, with_eblocks=False, d=d)
+    gA = gx.reshape(Na, Nb, d * Tp).sum(1)
+    gB = gy.reshape(Na, Nb, d * Tp).sum(0)
     return gA, gB, gw
 
 
@@ -656,12 +728,14 @@ def gram_soft_fwd_stash(A: jnp.ndarray, B: jnp.ndarray,
                         T_orig: int | None = None, dtype=jnp.float32):
     """All-pairs soft Gram forward with L-block stashing.
 
-    Returns (values (Na, Nb), Lstash (g_out+1, Na*Nb, S*S)); Lstash is
-    None when the corner tile is inactive. Memory is the standard
-    soft-DTW "keep R" residual restricted to active tiles:
-    Na*Nb*n_walked*S^2 floats.
+    A: (Na, T) or (Na, T, d); B likewise. Returns (values (Na, Nb),
+    Lstash (g_out+1, Na*Nb, S*S)); Lstash is None when the corner tile
+    is inactive. Memory is the standard soft-DTW "keep R" residual
+    restricted to active tiles: Na*Nb*n_walked*S^2 floats.
     """
-    Na, T = A.shape
+    from .backends import series_dim
+    Na, T = A.shape[0], A.shape[1]
+    d = series_dim(A)
     T_orig = T if T_orig is None else T_orig
     assert T_orig <= bsp.T
     g_out = result_tile_step(bsp.plan(), bsp.tile, T_orig)
@@ -671,7 +745,7 @@ def gram_soft_fwd_stash(A: jnp.ndarray, B: jnp.ndarray,
     return _gram_stash_call(
         meta_f, _pad_series(A, bsp, dtype), _pad_series(B, bsp, dtype),
         jnp.asarray(bsp.blocks, dtype), S=bsp.tile, g_out=g_out,
-        ri=(T_orig - 1) % bsp.tile, gamma=float(gamma))
+        ri=(T_orig - 1) % bsp.tile, gamma=float(gamma), d=d)
 
 
 def gram_soft_bwd_scan(A: jnp.ndarray, B: jnp.ndarray,
@@ -680,9 +754,12 @@ def gram_soft_bwd_scan(A: jnp.ndarray, B: jnp.ndarray,
                        T_orig: int | None = None, dtype=jnp.float32):
     """Reverse active-tile sweep over the pair cross-product: Gram
     cotangents. ``gbar``: (Na, Nb) output cotangent (feasibility mask
-    folded in by the caller). Returns (gA (Na, T_orig), gB (Nb, T_orig),
-    gw (Tp, Tp))."""
-    Na, T = A.shape
+    folded in by the caller). Returns (gA, gB, gw (Tp, Tp)) — gA/gB
+    shaped like the series ((N, T_orig) univariate, (N, T_orig, d)
+    multivariate)."""
+    from .backends import from_tile_major, series_dim
+    Na, T = A.shape[0], A.shape[1]
+    d = series_dim(A)
     T_orig = T if T_orig is None else T_orig
     g_out = result_tile_step(bsp.plan(), bsp.tile, T_orig)
     assert g_out >= 0, "no admissible path: backward has no mass to move"
@@ -691,8 +768,10 @@ def gram_soft_bwd_scan(A: jnp.ndarray, B: jnp.ndarray,
         rmeta, _pad_series(A, bsp, dtype), _pad_series(B, bsp, dtype),
         jnp.asarray(bsp.blocks, dtype), Lstash,
         jnp.asarray(gbar, dtype), S=bsp.tile,
-        ri=(T_orig - 1) % bsp.tile, gamma=float(gamma))
-    return gA[:, :T_orig], gB[:, :T_orig], gw
+        ri=(T_orig - 1) % bsp.tile, gamma=float(gamma), d=d)
+    squeeze = A.ndim == 2
+    return (from_tile_major(gA, bsp.tile, d, T_orig, squeeze=squeeze),
+            from_tile_major(gB, bsp.tile, d, T_orig, squeeze=squeeze), gw)
 
 
 # ---------------------------------------------------------------------------
@@ -727,7 +806,7 @@ def _gather_soft_edges(meta_ref, g, row_edge, col_edge, corner_next, bt, S):
 def _gram_soft_kernel(meta_ref, a_ref, b_ref, w_ref, out_ref,
                       row_edge, col_edge, corner_next, d_ri,
                       *, S: int, g_out: int, ri: int, rj: int,
-                      ba: int, bb: int, gamma: float):
+                      ba: int, bb: int, gamma: float, d: int):
     """One grid step = one active tile for one (A-stripe, B-stripe) block —
     ``gram_block._gram_spdtw_kernel`` in the log semiring (no abandon
     sweep: the row-min bound is a min-plus construct)."""
@@ -740,9 +819,10 @@ def _gram_soft_kernel(meta_ref, a_ref, b_ref, w_ref, out_ref,
 
     ti = meta_ref[g, 0]
     tj = meta_ref[g, 1]
-    xa = pl.load(a_ref, (slice(None), pl.dslice(ti * S, S)))   # (ba, S)
-    yb = pl.load(b_ref, (slice(None), pl.dslice(tj * S, S)))   # (bb, S)
-    x, y = _pair_batch(xa, yb, ba, bb)                         # (bt, S)
+    # tile-major layout: tile ti's d channel planes are contiguous
+    xa = pl.load(a_ref, (slice(None), pl.dslice(ti * d * S, d * S)))
+    yb = pl.load(b_ref, (slice(None), pl.dslice(tj * d * S, d * S)))
+    x, y = _pair_batch(xa, yb, ba, bb)                         # (bt, d*S)
     w = w_ref[0]                                               # (S, S)
 
     top_vec, left_vec, c_first = _gather_soft_edges(
@@ -750,7 +830,8 @@ def _gram_soft_kernel(meta_ref, a_ref, b_ref, w_ref, out_ref,
     new_corner = top_vec[:, S - 1:S]
 
     d_last, rightcol, dri = soft_tile_sweep(x, y, w, top_vec, left_vec,
-                                            c_first, S=S, ri=ri, gamma=gamma)
+                                            c_first, S=S, ri=ri, gamma=gamma,
+                                            d=d)
 
     corner_next[...] = new_corner
     pl.store(row_edge, (slice(None), pl.dslice(tj * S, S)), d_last)
@@ -765,22 +846,23 @@ def _gram_soft_kernel(meta_ref, a_ref, b_ref, w_ref, out_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("S", "n_active", "T_orig", "g_out",
-                                    "ba", "bb", "gamma", "interpret"))
+                                    "ba", "bb", "gamma", "d", "interpret"))
 def _gram_soft_call(meta, A, B, blocks, *, S, n_active, T_orig, g_out,
-                    ba, bb, gamma, interpret):
-    Nap, Tp = A.shape
+                    ba, bb, gamma, d, interpret):
+    Nap, Tw = A.shape
     Nbp = B.shape[0]
+    Tp = Tw // d                    # DP grid edge (padded)
     last = T_orig - 1
     ri, rj = last % S, last % S
     grid = (Nap // ba, Nbp // bb, n_active)
     kernel = functools.partial(_gram_soft_kernel, S=S, g_out=g_out,
-                               ri=ri, rj=rj, ba=ba, bb=bb, gamma=gamma)
+                               ri=ri, rj=rj, ba=ba, bb=bb, gamma=gamma, d=d)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((ba, Tp), lambda i, j, g, m: (i, 0)),
-            pl.BlockSpec((bb, Tp), lambda i, j, g, m: (j, 0)),
+            pl.BlockSpec((ba, Tw), lambda i, j, g, m: (i, 0)),
+            pl.BlockSpec((bb, Tw), lambda i, j, g, m: (j, 0)),
             pl.BlockSpec((1, S, S), lambda i, j, g, m: (m[g, 2], 0, 0)),
         ],
         out_specs=pl.BlockSpec((ba, bb), lambda i, j, g, m: (i, j)),
@@ -804,11 +886,15 @@ def gram_soft_spdtw_block(A: jnp.ndarray, B: jnp.ndarray,
                           interpret: bool = False) -> jnp.ndarray:
     """All-pairs soft-SP-DTW Gram matrix via the fused Pallas kernel.
 
-    A: (Na, T), B: (Nb, T) -> (Na, Nb) f32 soft distances. Forward-only
-    serving path; the backward twin is ``gram_soft_bwd_pallas``.
+    A: (Na, T) or (Na, T, d); B likewise -> (Na, Nb) f32 soft distances.
+    Forward-only serving path; the backward twin is
+    ``gram_soft_bwd_pallas`` (univariate — multivariate gradients take
+    the scan backward, see ``kernels.backends``).
     """
-    Na, T = A.shape
+    from .backends import series_dim, to_tile_major
+    Na, T = A.shape[0], A.shape[1]
     Nb = B.shape[0]
+    d = series_dim(A)
     T_orig = T if T_orig is None else T_orig
     assert T_orig <= bsp.T
     meta = bsp.plan()
@@ -819,10 +905,10 @@ def gram_soft_spdtw_block(A: jnp.ndarray, B: jnp.ndarray,
     Nap = ((Na + ba - 1) // ba) * ba
     Nbp = ((Nb + bb - 1) // bb) * bb
     out = _gram_soft_call(
-        jnp.asarray(meta), _pad_rows_cols(A, Nap, bsp.T),
-        _pad_rows_cols(B, Nbp, bsp.T), jnp.asarray(bsp.blocks),
+        jnp.asarray(meta), to_tile_major(A, bsp.tile, bsp.T, n_to=Nap),
+        to_tile_major(B, bsp.tile, bsp.T, n_to=Nbp), jnp.asarray(bsp.blocks),
         S=bsp.tile, n_active=n_active, T_orig=T_orig, g_out=g_out,
-        ba=ba, bb=bb, gamma=float(gamma), interpret=interpret)
+        ba=ba, bb=bb, gamma=float(gamma), d=d, interpret=interpret)
     return out[:Na, :Nb]
 
 
@@ -1166,7 +1252,8 @@ def gram_soft_spdtw_block_grad(A: jnp.ndarray, B: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def _is_traced(v) -> bool:
-    return isinstance(v, jax.core.Tracer)
+    from .backends import is_traced
+    return is_traced(v)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
@@ -1174,25 +1261,27 @@ def soft_spdtw_batch(x: jnp.ndarray, y: jnp.ndarray, weights: jnp.ndarray,
                      gamma: float) -> jnp.ndarray:
     """Batched aligned-pair soft-SP-DTW, differentiable in x, y, weights.
 
-    x, y: (B, T) — pair p is (x[p], y[p]); weights: (T, T) learned grid
-    (0 outside the support). Returns (B,) soft distances, +INF where the
-    support admits no path. When ``weights`` is host-concrete (the usual
-    case: the learned grid is a frozen compile-time artifact closed over
-    by the training step) *both* passes run on the block-sparse
-    active-tile schedule: the forward stashes per-tile L blocks and the
-    backward walks the cached plan in reverse (``soft_spdtw_bwd_block``,
-    DESIGN.md §11) — gradients never leave the learned search space and
-    backward work scales with active tiles exactly like the forward. A
-    traced weight grid falls back to the vmapped core recursion and its
-    dense expected-alignment backward (fully traceable; the oracle).
+    x, y: (B, T) or (B, T, d) — pair p is (x[p], y[p]); weights: (T, T)
+    learned grid (0 outside the support). Returns (B,) soft distances,
+    +INF where the support admits no path. When ``weights`` is
+    host-concrete (the usual case: the learned grid is a frozen
+    compile-time artifact closed over by the training step) *both*
+    passes run on the block-sparse active-tile schedule: the forward
+    stashes per-tile L blocks and the backward walks the cached plan in
+    reverse (``soft_spdtw_bwd_block``, DESIGN.md §11) — gradients never
+    leave the learned search space and backward work scales with active
+    tiles exactly like the forward. A traced weight grid falls back to
+    the vmapped core recursion and its dense expected-alignment backward
+    (fully traceable; the oracle) — the capability walk in
+    ``kernels.backends.resolve``.
     """
     return _soft_batch_value(x, y, weights, gamma)
 
 
 def _soft_batch_value(x, y, weights, gamma):
     if not _is_traced(weights):
-        from .ops import _resolve_bsp  # deferred: ops imports this module
-        bsp = _resolve_bsp(weights=weights)
+        from .backends import resolve_plan
+        bsp = resolve_plan(weights=weights)
         return soft_spdtw_paired_scan(x, y, bsp, gamma, T_orig=x.shape[1])
     return jax.vmap(
         lambda a, b: _soft_forward(a, b, weights, gamma)[0])(x, y)
@@ -1200,8 +1289,8 @@ def _soft_batch_value(x, y, weights, gamma):
 
 def _soft_batch_fwd(x, y, weights, gamma):
     if not _is_traced(weights):
-        from .ops import _resolve_bsp
-        bsp = _resolve_bsp(weights=weights)
+        from .backends import resolve_plan
+        bsp = resolve_plan(weights=weights)
         val, stash = soft_spdtw_fwd_stash(
             jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32),
             bsp, gamma, T_orig=x.shape[1])
@@ -1214,8 +1303,8 @@ def _soft_batch_fwd(x, y, weights, gamma):
 def _soft_batch_bwd(gamma, res, gbar):
     x, y, weights, val, stash = res
     if stash is not None:
-        from .ops import _resolve_bsp
-        bsp = _resolve_bsp(weights=weights)
+        from .backends import resolve_plan
+        bsp = resolve_plan(weights=weights)
         gb = (jnp.asarray(gbar, jnp.float32) * (val < 1e29))
         gx, gy, gwp = soft_spdtw_bwd_block(
             jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32),
@@ -1231,7 +1320,8 @@ def _soft_batch_bwd(gamma, res, gbar):
     # traced weights: dense vmapped expected-alignment backward (oracle)
     gx, gy, gw = jax.vmap(
         lambda a, b: _soft_grads(a, b, weights, gamma))(x, y)
-    return (gbar[:, None] * gx, gbar[:, None] * gy,
+    gsh = gbar[:, None] if x.ndim == 2 else gbar[:, None, None]
+    return (gsh * gx, gsh * gy,
             jnp.einsum("b,bij->ij", gbar, gw).astype(weights.dtype))
 
 
@@ -1243,7 +1333,8 @@ def soft_spdtw_gram_batch(A: jnp.ndarray, B: jnp.ndarray,
                           weights: jnp.ndarray, gamma: float) -> jnp.ndarray:
     """All-pairs soft-SP-DTW Gram matrix, differentiable in A, B, weights.
 
-    A: (Na, T), B: (Nb, T); weights: (T, T). Returns (Na, Nb). Forward
+    A: (Na, T) or (Na, T, d); B likewise; weights: (T, T). Returns
+    (Na, Nb). Forward
     runs the block-sparse Gram engine (Pallas on TPU, active-tile scan
     elsewhere) when ``weights`` is host-concrete; the backward is the
     reverse active-tile sweep over the stashed L blocks — the fused
@@ -1261,23 +1352,39 @@ def _dense_gram(A, B, weights, gamma):
     return f(A, B)
 
 
+def _gram_vjp_backend(A, weights):
+    """Backend of the Gram VJP passes: the capability walk in
+    ``kernels.backends.resolve`` (the Pallas stash/backward kernels are
+    univariate, so multivariate gradients require MULTIVARIATE_GRAD and
+    land on scan; traced grids land on dense)."""
+    from . import backends as bk
+    require = [bk.DIFFERENTIABLE]
+    if _is_traced(weights):
+        require.append(bk.TRACED_WEIGHTS)
+    if bk.series_dim(A) > 1:
+        require.append(bk.MULTIVARIATE_GRAD)
+    return bk.resolve("auto", require=tuple(require)).name
+
+
 def _soft_gram_value(A, B, weights, gamma):
-    if not _is_traced(weights):
-        from .ops import _on_tpu, _resolve_bsp
-        bsp = _resolve_bsp(weights=weights)
-        if _on_tpu():
-            return gram_soft_spdtw_block(A, B, bsp, gamma, T_orig=A.shape[1])
-        return gram_soft_spdtw_scan(A, B, bsp, gamma, T_orig=A.shape[1])
-    return _dense_gram(A, B, weights, gamma)
+    backend = _gram_vjp_backend(A, weights)
+    if backend == "dense":
+        return _dense_gram(A, B, weights, gamma)
+    from .backends import resolve_plan
+    bsp = resolve_plan(weights=weights)
+    if backend == "pallas":
+        return gram_soft_spdtw_block(A, B, bsp, gamma, T_orig=A.shape[1])
+    return gram_soft_spdtw_scan(A, B, bsp, gamma, T_orig=A.shape[1])
 
 
 def _soft_gram_fwd(A, B, weights, gamma):
-    if not _is_traced(weights):
-        from .ops import _on_tpu, _resolve_bsp
-        bsp = _resolve_bsp(weights=weights)
+    backend = _gram_vjp_backend(A, weights)
+    if backend != "dense":
+        from .backends import resolve_plan
+        bsp = resolve_plan(weights=weights)
         Af = jnp.asarray(A, jnp.float32)
         Bf = jnp.asarray(B, jnp.float32)
-        if _on_tpu():
+        if backend == "pallas":
             val, stash = gram_soft_fwd_stash_pallas(Af, Bf, bsp, gamma,
                                                     T_orig=A.shape[1])
         else:
@@ -1290,12 +1397,13 @@ def _soft_gram_fwd(A, B, weights, gamma):
 def _soft_gram_bwd(gamma, res, gbar):
     A, B, weights, val, stash = res
     if stash is not None:
-        from .ops import _on_tpu, _resolve_bsp
-        bsp = _resolve_bsp(weights=weights)
+        from .backends import resolve_plan
+        backend = _gram_vjp_backend(A, weights)
+        bsp = resolve_plan(weights=weights)
         gb = (jnp.asarray(gbar, jnp.float32) * (val < 1e29))
         Af = jnp.asarray(A, jnp.float32)
         Bf = jnp.asarray(B, jnp.float32)
-        if _on_tpu():
+        if backend == "pallas":
             gA, gB, gwp = gram_soft_bwd_pallas(Af, Bf, bsp, gamma, stash,
                                                gb, T_orig=A.shape[1])
         else:
@@ -1312,8 +1420,8 @@ def _soft_gram_bwd(gamma, res, gbar):
         lambda a, b: _soft_grads(a, b, weights, gamma),
         in_axes=(None, 0)), in_axes=(0, None))(A, B)
     gxa, gyb, gw = grads
-    gA = jnp.einsum("ab,abt->at", gbar, gxa)
-    gB = jnp.einsum("ab,abt->bt", gbar, gyb)
+    gA = jnp.einsum("ab,ab...->a...", gbar, gxa)
+    gB = jnp.einsum("ab,ab...->b...", gbar, gyb)
     gW = jnp.einsum("ab,abij->ij", gbar, gw).astype(weights.dtype)
     return gA, gB, gW
 

@@ -63,14 +63,38 @@ def _minplus_scan_lanes(u, c, width):
     return m
 
 
-def tile_sweep(x, y, w, top_vec, left_vec, c_first, *, S: int, ri: int):
+def tile_cost_row(x, y, w, t, *, S: int, d: int = 1):
+    """Weighted local-cost row ``t`` of one tile for a pair batch.
+
+    x, y: (bt, d*S) tile-major / channel-inner series tiles (channel k in
+    lanes [k*S, (k+1)*S); see ``backends.to_tile_major`` — d = 1 is the
+    historical (bt, S) layout unchanged). The squared distance sums over
+    channels before the weight multiply, so the multivariate DP is the
+    *dependent* DTW of the summed local cost under one shared path —
+    exactly what the dense core DPs (``core.dtw.local_cost``) compute.
+    Masked cells (w == 0) read +INF. Shared by the hard sweeps here / in
+    ``gram_block``; the soft twin lives in ``soft_block``.
+    """
+    wt = jax.lax.dynamic_slice_in_dim(w, t, 1, axis=0)          # (1,S)
+    acc = None
+    for k in range(d):
+        xt = jax.lax.dynamic_slice_in_dim(x, k * S + t, 1, axis=1)
+        yk = jax.lax.dynamic_slice_in_dim(y, k * S, S, axis=1)
+        dk = (xt - yk) ** 2
+        acc = dk if acc is None else acc + dk
+    return jnp.where(wt > 0, acc * wt, INF)
+
+
+def tile_sweep(x, y, w, top_vec, left_vec, c_first, *, S: int, ri: int,
+               d: int = 1):
     """Sweep one S x S tile of the SP-DTW DP for a batch of pairs.
 
     Pure jnp on values (no refs), so it is shared verbatim by the single-pair
     Pallas kernel here, the fused Gram kernel in ``gram_block.py`` and the
     jnp scan engine (same math => parity by construction).
 
-    x, y:      (bt, S) per-pair series tiles (rows of x, cols of y).
+    x, y:      (bt, d*S) per-pair series tiles, tile-major / channel-inner
+               (rows of x, cols of y; d = 1 is the historical (bt, S)).
     w:         (S, S) weight block (0 = masked cell).
     top_vec:   (bt, S) bottom edge of the tile above (+INF if inactive).
     left_vec:  (bt, S) right edge of the tile to the left (+INF if inactive).
@@ -81,10 +105,7 @@ def tile_sweep(x, y, w, top_vec, left_vec, c_first, *, S: int, ri: int):
     bt = x.shape[0]
 
     def cost_row(t):
-        xt = jax.lax.dynamic_slice_in_dim(x, t, 1, axis=1)      # (bt,1)
-        wt = jax.lax.dynamic_slice_in_dim(w, t, 1, axis=0)      # (1,S)
-        c = (xt - y) ** 2 * wt
-        return jnp.where(wt > 0, c, INF)
+        return tile_cost_row(x, y, w, t, S=S, d=d)
 
     def row_update(t, d_prev, topleft0, left_t):
         c = cost_row(t)
@@ -115,7 +136,7 @@ def tile_sweep(x, y, w, top_vec, left_vec, c_first, *, S: int, ri: int):
 
 def _spdtw_block_kernel(meta_ref, x_ref, y_ref, w_ref, out_ref,
                         row_edge, col_edge, corner_next, d_ri,
-                        *, S: int, g_out: int, ri: int, rj: int):
+                        *, S: int, g_out: int, ri: int, rj: int, d: int):
     """One grid step = one active tile (meta columns: ti,tj,slot,top,left,diag)."""
     g = pl.program_id(1)
     bt = x_ref.shape[0]
@@ -124,8 +145,8 @@ def _spdtw_block_kernel(meta_ref, x_ref, y_ref, w_ref, out_ref,
     left_ok = meta_ref[g, 4] > 0
     diag_ok = meta_ref[g, 5] > 0
 
-    x = x_ref[...]                  # (bt, S) rows of this tile
-    y = y_ref[...]                  # (bt, S) cols of this tile
+    x = x_ref[...]                  # (bt, d*S) rows of this tile
+    y = y_ref[...]                  # (bt, d*S) cols of this tile
     w = w_ref[0]                    # (S, S) weight block
 
     # --- gather incoming edges (guarded against inactive neighbours) ---
@@ -148,7 +169,7 @@ def _spdtw_block_kernel(meta_ref, x_ref, y_ref, w_ref, out_ref,
     new_corner = top_vec[:, S - 1:S]
 
     d_last, rightcol, dri = tile_sweep(x, y, w, top_vec, left_vec, c_first,
-                                       S=S, ri=ri)
+                                       S=S, ri=ri, d=d)
 
     # --- publish edges for downstream tiles ---
     corner_next[...] = new_corner
@@ -182,21 +203,24 @@ def result_tile_step(meta: np.ndarray, S: int, T_orig: int) -> int:
 
 @functools.partial(jax.jit,
                    static_argnames=("S", "n_active", "T_orig", "g_out",
-                                    "block_b", "interpret"))
+                                    "block_b", "d", "interpret"))
 def _spdtw_block_call(meta, x, y, blocks, *, S, n_active, T_orig, g_out,
-                      block_b, interpret):
-    Bp, Tp = x.shape
+                      block_b, d, interpret):
+    Bp = x.shape[0]
+    Tp = (x.shape[1] // d // S) * S          # DP grid edge (padded)
     last = T_orig - 1
     ri, rj = last % S, last % S
     grid = (Bp // block_b, n_active)
     kernel = functools.partial(_spdtw_block_kernel, S=S, g_out=g_out,
-                               ri=ri, rj=rj)
+                               ri=ri, rj=rj, d=d)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_b, S), lambda b, g, m: (b, m[g, 0])),
-            pl.BlockSpec((block_b, S), lambda b, g, m: (b, m[g, 1])),
+            # tile-major layout: block column ti covers the d channel
+            # planes of tile ti, so per-tile indexing is unchanged
+            pl.BlockSpec((block_b, d * S), lambda b, g, m: (b, m[g, 0])),
+            pl.BlockSpec((block_b, d * S), lambda b, g, m: (b, m[g, 1])),
             pl.BlockSpec((1, S, S), lambda b, g, m: (m[g, 2], 0, 0)),
         ],
         out_specs=pl.BlockSpec((block_b, 1), lambda b, g, m: (b, 0)),
@@ -219,22 +243,22 @@ def spdtw_block(x: jnp.ndarray, y: jnp.ndarray, bsp: BlockSparsePaths,
                 interpret: bool = False) -> jnp.ndarray:
     """Batched SP-DTW over a block-sparse learned search space.
 
-    x, y: (B, T_orig) f32. Returns (B,) SP-DTW values (INF-like where the
-    support admits no path).
+    x, y: (B, T_orig) or (B, T_orig, d) f32. Returns (B,) SP-DTW values
+    (INF-like where the support admits no path).
     """
-    B, T = x.shape
+    from .backends import series_dim, to_tile_major
+    B, T = x.shape[0], x.shape[1]
+    d = series_dim(x)
     T_orig = T if T_orig is None else T_orig
     assert T_orig <= bsp.T
     meta, n_active = _host_plan(bsp)
     g_out = result_tile_step(meta, bsp.tile, T_orig)
     if g_out < 0:   # corner cell outside the support: no admissible path
         return jnp.full((B,), INF, jnp.float32)
-    Tp = bsp.T
     Bp = ((B + block_b - 1) // block_b) * block_b
-    x = jnp.pad(x.astype(jnp.float32), ((0, Bp - B), (0, Tp - T)))
-    y = jnp.pad(y.astype(jnp.float32), ((0, Bp - B), (0, Tp - T)))
     out = _spdtw_block_call(
-        jnp.asarray(meta), x, y, jnp.asarray(bsp.blocks),
+        jnp.asarray(meta), to_tile_major(x, bsp.tile, bsp.T, n_to=Bp),
+        to_tile_major(y, bsp.tile, bsp.T, n_to=Bp), jnp.asarray(bsp.blocks),
         S=bsp.tile, n_active=n_active, T_orig=T_orig, g_out=g_out,
-        block_b=block_b, interpret=interpret)
+        block_b=block_b, d=d, interpret=interpret)
     return out[:B, 0]

@@ -39,13 +39,15 @@ def cluster_job(mesh, weights, gamma: float = 0.1, *, steps: int = 30,
     """
     axes = tuple(mesh.axis_names)
     w = np.asarray(weights, np.float32)
+    # fit once, host-side: the engine's plan is a compile-time constant
+    # closed over by the sharded loop (DESIGN.md §12)
+    from repro.core.engine import engine_for
+    eng = engine_for("spdtw", weights=w, gamma=gamma)
 
     def local(Z0, X, A):
-        from repro.cluster.barycenter import soft_barycenter
-
         def fit_one(z0, a):
-            z, losses = soft_barycenter(X, w, gamma, init=z0, steps=steps,
-                                        lr=lr, sample_weights=a)
+            z, losses = eng.barycenter(X, init=z0, steps=steps, lr=lr,
+                                       sample_weights=a)
             return z, losses[-1]
 
         return jax.vmap(fit_one)(Z0, A)

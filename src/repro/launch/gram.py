@@ -31,7 +31,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.dtw import band_mask
-from repro.core.occupancy import block_sparsify, default_tile
+from repro.core.engine import engine_for
 from repro import compat
 
 
@@ -39,26 +39,22 @@ def gram_job(mesh, weights, kind: str = "spdtw", nu: float = 1.0,
              tile: int | None = None, impl: str = "auto"):
     """Build the jitted distributed Gram computation for the given mesh.
 
-    ``weights`` is a concrete host-side (T, T) array (the learned SP grid or
-    a corridor mask): the block-sparse plan must exist before tracing, so it
-    is derived here — not passed through the mesh as a traced operand.
+    ``weights`` is a concrete host-side (T, T) array (the learned SP grid
+    or a corridor mask): the engine is fitted here, outside the trace, so
+    its block-sparse plan exists before tracing and is closed over as a
+    constant — each chip then runs ``engine.gram`` on its row stripe.
     """
     axes = tuple(mesh.axis_names)
     w = np.asarray(weights, np.float32)
-    T = w.shape[0]
-    bsp = None
-    if kind == "spdtw":
-        bsp = block_sparsify(w, tile=tile or default_tile(T))
+    eng = engine_for(kind, weights=None if kind == "dtw" else w, nu=nu,
+                     tile=tile, T=w.shape[0])
 
     def local(xs, ys):
-        from repro.core.measures import pairwise
-        if kind == "dtw":        # plain DTW ignores the weight grid
-            return pairwise(xs, ys, "dtw", impl=impl, block_a=xs.shape[0])
-        if kind == "spdtw":
-            return pairwise(xs, ys, "spdtw", bsp=bsp, weights=w, impl=impl,
-                            block_a=xs.shape[0])
-        return pairwise(xs, ys, "sp_krdtw", weights=w, nu=nu, impl=impl,
-                        block_a=xs.shape[0])
+        if eng.is_kernel:
+            # kernel kinds report raw *log-kernel* values (the SVM
+            # workload's input), not the negated dissimilarity
+            return eng.gram_log(xs, ys, impl=impl, block_a=xs.shape[0])
+        return eng.gram(xs, ys, impl=impl, block_a=xs.shape[0])
 
     fn = compat.shard_map(
         local, mesh=mesh,
@@ -73,10 +69,11 @@ def knn_job(mesh, weights, kind: str = "spdtw", impl: str = "auto",
     """Build the jitted distributed exact-1-NN cascade for the given mesh.
 
     Queries shard row-wise; the corpus replicates. The whole cascade
-    (bounds, seeds, survivor DP) is traceable because the index's static
-    parts (support windows, tile plan) derive from the host-side
+    (bounds, seeds, survivor DP) is traceable because the engine's
+    static parts (support grid, tile plan) are fitted from the host-side
     ``weights`` here, outside the trace; the corpus-dependent parts
-    (envelopes) are pure jnp and ride inside the shard.
+    (envelopes) are pure jnp, so ``fit`` runs per-shard on the traced
+    corpus stripe reusing the closed-over support.
 
     Only the dissimilarity kinds have admissible bounds — the kernel
     measures (sp_krdtw etc.) must take the full Gram job.
@@ -86,13 +83,13 @@ def knn_job(mesh, weights, kind: str = "spdtw", impl: str = "auto",
                          f"{kind!r}; use mode='gram'")
     axes = tuple(mesh.axis_names)
     w = np.asarray(weights, np.float32)
+    base = engine_for(kind, weights=None if kind == "dtw" else w,
+                      T=w.shape[0])
 
     def local(qs, cs):
-        from repro.core.measures import build_corpus_index
-        from repro.kernels.ops import knn_cascade
-        index = build_corpus_index(cs, w, kind=kind)
-        nn, dist = knn_cascade(qs, index, impl=impl, seed_k=seed_k,
-                               prefix_frac=prefix_frac)
+        eng = base.with_corpus(cs)
+        nn, dist = eng.knn(qs, impl=impl, seed_k=seed_k,
+                           prefix_frac=prefix_frac)
         return nn, dist
 
     fn = compat.shard_map(

@@ -35,7 +35,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SparsePaths, learn_sparse_paths, make_measure
+from repro.core import SparsePaths, learn_sparse_paths
+from repro.core.engine import MeasureSpec, fit
 
 _STAT_KEYS = ("stage1_prune", "stage2_prune", "stage3_prune",
               "pre_dp_prune", "dp_abandoned")
@@ -58,38 +59,45 @@ class QueryResult:
 
 
 class SearchEngine:
-    """1-NN / nearest-centroid engine over a fixed, indexed corpus.
+    """1-NN / nearest-centroid serving shell over a ``SimilarityEngine``.
 
-    Construction builds the corpus index once (the expensive part:
-    envelopes + tile plan); ``search`` then serves arbitrarily many query
-    batches against it. ``mode="cascade"`` (default) is the exact 1-NN
-    lower-bound cascade — a fitted ``centroid_model`` only seeds its
-    thresholds. ``mode="centroid"`` serves the nearest *centroid* instead
-    (k DPs per query; ``search`` then returns centroid indices, and
-    ``labels`` maps them to class labels, so the streaming loop is
-    unchanged).
+    Construction runs ``core.engine.fit`` once (the expensive part:
+    support resolution, tile plan, corpus index); ``search`` then serves
+    arbitrarily many query batches against the fitted engine.
+    ``mode="cascade"`` (default) is the exact 1-NN lower-bound cascade —
+    a fitted ``centroid_model`` only seeds its thresholds.
+    ``mode="centroid"`` serves the nearest *centroid* instead (k DPs per
+    query; ``search`` then returns centroid indices, and ``labels`` maps
+    them to class labels, so the streaming loop is unchanged).
     """
 
     def __init__(self, corpus, labels=None, *, kind: str = "spdtw",
                  sp: Optional[SparsePaths] = None, impl: str = "auto",
                  seed_k: int = 2, prefix_frac: float = 0.5,
-                 centroid_model=None, mode: str = "cascade"):
+                 centroid_model=None, mode: str = "cascade",
+                 engine=None):
         assert mode in ("cascade", "centroid")
         if mode == "centroid":
             assert centroid_model is not None, \
                 "centroid mode needs a fitted cluster.CentroidModel"
-        corpus = jnp.asarray(corpus, jnp.float32)
-        self.measure = make_measure(kind, corpus.shape[1], sp=sp)
-        self.index = self.measure.build_index(corpus)
+        if engine is None:
+            engine = fit(MeasureSpec(family=kind), corpus, labels=labels,
+                         sp=sp)
+        if centroid_model is not None:
+            import dataclasses as _dc
+            engine = _dc.replace(engine, centroid_model=centroid_model)
+        self.engine = engine
+        self.index = engine.index
         self.mode = mode
-        self.centroid_model = centroid_model
+        self.centroid_model = engine.centroid_model
         if mode == "centroid":
             # unsupervised models (soft_kmeans) have labels=None: serve
             # centroid ids with label=None rather than crashing the loop
             self.labels = None if centroid_model.labels is None else \
                 np.asarray(centroid_model.labels)
         else:
-            self.labels = None if labels is None else np.asarray(labels)
+            self.labels = None if engine.labels is None else \
+                np.asarray(engine.labels)
         self.impl = impl
         self.seed_k = seed_k
         self.prefix_frac = prefix_frac
@@ -97,6 +105,12 @@ class SearchEngine:
         self._pairs_total = 0
         self._pairs_dp = 0
         self._queries = 0
+
+    @property
+    def measure(self):
+        """Legacy ``Measure`` view of the fitted engine (kept for
+        callers that assert against the dense cross-matrix path)."""
+        return self.engine.measure
 
     def search(self, queries) -> Tuple[np.ndarray, np.ndarray]:
         """(Nq, T) -> (nn_idx, nn_dist); prune stats accumulate on self.
@@ -113,13 +127,11 @@ class SearchEngine:
             self._pairs_total += n * self.index.size
             self._pairs_dp += n * self.centroid_model.k
             return np.asarray(idx), np.asarray(dist)
-        from repro.kernels import ops
-        nn, dist, st = ops.knn_cascade(
-            Q, self.index, impl=self.impl, seed_k=self.seed_k,
-            prefix_frac=self.prefix_frac, return_stats=True,
-            centroid_model=self.centroid_model)
+        nn, dist, st = self.engine.knn(
+            Q, impl=self.impl, seed_k=self.seed_k,
+            prefix_frac=self.prefix_frac, return_stats=True)
         for k in _STAT_KEYS:
-            self._stats_acc[k] += float(st[k]) * n
+            self._stats_acc[k] += float(st.get(k, 0.0)) * n
         self._queries += n
         self._pairs_total += n * self.index.size
         self._pairs_dp += int(st["dp_pairs"])

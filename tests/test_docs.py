@@ -16,10 +16,13 @@ ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 # modules whose public defs form the supported API surface
 API_MODULES = (
+    "repro.core.spec",
+    "repro.core.engine",
     "repro.core.measures",
     "repro.core.softdtw",
     "repro.core.occupancy",
     "repro.core.bounds",
+    "repro.kernels.backends",
     "repro.kernels.ops",
     "repro.kernels.soft_block",
     "repro.cluster.barycenter",
@@ -30,6 +33,73 @@ API_MODULES = (
     "repro.classify.crossval",
     "repro.launch.search",
 )
+
+# ---------------------------------------------------------------------------
+# Public-API snapshot (DESIGN.md §12 satellite): the frozen export list and
+# the engine's method signatures. A PR that changes the public surface must
+# change this snapshot consciously — silent drift fails CI.
+# ---------------------------------------------------------------------------
+
+EXPECTED_ALL = [
+    "ALL_MEASURES", "Backend", "BlockSparsePaths", "CentroidModel",
+    "CorpusIndex", "Measure", "MeasureSpec", "SimilarityEngine",
+    "SparsePaths", "available_backends", "band_mask", "block_sparsify",
+    "build_corpus_index", "centroid_error_series", "default_tile", "dtw",
+    "dtw_gram", "dtw_pairs", "dtw_sc", "engine_for", "fit",
+    "fit_class_centroids", "knn_cascade", "knn_error", "knn_error_series",
+    "learn_sparse_paths", "log_krdtw", "log_krdtw_gram", "log_krdtw_pairs",
+    "log_krdtw_sc", "log_sp_krdtw", "make_measure", "normalize_grid",
+    "optimal_path_mask", "pairwise", "pairwise_path_counts", "resolve",
+    "resolve_plan", "soft_alignment", "soft_alignment_pairs",
+    "soft_barycenter", "soft_dtw", "soft_kmeans", "soft_spdtw",
+    "soft_spdtw_batch", "soft_spdtw_gram", "soft_spdtw_gram_batch",
+    "soft_spdtw_pairs", "soft_wdtw", "spdtw", "spdtw_gram", "spdtw_pairs",
+    "spdtw_pairwise", "svm_error", "svm_gram_series", "wdtw",
+]
+
+# SimilarityEngine method -> exact parameter tuple (inspect.signature)
+ENGINE_SIGNATURES = {
+    "pairs": ("self", "x", "y", "impl"),
+    "gram": ("self", "A", "B", "impl", "block_a", "thresholds", "alive0"),
+    "gram_log": ("self", "A", "B", "impl", "block_a"),
+    "knn": ("self", "Q", "impl", "seed_k", "prefix_frac", "return_stats"),
+    "classify": ("self", "Q", "impl", "via"),
+    "soft_pairs": ("self", "x", "y"),
+    "soft_gram": ("self", "A", "B"),
+    "grad": ("self", "x", "y"),
+    "barycenter": ("self", "X", "sample_weights", "init", "steps", "lr"),
+    "fit_centroids": ("self", "n_per_class", "steps", "lr", "impl", "seed"),
+    "with_corpus": ("self", "corpus", "labels"),
+}
+
+
+def test_public_api_snapshot():
+    """``repro.__all__`` is frozen: additions/removals are deliberate."""
+    import repro
+    assert sorted(repro.__all__) == EXPECTED_ALL, (
+        "public export surface drifted; update EXPECTED_ALL consciously")
+    missing = [n for n in repro.__all__ if not hasattr(repro, n)]
+    assert not missing, f"__all__ names not importable: {missing}"
+
+
+def test_engine_method_signatures_snapshot():
+    """The SimilarityEngine method surface is frozen per DESIGN.md §12."""
+    from repro import SimilarityEngine
+    for name, params in ENGINE_SIGNATURES.items():
+        fn = getattr(SimilarityEngine, name)
+        got = tuple(inspect.signature(fn).parameters)
+        assert got == params, (
+            f"SimilarityEngine.{name} signature drifted: {got} != {params}")
+
+
+def test_fit_signature_snapshot():
+    """``fit`` is the one construction entry point; its surface is
+    frozen."""
+    from repro import fit as fit_fn
+    got = tuple(inspect.signature(fit_fn).parameters)
+    assert got == ("spec", "corpus", "labels", "sp", "weights", "bsp",
+                   "support_corpus", "n_support", "T", "centroids",
+                   "centroid_steps", "impl")
 
 
 def _has_doc(obj) -> bool:

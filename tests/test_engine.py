@@ -1,0 +1,243 @@
+"""Fitted-engine API tests (DESIGN.md §12).
+
+Covers the three layers of the redesign: the frozen ``MeasureSpec``,
+``fit(spec, corpus) -> SimilarityEngine`` (plan/index resolution happens
+once), and the backend registry in ``kernels.backends`` — plus the
+back-compat contract: the deprecated module-level wrappers emit a
+one-shot ``DeprecationWarning`` and stay bit-identical to the engine.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import learn_sparse_paths
+from repro.core.engine import SimilarityEngine, engine_for, fit
+from repro.core.spec import MeasureSpec
+from repro.kernels import backends as bk
+from repro.kernels import ops
+
+
+def _toy(T=48, n=12, seed=0):
+    rng = np.random.default_rng(seed)
+    base = np.sin(np.linspace(0, 3 * np.pi, T))
+    X = (base[None] + 0.3 * rng.normal(size=(n, T))).astype(np.float32)
+    sp = learn_sparse_paths(jnp.asarray(X), theta=1.0)
+    y = rng.integers(0, 3, n)
+    Q = rng.normal(size=(5, T)).astype(np.float32)
+    return X, y, sp, Q
+
+
+# --------------------------------------------------------------- MeasureSpec
+def test_spec_validation_and_freeze():
+    s = MeasureSpec("spdtw", theta=2.0)
+    assert s.is_sparse and not s.is_kernel
+    with pytest.raises(ValueError):
+        MeasureSpec("nope")
+    with pytest.raises(ValueError):
+        MeasureSpec("spdtw", support="dense")   # spdtw needs sparsity
+    with pytest.raises(ValueError):
+        MeasureSpec("spdtw", gamma=0.0)
+    with pytest.raises(Exception):
+        s.theta = 3.0                           # frozen
+    s2 = s.replace(theta=3.0)
+    assert s2.theta == 3.0 and s.theta == 2.0
+
+
+def test_spec_is_static_pytree():
+    """A MeasureSpec crosses jit boundaries as static metadata."""
+    s = MeasureSpec("spdtw")
+    leaves = jax.tree_util.tree_leaves(s)
+    assert leaves == []
+
+    @jax.jit
+    def f(spec, x):
+        assert isinstance(spec, MeasureSpec)   # concrete inside the trace
+        return x * (2.0 if spec.family == "spdtw" else 0.0)
+
+    assert float(f(s, jnp.float32(1.0))) == 2.0
+
+
+# ------------------------------------------------------------------ fitting
+def test_fit_resolves_once_and_is_frozen():
+    X, y, sp, Q = _toy()
+    eng = fit(MeasureSpec("spdtw"), X, labels=y, sp=sp)
+    assert isinstance(eng, SimilarityEngine)
+    assert eng.bsp is not None and eng.index is not None
+    assert eng.corpus_size == len(X)
+    with pytest.raises(Exception):
+        eng.T = 1                               # frozen record
+    # same grid -> same cached plan object (the fit-once thesis)
+    eng2 = fit(MeasureSpec("spdtw"), X, sp=sp)
+    assert eng2.bsp is eng.bsp
+
+
+def test_fit_learns_support_from_corpus():
+    X, y, _, _ = _toy()
+    eng = fit(MeasureSpec("spdtw", theta=1.0), X, n_support=10)
+    assert eng.sp is not None
+    assert eng.sp.n_cells < eng.T * eng.T      # actually sparsified
+
+
+def test_band_and_dense_support_sources():
+    X, y, _, Q = _toy()
+    eng_band = fit(MeasureSpec("spdtw", support="band", radius=6), X)
+    assert bool(eng_band.sp.support[0, -1]) is False
+    eng_dtw = fit(MeasureSpec("dtw"), X)
+    D = np.asarray(eng_dtw.gram(Q))
+    Dd = np.asarray(eng_dtw.gram(Q, impl="dense"))
+    np.testing.assert_allclose(D, Dd, rtol=1e-5, atol=1e-5)
+
+
+def test_engine_knn_exact_and_classify():
+    X, y, sp, Q = _toy()
+    eng = fit(MeasureSpec("spdtw"), X, labels=y, sp=sp)
+    nn, nnd = eng.knn(Q)
+    dense = np.asarray(eng.gram(Q, impl="dense"))
+    assert (np.asarray(nn) == dense.argmin(1)).all()
+    pred = eng.classify(Q)
+    assert (pred == np.asarray(y)[dense.argmin(1)]).all()
+
+
+def test_engine_kernel_family_gram_log():
+    X, y, sp, Q = _toy(T=32, n=8)
+    eng = fit(MeasureSpec("sp_krdtw", nu=0.5), X, sp=sp)
+    lg = np.asarray(eng.gram_log(Q))
+    assert lg.shape == (len(Q), len(X)) and np.isfinite(lg).all()
+    np.testing.assert_allclose(np.asarray(eng.gram(Q)), -lg, rtol=1e-6)
+
+
+def test_engine_grad_and_barycenter():
+    X, y, sp, Q = _toy(T=32, n=8)
+    eng = fit(MeasureSpec("spdtw", gamma=0.1), X, sp=sp)
+    val, gx = eng.grad(X[:4], X[4:8])
+    assert gx.shape == (4, 32) and np.isfinite(np.asarray(gx)).all()
+    # gradients never leave the learned support: perturbing along gx
+    # lowers the soft distance
+    x2 = jnp.asarray(X[:4]) - 0.1 * gx
+    assert float(eng.soft_pairs(x2, X[4:8]).sum()) < float(val.sum())
+    z, losses = eng.barycenter(X, steps=10)
+    assert float(losses[-1]) < float(losses[0])
+
+
+def test_engine_fit_centroids_seeds_cascade():
+    X, y, sp, Q = _toy()
+    eng = fit(MeasureSpec("spdtw", gamma=0.1), X, labels=y, sp=sp)
+    engc = eng.fit_centroids(1, steps=5)
+    assert engc.centroid_model is not None and engc is not eng
+    # exactness preserved: centroid seeding only tightens thresholds
+    nn0, _ = eng.knn(Q)
+    nn1, _ = engc.knn(Q)
+    assert (np.asarray(nn0) == np.asarray(nn1)).all()
+    pred = engc.classify(Q, via="centroid")
+    assert pred.shape == (len(Q),)
+
+
+# ----------------------------------------------------- deprecated wrappers
+def test_wrappers_bit_identical_to_engine():
+    X, y, sp, Q = _toy()
+    eng = fit(MeasureSpec("spdtw"), X, labels=y, sp=sp)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        G_wrap = np.asarray(ops.spdtw_gram(Q, X, sp=sp))
+        p_wrap = np.asarray(ops.spdtw_pairs(jnp.asarray(X[:5]),
+                                            jnp.asarray(X[5:10]), sp))
+        s_wrap = np.asarray(ops.soft_spdtw_gram(jnp.asarray(Q),
+                                                jnp.asarray(X),
+                                                weights=sp.weights,
+                                                gamma=0.1))
+        nn_wrap, d_wrap = ops.knn_cascade(jnp.asarray(Q), eng.index)
+    assert (G_wrap == np.asarray(eng.gram(Q))).all()
+    assert (p_wrap == np.asarray(eng.pairs(X[:5], X[5:10]))).all()
+    eng_g = fit(MeasureSpec("spdtw", gamma=0.1), X, sp=sp)
+    assert (s_wrap == np.asarray(eng_g.soft_gram(Q))).all()
+    nn_eng, d_eng = eng.knn(Q)
+    assert (np.asarray(nn_wrap) == np.asarray(nn_eng)).all()
+    assert (np.asarray(d_wrap) == np.asarray(d_eng)).all()
+
+
+def test_wrappers_warn_once():
+    X, y, sp, Q = _toy(T=16, n=6)
+    ops._WARNED.discard("dtw_gram")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        ops.dtw_gram(jnp.asarray(Q), jnp.asarray(X))
+        ops.dtw_gram(jnp.asarray(Q), jnp.asarray(X))
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)
+           and "dtw_gram" in str(w.message)]
+    assert len(dep) == 1, "DeprecationWarning must be one-shot"
+
+
+# ----------------------------------------------------------------- backends
+def test_backend_registry_capabilities():
+    names = bk.available_backends()
+    assert set(names) >= {"dense", "scan", "pallas"}
+    assert bk.get_backend("dense").supports(bk.TRACED_WEIGHTS)
+    assert not bk.get_backend("pallas").supports(bk.TRACED_WEIGHTS)
+    assert bk.get_backend("scan").supports(bk.MULTIVARIATE_GRAD)
+    with pytest.raises(ValueError):
+        bk.get_backend("cuda")
+    with pytest.raises(ValueError):
+        bk.resolve("nope")
+
+
+def test_backend_resolution_walks_fallbacks():
+    # off-TPU default is scan; legacy alias "ref" maps to scan
+    if not bk.on_tpu():
+        assert bk.resolve("auto").name == "scan"
+    assert bk.resolve("ref").name == "scan"
+    # a traced weight grid can only run dense, from any starting point
+    assert bk.resolve("pallas", require=(bk.TRACED_WEIGHTS,)).name == "dense"
+    assert bk.resolve("auto", require=(bk.TRACED_WEIGHTS,)).name == "dense"
+    # multivariate gradients never land on the pallas backward
+    assert bk.resolve("pallas",
+                      require=(bk.MULTIVARIATE_GRAD,)).name == "scan"
+    # unsatisfiable requirements raise instead of silently mis-routing
+    with pytest.raises(ValueError):
+        bk.resolve("dense", require=(bk.EARLY_ABANDON,))
+
+
+def test_traced_weights_route_to_dense_oracle():
+    """Regression (DESIGN.md §12 satellite): a weight grid traced under
+    jit still evaluates — through the dense oracle — and matches."""
+    X, y, sp, Q = _toy(T=32, n=8)
+    Qj, Xj = jnp.asarray(Q), jnp.asarray(X)
+
+    @jax.jit
+    def traced_gram(w):
+        return ops._spdtw_gram(Qj, Xj, weights=w)
+
+    G_traced = np.asarray(traced_gram(sp.weights))
+    G_dense = np.asarray(ops._spdtw_gram(Qj, Xj, sp=sp, impl="dense"))
+    np.testing.assert_array_equal(G_traced, G_dense)
+    # ... and the soft VJP: gradients flow through the dense backward
+    @jax.jit
+    def loss(w):
+        from repro.kernels.soft_block import soft_spdtw_batch
+        return jnp.sum(soft_spdtw_batch(Xj[:4], Xj[4:8], w, 0.1))
+
+    g = np.asarray(jax.grad(loss)(sp.weights))
+    assert g.shape == sp.weights.shape and np.isfinite(g).all()
+    assert (np.asarray(g)[~np.asarray(sp.support)] == 0).all()
+
+
+def test_plan_resolver_caches_on_bytes():
+    X, y, sp, _ = _toy(T=32, n=8)
+    p1 = bk.resolve_plan(weights=np.asarray(sp.weights))
+    p2 = bk.resolve_plan(weights=np.asarray(sp.weights).copy())
+    assert p1 is p2, "same grid bytes must hit the plan cache"
+    with pytest.raises(TypeError):
+        jax.jit(lambda w: bk.resolve_plan(weights=w))(sp.weights)
+
+
+def test_engine_for_shim():
+    X, y, sp, Q = _toy(T=32, n=8)
+    eng = engine_for("spdtw", weights=sp.weights)
+    G = np.asarray(eng.gram(Q, X))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        G_wrap = np.asarray(ops.spdtw_gram(jnp.asarray(Q), jnp.asarray(X),
+                                           weights=sp.weights))
+    assert (G == G_wrap).all()

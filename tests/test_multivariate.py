@@ -1,0 +1,193 @@
+"""Multivariate (T, d) support in the block-sparse engines (DESIGN.md §12).
+
+The core DPs always accepted (T, d); the tile-major channel layout
+(``kernels.backends.to_tile_major``) carries it through the block
+kernels. Parity contract: block-sparse scan and Pallas-interpret engines
+match the dense core DPs on random sparse supports for d in {2, 3, 8},
+ragged lengths included, and the d = 1 path stays bit-compatible with
+the historical univariate layout.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import learn_sparse_paths
+from repro.core.dtw import wdtw
+from repro.core.engine import fit
+from repro.core.softdtw import soft_wdtw
+from repro.core.spec import MeasureSpec
+from repro.kernels import backends as bk
+from repro.kernels.gram_block import gram_spdtw_scan, spdtw_paired_scan
+from repro.kernels.soft_block import (gram_soft_spdtw_scan,
+                                      soft_spdtw_batch)
+from repro.kernels.spdtw_block import spdtw_block
+from repro.kernels import gram_spdtw_block
+
+
+def _support(T, seed=0, theta=1.0):
+    """A learned sparse support over univariate prototypes (the support
+    is a property of the grid, not of the channel count)."""
+    rng = np.random.default_rng(seed)
+    base = np.sin(np.linspace(0, 3 * np.pi, T))
+    X = (base[None] + 0.3 * rng.normal(size=(10, T))).astype(np.float32)
+    return learn_sparse_paths(jnp.asarray(X), theta=theta)
+
+
+def _dense_gram(A, B, w):
+    f = jax.vmap(jax.vmap(lambda a, b: wdtw(a, b, w), in_axes=(None, 0)),
+                 in_axes=(0, None))
+    return np.asarray(f(jnp.asarray(A), jnp.asarray(B)))
+
+
+@pytest.mark.parametrize("d", [2, 3, 8])
+def test_gram_engines_match_dense_core(d):
+    T = 40
+    sp = _support(T, seed=d)
+    bsp = bk.resolve_plan(weights=np.asarray(sp.weights), tile=8)
+    rng = np.random.default_rng(d)
+    A = rng.normal(size=(5, T, d)).astype(np.float32)
+    B = rng.normal(size=(7, T, d)).astype(np.float32)
+    ref = _dense_gram(A, B, sp.weights)
+    scan = np.asarray(gram_spdtw_scan(jnp.asarray(A), jnp.asarray(B), bsp))
+    pall = np.asarray(gram_spdtw_block(jnp.asarray(A), jnp.asarray(B), bsp,
+                                       interpret=True))
+    np.testing.assert_allclose(scan, ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(pall, ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("d", [2, 3])
+def test_paired_engines_match_dense_core(d):
+    T = 40
+    sp = _support(T, seed=10 + d)
+    bsp = bk.resolve_plan(weights=np.asarray(sp.weights), tile=8)
+    rng = np.random.default_rng(20 + d)
+    x = rng.normal(size=(6, T, d)).astype(np.float32)
+    y = rng.normal(size=(6, T, d)).astype(np.float32)
+    ref = np.asarray(jax.vmap(lambda a, b: wdtw(a, b, sp.weights))(
+        jnp.asarray(x), jnp.asarray(y)))
+    scan = np.asarray(spdtw_paired_scan(jnp.asarray(x), jnp.asarray(y), bsp))
+    pall = np.asarray(spdtw_block(jnp.asarray(x), jnp.asarray(y), bsp,
+                                  interpret=True))
+    np.testing.assert_allclose(scan, ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(pall, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_ragged_length_multivariate():
+    """T_orig shorter than the padded plan edge: the result-tile capture
+    stays correct for multivariate tiles."""
+    T, d = 20, 3
+    sp = _support(T, seed=5)
+    # plan with tile 8 pads the 20-cell grid to 24: ragged final tile
+    bsp = bk.resolve_plan(weights=np.asarray(sp.weights), tile=8)
+    assert bsp.T > T
+    rng = np.random.default_rng(5)
+    A = rng.normal(size=(4, T, d)).astype(np.float32)
+    B = rng.normal(size=(3, T, d)).astype(np.float32)
+    ref = _dense_gram(A, B, sp.weights)
+    scan = np.asarray(gram_spdtw_scan(jnp.asarray(A), jnp.asarray(B), bsp,
+                                      T_orig=T))
+    pall = np.asarray(gram_spdtw_block(jnp.asarray(A), jnp.asarray(B), bsp,
+                                       T_orig=T, interpret=True))
+    np.testing.assert_allclose(scan, ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(pall, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_d1_bit_compatible_with_univariate_path():
+    """A (B, T, 1) batch must produce bit-identical results to the
+    historical (B, T) layout on every engine."""
+    T = 32
+    sp = _support(T, seed=7)
+    bsp = bk.resolve_plan(weights=np.asarray(sp.weights), tile=8)
+    rng = np.random.default_rng(7)
+    A = rng.normal(size=(4, T)).astype(np.float32)
+    B = rng.normal(size=(5, T)).astype(np.float32)
+    A3, B3 = A[..., None], B[..., None]
+    for f in (lambda X, Y: gram_spdtw_scan(jnp.asarray(X), jnp.asarray(Y),
+                                           bsp),
+              lambda X, Y: gram_spdtw_block(jnp.asarray(X), jnp.asarray(Y),
+                                            bsp, interpret=True),
+              lambda X, Y: gram_soft_spdtw_scan(jnp.asarray(X),
+                                                jnp.asarray(Y), bsp, 0.1)):
+        np.testing.assert_array_equal(np.asarray(f(A, B)),
+                                      np.asarray(f(A3, B3)))
+    np.testing.assert_array_equal(
+        np.asarray(spdtw_paired_scan(jnp.asarray(A), jnp.asarray(B[:4]),
+                                     bsp)),
+        np.asarray(spdtw_paired_scan(jnp.asarray(A3), jnp.asarray(B3[:4]),
+                                     bsp)))
+
+
+def test_tile_major_layout_roundtrip():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(3, 20, 4)).astype(np.float32)
+    tm = bk.to_tile_major(jnp.asarray(X), 8, 24)
+    assert tm.shape == (3, 24 // 8 * 4 * 8)
+    back = np.asarray(bk.from_tile_major(tm, 8, 4, 20, squeeze=False))
+    np.testing.assert_array_equal(back, X)
+    # univariate layout is the historical zero-pad, bit for bit
+    U = rng.normal(size=(3, 20)).astype(np.float32)
+    tm1 = np.asarray(bk.to_tile_major(jnp.asarray(U), 8, 24))
+    np.testing.assert_array_equal(tm1, np.pad(U, ((0, 0), (0, 4))))
+
+
+# --------------------------------------------------------- soft / gradients
+@pytest.mark.parametrize("d", [2, 3])
+def test_soft_gram_scan_matches_dense(d):
+    T = 32
+    sp = _support(T, seed=30 + d)
+    bsp = bk.resolve_plan(weights=np.asarray(sp.weights), tile=8)
+    rng = np.random.default_rng(30 + d)
+    A = rng.normal(size=(3, T, d)).astype(np.float32)
+    B = rng.normal(size=(4, T, d)).astype(np.float32)
+    f = jax.vmap(jax.vmap(lambda a, b: soft_wdtw(a, b, sp.weights, 0.1),
+                          in_axes=(None, 0)), in_axes=(0, None))
+    ref = np.asarray(f(jnp.asarray(A), jnp.asarray(B)))
+    scan = np.asarray(gram_soft_spdtw_scan(jnp.asarray(A), jnp.asarray(B),
+                                           bsp, 0.1))
+    np.testing.assert_allclose(scan, ref, rtol=2e-3, atol=2e-3)
+
+
+def test_multivariate_vjp_matches_dense_backward():
+    """Block-sparse reverse sweep vs the dense expected-alignment
+    backward on (T, d) pairs — the gradient path the barycenter uses."""
+    T, d = 24, 2
+    sp = _support(T, seed=9)
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(size=(3, T, d)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(3, T, d)).astype(np.float32))
+    w = jnp.asarray(sp.weights)
+
+    g_sparse = jax.grad(
+        lambda xx: jnp.sum(soft_spdtw_batch(xx, y, w, 0.1)))(x)
+    # dense oracle: vmapped core soft DP (weights traced -> dense path)
+    g_dense = jax.grad(lambda xx: jnp.sum(jax.vmap(
+        lambda a, b: soft_wdtw(a, b, w, 0.1))(xx, y)))(x)
+    np.testing.assert_allclose(np.asarray(g_sparse), np.asarray(g_dense),
+                               rtol=5e-2, atol=5e-3)
+
+
+def test_multivariate_end_to_end_knn_and_barycenter():
+    """Acceptance: a (T, d>=2) end-to-end knn + barycenter path on the
+    block-sparse engines."""
+    T, d = 32, 2
+    sp = _support(T, seed=11)
+    rng = np.random.default_rng(11)
+    # two clusters of multivariate series
+    base = np.stack([np.sin(np.linspace(0, 3 * np.pi, T)),
+                     np.cos(np.linspace(0, 2 * np.pi, T))], axis=-1)
+    X = np.concatenate([
+        base[None] + 0.2 * rng.normal(size=(8, T, d)),
+        -base[None] + 0.2 * rng.normal(size=(8, T, d))]).astype(np.float32)
+    y = np.repeat([0, 1], 8)
+    eng = fit(MeasureSpec("spdtw", gamma=0.1), X, labels=y, sp=sp)
+    assert eng.d == d and eng.index is None   # no univariate cascade
+    Q = (X[:4] + 0.05 * rng.normal(size=(4, T, d))).astype(np.float32)
+    nn, dist = eng.knn(Q)
+    dense = _dense_gram(Q, X, sp.weights)
+    assert (np.asarray(nn) == dense.argmin(1)).all()
+    assert (np.asarray(eng.classify(Q)) == y[dense.argmin(1)]).all()
+    # barycenter of class 0 descends and stays multivariate-shaped
+    z, losses = eng.barycenter(X[:8], steps=10)
+    assert z.shape == (T, d)
+    assert float(losses[-1]) < float(losses[0])
