@@ -51,6 +51,21 @@ SCHEMAS: Dict[str, Dict] = {
             ("workloads/*/speedup", lambda v: v > 0, "non-positive speedup"),
         ],
     },
+    "BENCH_sketch.json": {
+        "required": ["backend", "cascade", "curve", "best", "recall_at_1",
+                     "speedup", "covered_exact"],
+        "checks": [
+            ("covered_exact", lambda v: v is True,
+             "full-coverage sketch re-rank exactness flag must be true"),
+            ("recall_at_1", lambda v: v >= 0.95,
+             "headline sketch operating point below recall@1 = 0.95"),
+            ("speedup", lambda v: v >= 3.0,
+             "headline sketch operating point below 3x over the cascade"),
+            ("curve/*/recall_at_1", lambda v: 0.0 <= v <= 1.0,
+             "recall out of range"),
+            ("curve/*/speedup", lambda v: v > 0, "non-positive speedup"),
+        ],
+    },
     "BENCH_centroid.json": {
         "required": ["backend", "families", "max_acc_delta", "min_speedup"],
         "checks": [

@@ -147,7 +147,7 @@ def main(argv=None):
         with open(os.path.join(art, f"{name}.json"), "w") as f:
             json.dump(results[name], f, indent=1, default=str)
 
-    from . import search_cascade
+    from . import search_cascade, sketch_recall
     if smoke:
         # tiny shapes end to end: kernels, fused Gram, cascade, centroid;
         # the paper tables (minutes of meta-parameter search) are skipped
@@ -158,6 +158,8 @@ def main(argv=None):
                   lambda: gram_speedup.run(fast=True, smoke=True))
         run_bench("search_cascade",
                   lambda: search_cascade.run(fast=True, smoke=True))
+        run_bench("sketch_recall",
+                  lambda: sketch_recall.run(fast=True, smoke=True))
         run_bench("centroid_speedup",
                   lambda: centroid_speedup.run(fast=True, smoke=True))
         run_bench("softgrad_speedup",
@@ -171,6 +173,7 @@ def main(argv=None):
                        table6_speedup)
         run_bench("gram_speedup", lambda: gram_speedup.run(fast=fast))
         run_bench("search_cascade", lambda: search_cascade.run(fast=fast))
+        run_bench("sketch_recall", lambda: sketch_recall.run(fast=fast))
         run_bench("centroid_speedup", lambda: centroid_speedup.run(fast=fast))
         run_bench("softgrad_speedup", lambda: softgrad_speedup.run(fast=fast))
         run_bench("table6_speedup", lambda: table6_speedup.run(fast=fast))
@@ -213,6 +216,13 @@ def main(argv=None):
             print(f"search/{wl}/pre_dp_prune,"
                   f"{r['cascade_us_per_query']:.1f},"
                   f"{100*r['pre_dp_prune']:.0f}%")
+    if "sketch_recall" in results:
+        s = results["sketch_recall"]
+        b = s["best"]
+        print(f"sketch/cascade,{s['cascade']['us_per_query']:.1f},"
+              f"us_per_query")
+        print(f"sketch/best,{b['us_per_query']:.1f},"
+              f"{b['speedup']:.2f}x_recall{b['recall_at_1']:.2f}")
     if "centroid_speedup" in results:
         for fam, r in results["centroid_speedup"]["families"].items():
             print(f"centroid/{fam},{r['centroid_us_per_query']:.1f},"

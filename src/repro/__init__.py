@@ -40,6 +40,9 @@ from .core import (
     pairwise_path_counts, soft_alignment, soft_dtw, soft_spdtw, soft_wdtw,
     spdtw, spdtw_pairwise, wdtw,
 )
+from .core import (
+    SketchIndex, build_sketch_index, random_anchors, sketch_embed,
+)
 from .kernels import (
     Backend, available_backends, dtw_gram, dtw_pairs, knn_cascade,
     log_krdtw_gram, log_krdtw_pairs, resolve, resolve_plan,
@@ -53,7 +56,7 @@ from .cluster import (
 )
 from .classify import (
     centroid_error_series, knn_error, knn_error_series, svm_error,
-    svm_gram_series,
+    svm_gram_series, svm_rws_series,
 )
 
 __all__ = [
@@ -69,6 +72,8 @@ __all__ = [
     "optimal_path_mask", "pairwise", "pairwise_path_counts",
     "soft_alignment", "soft_dtw", "soft_spdtw", "soft_wdtw", "spdtw",
     "spdtw_pairwise", "wdtw",
+    # sketch tier: sub-linear retrieval (DESIGN.md §13)
+    "SketchIndex", "build_sketch_index", "random_anchors", "sketch_embed",
     # kernels: deprecated batched/Gram wrappers + cascade (use the engine)
     "dtw_gram", "dtw_pairs", "knn_cascade", "log_krdtw_gram",
     "log_krdtw_pairs", "soft_spdtw_gram", "soft_spdtw_pairs", "spdtw_gram",
@@ -80,5 +85,5 @@ __all__ = [
     "soft_kmeans",
     # classify: evaluation harness
     "centroid_error_series", "knn_error", "knn_error_series", "svm_error",
-    "svm_gram_series",
+    "svm_gram_series", "svm_rws_series",
 ]

@@ -2,6 +2,7 @@
 from .knn import (knn_error, knn_error_series, knn_predict, loo_error,
                   error_rate)
 from .centroid import centroid_error_series, nearest_centroid_predict
-from .svm import svm_error, svm_fit, svm_gram_series, svm_predict
+from .svm import (svm_error, svm_fit, svm_gram_series, svm_predict,
+                  svm_rws_series)
 from .crossval import (Selected, select_nu, select_radius,
                        select_theta_gamma, THETA_GRID, GAMMA_GRID, NU_GRID)

@@ -85,6 +85,41 @@ def svm_gram_series(X_train, X_test, *, kind: str = "sp_krdtw", sp=None,
             normalized_gram(lg_et, d_ee, d_tt))
 
 
+def svm_rws_series(X_train, X_test, *, sp=None, R: int = 32,
+                   seed: int = 0, theta: float = 1.0,
+                   bandwidth: float = None, impl: str = "auto"):
+    """Linear-SVM Gram blocks from Random Warping Series features — the
+    sketch tier's fast classification path (DESIGN.md §13).
+
+    Fits an SP-DTW engine with ``R`` sketch anchors (keyed off ``seed``
+    via the spec, so features are reproducible), embeds both splits as
+    their SP-DTW distances to the anchors on the learned support, and
+    maps distances to RWS features ``exp(-d / (2 b^2)) / sqrt(R)``
+    (``bandwidth`` defaults to the median train sketch distance). The
+    returned (K_train, K_test) are plain feature inner products — an
+    explicit finite-dimensional kernel, O(N R) instead of the O(N^2)
+    DP Gram of ``svm_gram_series`` — ready for ``svm_fit`` /
+    ``svm_predict``.
+    """
+    from repro.core.engine import fit as _fit
+    from repro.core.sketch import sketch_embed
+    from repro.core.spec import MeasureSpec
+    Xtr = jnp.asarray(X_train, jnp.float32)
+    Xte = jnp.asarray(X_test, jnp.float32)
+    spec = MeasureSpec("spdtw", theta=theta, seed=seed, sketch_r=R)
+    eng = _fit(spec, Xtr, sp=sp, impl=impl)
+    si = eng.index.sketch
+    D_tr = si.sketch                                      # (N_tr, R)
+    D_te = sketch_embed(Xte, si.anchors, bsp=eng.bsp,
+                        weights=eng.weights, impl=impl)   # (N_te, R)
+    if bandwidth is None:
+        bandwidth = float(jnp.sqrt(jnp.median(D_tr) + 1e-8))
+    phi = lambda D: jnp.exp(-D / (2.0 * bandwidth * bandwidth)) / \
+        jnp.sqrt(jnp.float32(si.R))
+    F_tr, F_te = phi(D_tr), phi(D_te)
+    return F_tr @ F_tr.T, F_te @ F_tr.T
+
+
 def svm_error(K_train, K_test, y_train, y_test, n_classes: int,
               C_grid=(0.1, 1.0, 10.0, 100.0), folds: int = 3,
               iters: int = 500, seed: int = 0) -> float:

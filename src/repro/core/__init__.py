@@ -11,6 +11,7 @@ Public API:
   make_measure, Measure, CorpusIndex, ALL_MEASURES  (measures.py)
   MeasureSpec                                       (spec.py)
   fit, SimilarityEngine, engine_for                 (engine.py)
+  SketchIndex, random_anchors, sketch_embed, ...    (sketch.py)
 """
 from .dtw import (INF, band_cells, band_mask, dtw, dtw_matrix, dtw_sc,
                   local_cost, minplus_scan, wdtw)
@@ -30,3 +31,5 @@ from .measures import (ALL_MEASURES, CorpusIndex, Measure,
                        build_corpus_index, make_measure, pairwise)
 from .spec import MeasureSpec
 from .engine import SimilarityEngine, engine_for, fit
+from .sketch import (SketchIndex, build_sketch_index, random_anchors,
+                     sketch_embed, sketch_knn, sketch_shortlist)

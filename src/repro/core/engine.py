@@ -192,18 +192,36 @@ class SimilarityEngine:
 
     # ---- retrieval / classification --------------------------------------
     def knn(self, Q, *, impl: str = "auto", seed_k: int = 2,
-            prefix_frac: float = 0.5, return_stats: bool = False):
-        """Exact 1-NN of each query against the fitted corpus.
+            prefix_frac: float = 0.5, return_stats: bool = False,
+            mode: str = "exact", top_c: Optional[int] = None,
+            approx: bool = False):
+        """1-NN of each query against the fitted corpus.
 
-        Univariate dissimilarity engines run the lower-bound cascade
-        (DESIGN.md §4; bit-identical to full-Gram argmin, centroid-seeded
-        when a centroid model was fit). Multivariate and kernel engines
-        run the exact Gram argmin on the block-sparse engines (no
-        admissible bounds there — same neighbours, no pruning).
+        ``mode="exact"`` (default): univariate dissimilarity engines run
+        the lower-bound cascade (DESIGN.md §4; bit-identical to
+        full-Gram argmin, centroid-seeded when a centroid model was
+        fit). Multivariate and kernel engines run the exact Gram argmin
+        on the block-sparse engines (no admissible bounds there — same
+        neighbours, no pruning).
+
+        ``mode="sketch"`` (DESIGN.md §13; needs a spec fit with
+        ``sketch_r > 0``): the Random Warping Series matmul shortlist of
+        the ``top_c`` sketch-nearest candidates, re-ranked with the
+        exact cascade machinery — bit-identical to exact mode whenever
+        the shortlist contains the true neighbour; ``top_c`` is the
+        recall dial and ``approx=True`` skips the re-rank entirely.
         Returns (nn_idx, nn_dist[, stats]).
         """
         from repro.kernels import ops
+        assert mode in ("exact", "sketch"), mode
         Q = jnp.asarray(Q, jnp.float32)
+        if mode == "sketch":
+            from .sketch import sketch_knn
+            assert self.index is not None and \
+                self.index.sketch is not None, \
+                "sketch mode needs a spec fit with sketch_r > 0"
+            return sketch_knn(Q, self.index, top_c=top_c, approx=approx,
+                              impl=impl, return_stats=return_stats)
         if self.index is not None and Q.ndim == 2:
             return ops._knn_cascade(Q, self.index, impl=impl, seed_k=seed_k,
                                     prefix_frac=prefix_frac,
@@ -287,18 +305,20 @@ class SimilarityEngine:
 
     def fit_centroids(self, n_per_class: int = 1, *, steps: int = 60,
                       lr: float = 0.05, impl: str = "auto",
-                      seed: int = 0) -> "SimilarityEngine":
+                      seed: Optional[int] = None) -> "SimilarityEngine":
         """Fit ``n_per_class`` soft-barycenter centroids per class label
         on the corpus and return a new engine carrying the model (the
         cascade auto-seeds from it; ``classify`` serves
-        nearest-centroid)."""
+        nearest-centroid). ``seed`` defaults to the spec's seed, so
+        stochastic fitting is reproducible from the spec alone."""
         assert self.corpus is not None and self.labels is not None, \
             "centroid fitting needs a corpus with labels"
         from repro.cluster import fit_class_centroids
         model = fit_class_centroids(
             self.corpus, self.labels, self._soft_weights(),
             float(self.spec.gamma), n_per_class=n_per_class, steps=steps,
-            lr=lr, impl=impl, seed=seed, bsp=self.bsp)
+            lr=lr, impl=impl,
+            seed=self.spec.seed if seed is None else seed, bsp=self.bsp)
         return dataclasses.replace(self, centroid_model=model)
 
     def with_corpus(self, corpus, labels=None) -> "SimilarityEngine":
@@ -399,6 +419,17 @@ def fit(spec: MeasureSpec, corpus=None, *, labels=None,
             sp = _weights_sp(w)
         iw = w if w is not None else np.ones((T, T), np.float32)
         index = build_corpus_index(corpus, iw, kind=spec.family, bsp=plan)
+        if spec.sketch_r > 0:
+            # sketch tier (DESIGN.md §13): anchors keyed off the spec's
+            # seed, corpus embedded through the same block engines
+            from .sketch import (ANCHOR_SALT, build_sketch_index,
+                                 random_anchors)
+            anchors = random_anchors(
+                jax.random.fold_in(spec.key(), ANCHOR_SALT),
+                spec.sketch_r, T, max_len=spec.sketch_len)
+            si = build_sketch_index(corpus, anchors, bsp=index.bsp,
+                                    weights=iw, impl=impl, seed=spec.seed)
+            index = dataclasses.replace(index, sketch=si)
     labels_np = None if labels is None else np.asarray(labels)
     engine = SimilarityEngine(
         spec=spec, T=T, d=d, sp=sp, weights=w, bsp=plan, corpus=corpus,

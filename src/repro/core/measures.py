@@ -110,6 +110,10 @@ class CorpusIndex:
                          cascade envelopes the *query* under these at
                          query time for the reverse Keogh bound.
       w00, wTT:          endpoint weights (LB_Kim).
+      sketch:            optional ``core.sketch.SketchIndex`` — the
+                         Random Warping Series tier (DESIGN.md §13);
+                         attached by ``fit`` when the spec asks for
+                         sketching (``sketch_r > 0``), None otherwise.
     """
     kind: str
     corpus: jnp.ndarray
@@ -125,6 +129,7 @@ class CorpusIndex:
     wmin_cols: np.ndarray
     w00: float
     wTT: float
+    sketch: Optional[object] = None
 
     @property
     def size(self) -> int:

@@ -1,0 +1,334 @@
+"""Random Warping Series sketch tier: sub-linear retrieval (DESIGN.md §13).
+
+Every serving path before this module was linear in corpus size: the
+lower-bound cascade (DESIGN.md §4) prunes ~70% of the *DPs* but still
+touches all N candidates per query. Following *Random Warping Series*
+(Wu et al., PAPERS.md), the distance of a series to a handful of short
+random warping anchors is itself a feature map whose geometry tracks the
+alignment measure — so retrieval can run as one matmul over sketches
+plus a constant number of exact DPs:
+
+  * ``random_anchors`` draws R anchors, deterministically keyed: each
+    anchor samples an *intrinsic* length D ~ U[min_len, max_len] (the
+    RWS "short series" — few degrees of freedom), a Gaussian random
+    walk of D points, and is then resampled to the corpus length T so
+    the learned (T, T) support grid applies unchanged;
+  * ``sketch_embed`` maps series to their (soft or hard) SP-DTW
+    distances to the anchors through the existing block-sparse Gram
+    engines — the learned support shapes the features;
+  * ``build_sketch_index`` stores the (N, R) corpus sketch (plus the
+    anchors and squared norms) as a ``SketchIndex``, carried on the
+    ``CorpusIndex`` built by ``SimilarityEngine.fit``;
+  * ``sketch_knn`` is the query path: embed the (B,) query batch the
+    same way (R DPs per query), score all N candidates with one
+    (B, R) x (R, N) matmul on the MXU, take the top-C shortlist, then
+    re-rank the survivors with the exact cascade machinery — one seed
+    DP per query, LB_Kim / support-windowed LB_Keogh bounds on the
+    gathered pairs, early-abandoning survivor DPs. Per-query cost is
+    O(R·N) multiply-adds + O(R + C) DPs instead of O(N) DPs.
+
+Exactness argument (the FastDTW critique, Wu & Keogh, PAPERS.md: an
+approximate tier must keep the exact fallback cheap and available): the
+re-rank threshold is the exact distance of the sketch-nearest candidate,
+all bounds are admissible, and within-DP abandoning is strict — so the
+returned neighbour is bit-identical to the exact cascade whenever the
+shortlist contains the true nearest neighbour (tested). ``top_c`` is the
+recall dial: C = N degenerates to an exact (if pointless) search, small
+C trades recall for speed on a measured curve
+(``benchmarks/sketch_recall.py`` -> BENCH_sketch.json). ``approx=True``
+skips the re-rank entirely and trusts the sketch order (still reporting
+the true SP-DTW distance of the one returned candidate).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dtw import INF
+
+# fold_in salt separating anchor generation from other spec-keyed draws
+ANCHOR_SALT = 0x5E7C
+
+
+# ---------------------------------------------------------------------------
+# Anchor generation (deterministically keyed)
+# ---------------------------------------------------------------------------
+
+def random_anchors(key, R: int, T: int, *, d: int = 1, min_len: int = 4,
+                   max_len: Optional[int] = None,
+                   sigma: float = 1.0) -> jnp.ndarray:
+    """Draw R random warping anchor series of length T from ``key``.
+
+    Per RWS, each anchor is a *short* random series: an intrinsic length
+    D ~ U[min_len, max_len] (default max_len = max(min_len + 1, T // 4)),
+    a Gaussian random walk of D steps scaled by ``sigma``, linearly
+    resampled to T points (so the learned (T, T) support grid applies)
+    and z-normalized like the corpus. Returns (R, T) f32, or (R, T, d)
+    when d > 1. Same key -> bit-identical anchors.
+    """
+    assert R > 0 and T > 1
+    if max_len is None:
+        max_len = max(min_len + 1, T // 4)
+    max_len = int(min(max_len, T))
+    min_len = int(min(min_len, max_len))
+    k_len, k_val = jax.random.split(key)
+    lens = jax.random.randint(k_len, (R,), min_len, max_len + 1)   # (R,)
+    steps = jax.random.normal(k_val, (R, max_len, d)) * sigma
+    walk = jnp.cumsum(steps, axis=1)                               # (R, L, d)
+    # resample walk[r, :lens[r]] to T points: positions in [0, D-1]
+    pos = jnp.linspace(0.0, 1.0, T)[None, :] * (lens[:, None] - 1)  # (R, T)
+    grid = jnp.arange(max_len, dtype=jnp.float32)
+
+    def _one(p_r, w_r):                       # (T,), (L, d) -> (T, d)
+        return jax.vmap(lambda col: jnp.interp(p_r, grid, col),
+                        in_axes=1, out_axes=1)(w_r)
+
+    A = jax.vmap(_one)(pos, walk)                                  # (R, T, d)
+    mu = A.mean(axis=1, keepdims=True)
+    sd = A.std(axis=1, keepdims=True)
+    A = ((A - mu) / (sd + 1e-8)).astype(jnp.float32)
+    return A[:, :, 0] if d == 1 else A
+
+
+# ---------------------------------------------------------------------------
+# Embedding through the block engines
+# ---------------------------------------------------------------------------
+
+def sketch_embed(X, anchors, *, sp=None, bsp=None, weights=None,
+                 gamma: Optional[float] = None, impl: str = "auto",
+                 block_a: int = 64) -> jnp.ndarray:
+    """(N, T[, d]) series -> (N, R) SP-DTW distances to the anchors.
+
+    Routed through the fused block-sparse Gram engines (dense | scan |
+    pallas, resolved by the ``ANCHOR_EMBED`` capability walk in
+    ``kernels.backends``), so the learned support shapes the features
+    exactly as it shapes serving distances. ``gamma`` switches to the
+    differentiable soft-SP-DTW embedding (same support, smoothed min).
+    """
+    from repro.kernels import backends as bk
+    from repro.kernels import ops
+    bk.resolve(impl, require=(bk.ANCHOR_EMBED,))
+    X = jnp.asarray(X, jnp.float32)
+    anchors = jnp.asarray(anchors, jnp.float32)
+    if gamma is not None:
+        return ops._soft_spdtw_gram(X, anchors, sp=sp, bsp=bsp,
+                                    weights=weights, gamma=float(gamma),
+                                    impl=impl, block_a=block_a)
+    return ops._spdtw_gram(X, anchors, sp=sp, bsp=bsp, weights=weights,
+                           impl=impl, block_a=block_a)
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchIndex:
+    """The (N, R) Random-Warping-Series sketch of a fitted corpus.
+
+    anchors:  (R, T[, d]) random warping anchor series (deterministic
+              from the spec's seed);
+    sketch:   (N, R) f32 corpus embedding — series n's SP-DTW distance
+              to each anchor, computed on the learned support;
+    sq:       (N,) precomputed squared norms ``||sketch_n||^2`` (the
+              candidate-side term of the shortlist score);
+    seed:     the integer seed the anchors were drawn from;
+    gamma:    soft-embedding temperature (None = hard SP-DTW).
+    """
+    anchors: jnp.ndarray
+    sketch: jnp.ndarray
+    sq: jnp.ndarray
+    seed: int = 0
+    gamma: Optional[float] = None
+
+    @property
+    def R(self) -> int:
+        """Number of anchors (the sketch width)."""
+        return int(self.anchors.shape[0])
+
+    @property
+    def size(self) -> int:
+        """Number of sketched corpus series."""
+        return int(self.sketch.shape[0])
+
+
+def build_sketch_index(corpus, anchors, *, sp=None, bsp=None, weights=None,
+                       gamma: Optional[float] = None, impl: str = "auto",
+                       seed: int = 0, block_a: int = 64) -> SketchIndex:
+    """Embed a corpus against ``anchors`` and freeze the result.
+
+    One (N, R) Gram through the block engines at fit time; queries then
+    pay R DPs each and everything else is matmul.
+    """
+    feats = sketch_embed(corpus, anchors, sp=sp, bsp=bsp, weights=weights,
+                         gamma=gamma, impl=impl, block_a=block_a)
+    feats = jnp.minimum(feats, jnp.float32(INF))
+    return SketchIndex(anchors=jnp.asarray(anchors, jnp.float32),
+                       sketch=feats,
+                       sq=jnp.sum(feats * feats, axis=1),
+                       seed=int(seed), gamma=gamma)
+
+
+# ---------------------------------------------------------------------------
+# Query path: matmul shortlist -> exact cascade re-rank
+# ---------------------------------------------------------------------------
+
+def sketch_shortlist(q_feats: jnp.ndarray, si: SketchIndex,
+                     top_c: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-C sketch-nearest candidates per query row.
+
+    Score is the squared Euclidean distance between sketch rows,
+    ``||q||^2 + ||s_n||^2 - 2 q.s_n``, with the per-row ``||q||^2``
+    constant dropped — the cross term is the one (B, R) x (R, N) matmul
+    the MXU runs. Returns (cand, score): (B, C) int32 candidate indices
+    sorted by ascending sketch distance, and their scores.
+    """
+    score = si.sq[None, :] - 2.0 * (q_feats @ si.sketch.T)       # (B, N)
+    top_c = int(min(top_c, si.size))
+    neg, cand = jax.lax.top_k(-score, top_c)
+    return cand.astype(jnp.int32), -neg
+
+
+def _keogh_gathered(A: jnp.ndarray, L: jnp.ndarray, U: jnp.ndarray,
+                    wmin) -> jnp.ndarray:
+    """Support-windowed LB_Keogh on gathered pairs.
+
+    A: (B, C, T) or (B, 1, T) series values; L, U envelopes broadcast
+    against A; wmin: (T,) admissible per-row weight floor. Returns
+    (B, C). Same admissibility argument as ``bounds._keogh_penalty``;
+    rows with empty support windows (wmin == +INF) force +INF.
+    """
+    wmin = jnp.asarray(wmin, jnp.float32)
+    above = jnp.maximum(A - U, 0.0)
+    below = jnp.maximum(L - A, 0.0)
+    pen = above * above + below * below                          # (B, C, T)
+    dead = wmin >= INF
+    term = jnp.where(dead[None, None, :], INF,
+                     jnp.where(dead, 0.0, wmin)[None, None, :] * pen)
+    return jnp.minimum(jnp.sum(term, axis=2), INF)
+
+
+def _now(sync_on) -> float:
+    jax.block_until_ready(sync_on)
+    return time.time()
+
+
+def sketch_knn(Q: jnp.ndarray, index, *, top_c: Optional[int] = None,
+               approx: bool = False, impl: str = "auto",
+               return_stats: bool = False):
+    """Sub-linear 1-NN: sketch shortlist -> exact cascade re-rank.
+
+    Q: (B, T); ``index`` is a ``CorpusIndex`` whose ``sketch`` slot
+    holds a fitted ``SketchIndex`` (``fit`` a spec with sketch_r > 0).
+    Stages:
+
+      1. embed the query batch against the anchors (R DPs per query,
+         batched through the block Gram engine);
+      2. score all N candidates with one matmul, keep the top-C;
+      3. (``approx=True`` stops here: return the sketch-nearest
+         candidate with its exact aligned-pair distance — one DP);
+      4. re-rank: exact DP on the sketch-nearest candidate seeds the
+         per-query threshold; LB_Kim + support-windowed LB_Keogh (both
+         orientations) prune the rest of the shortlist; survivors run
+         the early-abandoning aligned-pair block DP. Admissible bounds,
+         strict abandoning and first-corpus-index argmin make the
+         result bit-identical to the exact cascade whenever the
+         shortlist contains the true neighbour.
+
+    Returns (nn_idx, nn_dist[, stats]); with ``return_stats`` on
+    concrete inputs the stats carry per-stage wall-clock
+    (t_embed_s / t_shortlist_s / t_rerank_s).
+    """
+    from repro.kernels import backends as bk
+    from repro.kernels.ops import _pair_dp
+    si = index.sketch
+    assert si is not None, \
+        "no sketch on this index: fit a MeasureSpec with sketch_r > 0"
+    Q = jnp.asarray(Q, jnp.float32)
+    assert Q.ndim == 2, "the sketch tier is univariate (like the cascade)"
+    B = Q.shape[0]
+    N = si.size
+    C = index.corpus
+    eager = not (bk.is_traced(Q) or bk.is_traced(C))
+    timed = return_stats and eager
+    impl_r = bk.resolve(impl).name
+
+    t0 = time.time() if timed else 0.0
+    q_feats = sketch_embed(Q, si.anchors, bsp=index.bsp,
+                           weights=index.weights, gamma=si.gamma, impl=impl)
+    t1 = _now(q_feats) if timed else 0.0
+
+    top_c = int(min(N, max(1, top_c if top_c is not None
+                           else max(8, N // 16))))
+    cand, _ = sketch_shortlist(q_feats, si, top_c)               # (B, C)
+    t2 = _now(cand) if timed else 0.0
+
+    rows = jnp.arange(B)[:, None]
+    best = cand[:, 0]
+    d_best = _pair_dp(Q, jnp.take(C, best, axis=0), index, impl_r)  # (B,)
+
+    if approx:
+        if timed:
+            t3 = _now(d_best)
+        if not return_stats:
+            return best, d_best
+        stats = {"n_queries": B, "n_candidates": N, "shortlist_c": top_c,
+                 "mode": "approx", "dp_pairs": B,
+                 "pre_dp_prune": 1.0 - 1.0 / N,
+                 "shortlist_prune": 1.0 - top_c / N}
+        if timed:
+            stats.update(t_embed_s=t1 - t0, t_shortlist_s=t2 - t1,
+                         t_rerank_s=t3 - t2)
+        return best, d_best, stats
+
+    thr = d_best                                                 # (B,)
+    # ---- bounds on the gathered shortlist (mini-cascade, O(B*C*T)) ----
+    g = jnp.take(C, cand, axis=0)                                # (B, C, T)
+    lb = jnp.float32(index.w00) * (Q[:, None, 0] - g[:, :, 0]) ** 2 + \
+        jnp.float32(index.wTT) * (Q[:, None, -1] - g[:, :, -1]) ** 2
+    lb = jnp.maximum(lb, _keogh_gathered(
+        Q[:, None, :], index.env_lo[cand], index.env_hi[cand],
+        index.wmin_rows))
+    from . import bounds as _bounds
+    q_lo, q_hi = _bounds.envelopes(Q, index.lo_t, index.hi_t)    # (B, T)
+    lb = jnp.maximum(lb, _keogh_gathered(
+        g, q_lo[:, None, :], q_hi[:, None, :], index.wmin_cols))
+    alive = (lb <= thr[:, None]).at[:, 0].set(False)   # col 0 already exact
+
+    # ---- survivor DPs with early abandoning ----
+    d_short = jnp.full((B, top_c), INF, jnp.float32).at[:, 0].set(d_best)
+    if eager and impl_r == "scan":
+        qi, ci = np.nonzero(np.asarray(alive))
+        if len(qi):
+            d_surv = _pair_dp(jnp.take(Q, qi, axis=0),
+                              g[qi, ci], index, impl_r,
+                              thresholds=jnp.take(thr, qi))
+            d_short = d_short.at[qi, ci].set(d_surv)
+    else:
+        flat = _pair_dp(jnp.repeat(Q, top_c, axis=0),
+                        g.reshape(B * top_c, -1), index, impl_r,
+                        thresholds=jnp.repeat(thr, top_c)
+                        ).reshape(B, top_c)
+        d_short = jnp.where(alive, flat, d_short)
+
+    # scatter into corpus order: argmin keeps the first-corpus-index tie
+    # rule of the exact cascade
+    D = jnp.full((B, N), INF, jnp.float32).at[rows, cand].set(d_short)
+    nn = jnp.argmin(D, axis=1).astype(jnp.int32)
+    nnd = jnp.take_along_axis(D, nn[:, None], axis=1)[:, 0]
+    if not return_stats:
+        return nn, nnd
+    dp_pairs = int(alive.sum()) + B if eager else alive.sum() + B
+    stats = {
+        "n_queries": B, "n_candidates": N, "shortlist_c": top_c,
+        "mode": "sketch", "dp_pairs": dp_pairs,
+        "shortlist_prune": 1.0 - top_c / N,
+        "bound_prune": 1.0 - (dp_pairs / B - 1) / max(top_c - 1, 1)
+        if top_c > 1 else 0.0,
+        "pre_dp_prune": 1.0 - dp_pairs / (B * N),
+    }
+    if timed:
+        stats.update(t_embed_s=t1 - t0, t_shortlist_s=t2 - t1,
+                     t_rerank_s=_now(nnd) - t2)
+    return nn, nnd, stats

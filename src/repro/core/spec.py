@@ -51,6 +51,14 @@ class MeasureSpec:
     lags:         DACO lag count (baseline family only).
     tile:         block edge of the block-sparse plan (None = pick by
                   series length, ``occupancy.default_tile``).
+    seed:         the one PRNG seed of the spec — every stochastic
+                  fitting artifact (sketch anchors, centroid init, …)
+                  derives its key from ``self.key()``, so a fitted
+                  engine is reproducible from the spec alone.
+    sketch_r:     number of Random Warping Series sketch anchors
+                  (DESIGN.md §13); 0 disables the sketch tier.
+    sketch_len:   max intrinsic anchor length (None = T // 4 at fit
+                  time, per RWS "short series").
     """
     family: str = "spdtw"
     support: str = "learned"
@@ -61,6 +69,9 @@ class MeasureSpec:
     radius: int = 10
     lags: int = 10
     tile: Optional[int] = None
+    seed: int = 0
+    sketch_r: int = 0
+    sketch_len: Optional[int] = None
 
     def __post_init__(self):
         if self.family not in FAMILIES:
@@ -78,6 +89,11 @@ class MeasureSpec:
         if self.gamma <= 0:
             raise ValueError("gamma must be positive (soft-min "
                              "temperature)")
+        if self.sketch_r < 0:
+            raise ValueError("sketch_r must be >= 0 (anchor count)")
+        if self.sketch_len is not None and self.sketch_len < 2:
+            raise ValueError("sketch_len must be >= 2 (anchors need "
+                             "at least two points)")
 
     # ---- derived properties ----------------------------------------------
     @property
@@ -95,6 +111,13 @@ class MeasureSpec:
         """True when fitting must produce a (T, T) weight grid (every
         family the block-sparse plan layer covers)."""
         return self.family in GRAM_FAMILIES or self.family == "dtw_sc"
+
+    def key(self):
+        """The spec's root ``jax.random`` key (from ``seed``). Consumers
+        must ``fold_in`` a per-purpose salt rather than split ad hoc, so
+        independent stochastic artifacts stay independent *and*
+        reproducible from the spec alone."""
+        return jax.random.PRNGKey(self.seed)
 
     def replace(self, **changes) -> "MeasureSpec":
         """Functional update (specs are frozen)."""

@@ -55,9 +55,12 @@ MULTIVARIATE = "multivariate"          # accepts (T, d>1) series, forward
 MULTIVARIATE_GRAD = "multivariate-grad"  # ... and on the backward pass
 EARLY_ABANDON = "early-abandon"        # honours thresholds/alive0 pruning
 TRACED_WEIGHTS = "traced-weights"      # weight grid may be a jax Tracer
+ANCHOR_EMBED = "anchor-embed"          # batched series-vs-anchor Gram
+#                                        (the sketch tier's embedding,
+#                                        DESIGN.md §13)
 
 CAPABILITIES = (DIFFERENTIABLE, MULTIVARIATE, MULTIVARIATE_GRAD,
-                EARLY_ABANDON, TRACED_WEIGHTS)
+                EARLY_ABANDON, TRACED_WEIGHTS, ANCHOR_EMBED)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,20 +109,21 @@ def available_backends() -> Tuple[str, ...]:
 register_backend(Backend(
     name="dense",
     caps=frozenset({DIFFERENTIABLE, MULTIVARIATE, MULTIVARIATE_GRAD,
-                    TRACED_WEIGHTS}),
+                    TRACED_WEIGHTS, ANCHOR_EMBED}),
     fallback=None,
     description="chunked nested-vmap over the core DPs; fully traceable "
                 "(the only path for traced weight grids) and the oracle"))
 register_backend(Backend(
     name="scan",
     caps=frozenset({DIFFERENTIABLE, MULTIVARIATE, MULTIVARIATE_GRAD,
-                    EARLY_ABANDON}),
+                    EARLY_ABANDON, ANCHOR_EMBED}),
     fallback="dense",
     description="lax.scan over the active-tile schedule; CPU/GPU "
                 "production path, work scales with surviving tiles"))
 register_backend(Backend(
     name="pallas",
-    caps=frozenset({DIFFERENTIABLE, MULTIVARIATE, EARLY_ABANDON}),
+    caps=frozenset({DIFFERENTIABLE, MULTIVARIATE, EARLY_ABANDON,
+                    ANCHOR_EMBED}),
     fallback="scan",
     description="fused Pallas kernels (compiled on TPU, interpret "
                 "elsewhere); the soft backward kernel is univariate, so "

@@ -40,6 +40,14 @@ from repro.core.engine import MeasureSpec, fit
 
 _STAT_KEYS = ("stage1_prune", "stage2_prune", "stage3_prune",
               "pre_dp_prune", "dp_abandoned")
+_SKETCH_STAT_KEYS = ("shortlist_prune", "bound_prune", "pre_dp_prune")
+_PCTS = (50, 95, 99)
+
+
+def _percentiles(samples: Sequence[float]) -> Dict[str, float]:
+    """p50/p95/p99 of a latency sample list, in milliseconds."""
+    a = np.asarray(samples, np.float64) * 1e3
+    return {f"p{p}": float(np.percentile(a, p)) for p in _PCTS}
 
 
 @dataclasses.dataclass
@@ -69,20 +77,32 @@ class SearchEngine:
     ``mode="centroid"`` serves the nearest *centroid* instead (k DPs per
     query; ``search`` then returns centroid indices, and ``labels`` maps
     them to class labels, so the streaming loop is unchanged).
+    ``mode="sketch"`` serves through the Random Warping Series tier
+    (DESIGN.md §13): matmul shortlist of ``top_c`` candidates, exact
+    cascade re-rank (skipped entirely with ``approx=True``) — sub-linear
+    DP cost, exact whenever the shortlist covers the true neighbour.
+    Every mode records per-batch, per-stage wall-clock; ``stats()``
+    reports p50/p95/p99.
     """
 
     def __init__(self, corpus, labels=None, *, kind: str = "spdtw",
                  sp: Optional[SparsePaths] = None, impl: str = "auto",
                  seed_k: int = 2, prefix_frac: float = 0.5,
                  centroid_model=None, mode: str = "cascade",
-                 engine=None):
-        assert mode in ("cascade", "centroid")
+                 engine=None, sketch_r: int = 16, top_c: int = 32,
+                 approx: bool = False, seed: int = 0):
+        assert mode in ("cascade", "centroid", "sketch")
         if mode == "centroid":
             assert centroid_model is not None, \
                 "centroid mode needs a fitted cluster.CentroidModel"
         if engine is None:
-            engine = fit(MeasureSpec(family=kind), corpus, labels=labels,
-                         sp=sp)
+            spec = MeasureSpec(family=kind, seed=seed,
+                               sketch_r=sketch_r if mode == "sketch" else 0)
+            engine = fit(spec, corpus, labels=labels, sp=sp, impl=impl)
+        if mode == "sketch":
+            assert engine.index is not None and \
+                engine.index.sketch is not None, \
+                "sketch mode needs an engine fit with sketch_r > 0"
         if centroid_model is not None:
             import dataclasses as _dc
             engine = _dc.replace(engine, centroid_model=centroid_model)
@@ -101,10 +121,17 @@ class SearchEngine:
         self.impl = impl
         self.seed_k = seed_k
         self.prefix_frac = prefix_frac
-        self._stats_acc: Dict[str, float] = {k: 0.0 for k in _STAT_KEYS}
+        self.top_c = top_c
+        self.approx = approx
+        keys = _SKETCH_STAT_KEYS if mode == "sketch" else _STAT_KEYS
+        self._stats_acc: Dict[str, float] = {k: 0.0 for k in keys}
+        self._lat: Dict[str, List[float]] = {}
         self._pairs_total = 0
         self._pairs_dp = 0
         self._queries = 0
+
+    def _record_lat(self, stage: str, seconds: float) -> None:
+        self._lat.setdefault(stage, []).append(seconds)
 
     @property
     def measure(self):
@@ -119,28 +146,44 @@ class SearchEngine:
         query, counted as such in the pair stats)."""
         Q = jnp.asarray(queries, jnp.float32)
         n = Q.shape[0]
+        t0 = time.time()
         if self.mode == "centroid":
             from repro.cluster import nearest_centroid
             idx, dist = nearest_centroid(Q, self.centroid_model,
                                          impl=self.impl)
+            idx, dist = np.asarray(idx), np.asarray(dist)
+            self._record_lat("total", time.time() - t0)
             self._queries += n
             self._pairs_total += n * self.index.size
             self._pairs_dp += n * self.centroid_model.k
-            return np.asarray(idx), np.asarray(dist)
-        nn, dist, st = self.engine.knn(
-            Q, impl=self.impl, seed_k=self.seed_k,
-            prefix_frac=self.prefix_frac, return_stats=True)
-        for k in _STAT_KEYS:
+            return idx, dist
+        if self.mode == "sketch":
+            nn, dist, st = self.engine.knn(
+                Q, impl=self.impl, mode="sketch", top_c=self.top_c,
+                approx=self.approx, return_stats=True)
+        else:
+            nn, dist, st = self.engine.knn(
+                Q, impl=self.impl, seed_k=self.seed_k,
+                prefix_frac=self.prefix_frac, return_stats=True)
+        nn, dist = np.asarray(nn), np.asarray(dist)
+        self._record_lat("total", time.time() - t0)
+        for stage in ("embed", "shortlist", "rerank"):
+            if f"t_{stage}_s" in st:
+                self._record_lat(stage, float(st[f"t_{stage}_s"]))
+        for k in self._stats_acc:
             self._stats_acc[k] += float(st.get(k, 0.0)) * n
         self._queries += n
         self._pairs_total += n * self.index.size
         self._pairs_dp += int(st["dp_pairs"])
-        return np.asarray(nn), np.asarray(dist)
+        return nn, dist
 
     def stats(self) -> Dict[str, float]:
         """Aggregated per-stage prune rates over everything served (the
-        stage keys only exist in cascade mode — centroid serving runs no
-        bounds, and all-zero prune rates would read as a broken cascade)."""
+        stage keys only exist in cascade / sketch mode — centroid serving
+        runs no bounds, and all-zero prune rates would read as a broken
+        cascade), plus per-stage p50/p95/p99 batch latency under
+        ``latency_ms`` (sketch mode breaks out embed / shortlist /
+        re-rank; every mode records the total)."""
         if self._queries == 0:
             return {}
         out = {} if self.mode == "centroid" else \
@@ -150,6 +193,8 @@ class SearchEngine:
         out["pairs_dp"] = self._pairs_dp
         out["pre_dp_prune_overall"] = 1.0 - self._pairs_dp / max(
             self._pairs_total, 1)
+        out["latency_ms"] = {stage: _percentiles(v)
+                             for stage, v in self._lat.items()}
         return out
 
 
@@ -228,11 +273,16 @@ def run(dataset: str = "CBF", workload: str = "retrieval",
         n_sp_train: int = 32, impl: str = "auto", seed: int = 0,
         arrivals_per_step: Optional[int] = None, check: bool = False,
         n_train: int = 128, centroids: int = 0, gamma: float = 0.1,
-        fit_steps: int = 60, T: Optional[int] = None) -> dict:
+        fit_steps: int = 60, T: Optional[int] = None, sketch_r: int = 0,
+        top_c: int = 32, approx: bool = False) -> dict:
     """Build an engine over a synthetic-UCR corpus and stream a query
-    workload through it; returns throughput / prune-rate / accuracy
-    metrics (with ``check``, exactness vs the dense path is asserted —
-    see the CLI flags in ``main``)."""
+    workload through it; returns throughput / prune-rate / accuracy /
+    latency-percentile metrics. ``sketch_r > 0`` serves through the
+    sketch tier (DESIGN.md §13) with a ``top_c`` shortlist (``approx``
+    skips the re-rank). With ``check``, exactness vs the dense path is
+    asserted — in sketch mode that is covered-exactness: a full-coverage
+    (top_c = corpus) pass must be bit-identical, and the served pass
+    reports its measured recall instead. See the CLI flags in ``main``."""
     from repro.data import load
     kw = {} if T is None else {"T": T}
     ds = load(dataset, n_train=n_train, **kw)
@@ -248,9 +298,11 @@ def run(dataset: str = "CBF", workload: str = "retrieval",
                                     impl=impl)
         jax.block_until_ready(model.centroids)
         fit_s = time.time() - t0
+    mode = "sketch" if sketch_r > 0 else \
+        ("centroid" if centroids > 0 else "cascade")
     engine = SearchEngine(Xtr, ds.y_train, sp=sp, impl=impl,
-                          centroid_model=model,
-                          mode="centroid" if centroids > 0 else "cascade")
+                          centroid_model=model, mode=mode, seed=seed,
+                          sketch_r=sketch_r, top_c=top_c, approx=approx)
     queries, truth = _make_workload(ds, workload, n_queries, seed,
                                     with_labels=True)
 
@@ -278,7 +330,20 @@ def run(dataset: str = "CBF", workload: str = "retrieval",
         out["accuracy"] = float(np.mean(pred == truth))
     if check:
         nn_got = np.array([r.nn for r in results])
-        if engine.mode == "centroid":
+        if engine.mode == "sketch":
+            dense = np.asarray(engine.measure.cross(
+                jnp.asarray(queries), Xtr, block=64))
+            nn_true = dense.argmin(1)
+            out["recall_at_1"] = float(np.mean(nn_got == nn_true))
+            # covered-exactness: with the shortlist covering the whole
+            # corpus the sketch path must be bit-identical to argmin
+            nn_full, _ = engine.engine.knn(jnp.asarray(queries),
+                                           impl=engine.impl, mode="sketch",
+                                           top_c=engine.index.size)
+            out["exact_match"] = bool((np.asarray(nn_full) == nn_true).all())
+            assert out["exact_match"], \
+                "full-coverage sketch re-rank diverged from full-Gram 1-NN"
+        elif engine.mode == "centroid":
             # nearest-centroid is exact over the *centroid* set (same
             # impl as the engine: float ordering differs across engines)
             Dc = np.asarray(model.distances(jnp.asarray(queries),
@@ -316,12 +381,26 @@ def main():
                          "class (0 = exact cascade)")
     ap.add_argument("--gamma", type=float, default=0.1,
                     help="soft-SP-DTW temperature for centroid fitting")
+    ap.add_argument("--sketch", type=int, default=0, dest="sketch_r",
+                    help="serve through the RWS sketch tier with R "
+                         "anchors (0 = exact cascade; DESIGN.md §13)")
+    ap.add_argument("--top-c", type=int, default=32,
+                    help="sketch shortlist size (the recall dial)")
+    ap.add_argument("--approx", action="store_true",
+                    help="skip the sketch re-rank (fastest, recall-bound)")
     args = ap.parse_args()
     out = run(args.dataset, args.workload, args.queries, args.batch,
               theta=args.theta, impl=args.impl,
               arrivals_per_step=args.arrivals, check=args.check,
-              centroids=args.centroids, gamma=args.gamma)
+              centroids=args.centroids, gamma=args.gamma,
+              sketch_r=args.sketch_r, top_c=args.top_c, approx=args.approx)
     print(json.dumps(out, indent=1, default=float))
+    lat = out["stats"].get("latency_ms", {})
+    for stage in ("embed", "shortlist", "rerank", "total"):
+        if stage in lat:
+            p = lat[stage]
+            print(f"latency[{stage:9s}] p50={p['p50']:8.2f}ms "
+                  f"p95={p['p95']:8.2f}ms p99={p['p99']:8.2f}ms")
 
 
 if __name__ == "__main__":

@@ -17,7 +17,7 @@ def test_committed_artifacts_clean():
     names = {os.path.basename(p) for p in paths}
     # the headline artifacts must exist, not just validate when present
     assert {"BENCH_gram.json", "BENCH_search.json",
-            "BENCH_centroid.json"} <= names
+            "BENCH_centroid.json", "BENCH_sketch.json"} <= names
     for p in paths:
         assert ca.check_file(p) == [], p
     assert ca.main(["--root", ROOT]) == 0
@@ -52,6 +52,17 @@ def test_gate_rejects_schema_violations(tmp_path):
         "families": {"CBF": {"cascade_exact": True}}}))
     errs3 = ca.check_file(str(f3))
     assert any("accuracy gap" in e for e in errs3)
+    # sketch headline below the recall/speedup contract
+    f4 = tmp_path / "BENCH_sketch.json"
+    f4.write_text(json.dumps({
+        "backend": "cpu", "cascade": {"us_per_query": 100.0},
+        "curve": [{"recall_at_1": 0.5, "speedup": 9.0}],
+        "best": {}, "recall_at_1": 0.5, "speedup": 2.0,
+        "covered_exact": False}))
+    errs4 = ca.check_file(str(f4))
+    assert any("recall@1" in e for e in errs4)
+    assert any("3x over the cascade" in e for e in errs4)
+    assert any("exactness flag" in e for e in errs4)
 
 
 def test_gate_rejects_unreadable_json(tmp_path):

@@ -19,6 +19,7 @@ API_MODULES = (
     "repro.core.spec",
     "repro.core.engine",
     "repro.core.measures",
+    "repro.core.sketch",
     "repro.core.softdtw",
     "repro.core.occupancy",
     "repro.core.bounds",
@@ -43,18 +44,21 @@ API_MODULES = (
 EXPECTED_ALL = [
     "ALL_MEASURES", "Backend", "BlockSparsePaths", "CentroidModel",
     "CorpusIndex", "Measure", "MeasureSpec", "SimilarityEngine",
-    "SparsePaths", "available_backends", "band_mask", "block_sparsify",
-    "build_corpus_index", "centroid_error_series", "default_tile", "dtw",
-    "dtw_gram", "dtw_pairs", "dtw_sc", "engine_for", "fit",
-    "fit_class_centroids", "knn_cascade", "knn_error", "knn_error_series",
-    "learn_sparse_paths", "log_krdtw", "log_krdtw_gram", "log_krdtw_pairs",
-    "log_krdtw_sc", "log_sp_krdtw", "make_measure", "normalize_grid",
-    "optimal_path_mask", "pairwise", "pairwise_path_counts", "resolve",
-    "resolve_plan", "soft_alignment", "soft_alignment_pairs",
+    "SketchIndex", "SparsePaths", "available_backends", "band_mask",
+    "block_sparsify",
+    "build_corpus_index", "build_sketch_index", "centroid_error_series",
+    "default_tile", "dtw", "dtw_gram", "dtw_pairs", "dtw_sc", "engine_for",
+    "fit", "fit_class_centroids", "knn_cascade", "knn_error",
+    "knn_error_series", "learn_sparse_paths", "log_krdtw", "log_krdtw_gram",
+    "log_krdtw_pairs", "log_krdtw_sc", "log_sp_krdtw", "make_measure",
+    "normalize_grid", "optimal_path_mask", "pairwise",
+    "pairwise_path_counts", "random_anchors", "resolve", "resolve_plan",
+    "sketch_embed", "soft_alignment", "soft_alignment_pairs",
     "soft_barycenter", "soft_dtw", "soft_kmeans", "soft_spdtw",
     "soft_spdtw_batch", "soft_spdtw_gram", "soft_spdtw_gram_batch",
     "soft_spdtw_pairs", "soft_wdtw", "spdtw", "spdtw_gram", "spdtw_pairs",
-    "spdtw_pairwise", "svm_error", "svm_gram_series", "wdtw",
+    "spdtw_pairwise", "svm_error", "svm_gram_series", "svm_rws_series",
+    "wdtw",
 ]
 
 # SimilarityEngine method -> exact parameter tuple (inspect.signature)
@@ -62,7 +66,8 @@ ENGINE_SIGNATURES = {
     "pairs": ("self", "x", "y", "impl"),
     "gram": ("self", "A", "B", "impl", "block_a", "thresholds", "alive0"),
     "gram_log": ("self", "A", "B", "impl", "block_a"),
-    "knn": ("self", "Q", "impl", "seed_k", "prefix_frac", "return_stats"),
+    "knn": ("self", "Q", "impl", "seed_k", "prefix_frac", "return_stats",
+            "mode", "top_c", "approx"),
     "classify": ("self", "Q", "impl", "via"),
     "soft_pairs": ("self", "x", "y"),
     "soft_gram": ("self", "A", "B"),

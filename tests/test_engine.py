@@ -241,3 +241,30 @@ def test_engine_for_shim():
         G_wrap = np.asarray(ops.spdtw_gram(jnp.asarray(Q), jnp.asarray(X),
                                            weights=sp.weights))
     assert (G == G_wrap).all()
+
+
+def test_with_corpus_rebuilds_index_and_sketch():
+    """``with_corpus`` must re-index on the new candidate set: knn
+    answers follow the mutated corpus (same support/plan reused), and a
+    sketch tier is rebuilt against it with the same spec-seeded
+    anchors."""
+    X, y, sp, Q = _toy()
+    eng = fit(MeasureSpec("spdtw", sketch_r=6), X, labels=y, sp=sp)
+    nn0, d0 = eng.knn(Q)
+    # mutate the corpus: drop the current neighbours' rows entirely
+    keep = np.setdiff1d(np.arange(len(X)), np.unique(np.asarray(nn0)))
+    assert len(keep) < len(X)
+    eng2 = eng.with_corpus(np.asarray(X)[keep], labels=np.asarray(y)[keep])
+    assert eng2.bsp is eng.bsp and eng2.sp is eng.sp    # plan reused
+    assert eng2.corpus_size == len(keep)
+    nn2, d2 = eng2.knn(Q)
+    dense2 = np.asarray(eng2.gram(Q, impl="dense"))
+    assert (np.asarray(nn2) == dense2.argmin(1)).all()
+    assert (np.asarray(d2) >= np.asarray(d0) - 1e-6).all()
+    # the sketch rides along: same anchors (spec seed), new embeddings
+    s1, s2 = eng.index.sketch, eng2.index.sketch
+    assert s2 is not None and s2.sketch.shape == (len(keep), 6)
+    assert np.array_equal(np.asarray(s1.anchors), np.asarray(s2.anchors))
+    nn_s, d_s = eng2.knn(Q, mode="sketch", top_c=len(keep))
+    assert np.array_equal(np.asarray(nn_s), np.asarray(nn2))
+    assert np.array_equal(np.asarray(d_s), np.asarray(d2))

@@ -1,0 +1,231 @@
+"""Sketch tier (DESIGN.md §13): anchors, embedding, shortlist, exactness.
+
+Acceptance contract (ISSUE 6): ``mode="sketch"`` 1-NN must be
+bit-identical to the exact cascade whenever the shortlist contains the
+true neighbour — asserted both at full coverage (top_c = corpus) and
+per-query on small shortlists. Anchors and sketches must be
+reproducible from the spec's seed alone.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import learn_sparse_paths
+from repro.core.engine import fit
+from repro.core.sketch import (SketchIndex, build_sketch_index,
+                               random_anchors, sketch_embed,
+                               sketch_shortlist)
+from repro.core.spec import MeasureSpec
+
+
+def _toy(T=48, n=24, seed=0, nq=6):
+    rng = np.random.default_rng(seed)
+    base = np.sin(np.linspace(0, 3 * np.pi, T))
+    X = (base[None] + 0.3 * rng.normal(size=(n, T))).astype(np.float32)
+    sp = learn_sparse_paths(jnp.asarray(X), theta=1.0)
+    # retrieval-style queries: jittered corpus entries (close neighbours)
+    src = rng.integers(0, n, nq)
+    Q = X[src] + 0.05 * rng.normal(size=(nq, T)).astype(np.float32)
+    return X, sp, Q.astype(np.float32)
+
+
+# ------------------------------------------------------------------ anchors
+def test_random_anchors_deterministic_and_normalized():
+    k = jax.random.PRNGKey(7)
+    A1 = random_anchors(k, 6, 32)
+    A2 = random_anchors(k, 6, 32)
+    assert A1.shape == (6, 32)
+    assert np.array_equal(np.asarray(A1), np.asarray(A2))
+    A3 = random_anchors(jax.random.PRNGKey(8), 6, 32)
+    assert not np.array_equal(np.asarray(A1), np.asarray(A3))
+    # z-normalized over time
+    np.testing.assert_allclose(np.asarray(A1).mean(axis=1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(A1).std(axis=1), 1.0, atol=1e-3)
+
+
+def test_random_anchors_multivariate():
+    A = random_anchors(jax.random.PRNGKey(0), 4, 24, d=3)
+    assert A.shape == (4, 24, 3)
+    assert np.isfinite(np.asarray(A)).all()
+
+
+# ---------------------------------------------------------------- embedding
+def test_sketch_embed_matches_gram_engine():
+    """The embedding IS the block-sparse Gram against the anchor set."""
+    X, sp, _ = _toy()
+    anchors = random_anchors(jax.random.PRNGKey(0), 5, X.shape[1])
+    eng = fit(MeasureSpec("spdtw"), X, sp=sp)
+    F = sketch_embed(X, anchors, bsp=eng.bsp, weights=eng.weights)
+    G = np.asarray(eng.gram(X, anchors))
+    assert np.array_equal(np.asarray(F), G)
+
+
+def test_fit_attaches_reproducible_sketch():
+    X, sp, _ = _toy()
+    spec = MeasureSpec("spdtw", sketch_r=6, seed=11)
+    e1 = fit(spec, X, sp=sp)
+    e2 = fit(spec, X, sp=sp)
+    si = e1.index.sketch
+    assert isinstance(si, SketchIndex)
+    assert si.R == 6 and si.sketch.shape == (len(X), 6)
+    assert si.seed == 11
+    # reproducible from the spec alone
+    assert np.array_equal(np.asarray(si.anchors),
+                          np.asarray(e2.index.sketch.anchors))
+    assert np.array_equal(np.asarray(si.sketch),
+                          np.asarray(e2.index.sketch.sketch))
+    # a different seed draws different anchors
+    e3 = fit(spec.replace(seed=12), X, sp=sp)
+    assert not np.array_equal(np.asarray(si.anchors),
+                              np.asarray(e3.index.sketch.anchors))
+    # no sketch requested -> no sketch built
+    assert fit(MeasureSpec("spdtw"), X, sp=sp).index.sketch is None
+
+
+def test_spec_sketch_validation():
+    with pytest.raises(ValueError):
+        MeasureSpec("spdtw", sketch_r=-1)
+    with pytest.raises(ValueError):
+        MeasureSpec("spdtw", sketch_len=1)
+    k1 = MeasureSpec("spdtw", seed=3).key()
+    k2 = MeasureSpec("spdtw", seed=3).key()
+    assert np.array_equal(np.asarray(k1), np.asarray(k2))
+
+
+# ------------------------------------------------------ shortlist + re-rank
+def test_sketch_full_coverage_bit_identical():
+    """top_c = corpus size: the sketch path must equal exact mode bit for
+    bit (neighbours AND distances)."""
+    X, sp, Q = _toy()
+    eng = fit(MeasureSpec("spdtw", sketch_r=8), X, sp=sp)
+    nn_e, d_e = eng.knn(Q)
+    nn_s, d_s = eng.knn(Q, mode="sketch", top_c=len(X))
+    assert np.array_equal(np.asarray(nn_e), np.asarray(nn_s))
+    assert np.array_equal(np.asarray(d_e), np.asarray(d_s))
+
+
+def test_sketch_exact_when_shortlist_covers_true_neighbor():
+    """The acceptance property: per query, whenever the true neighbour is
+    in the top-C shortlist the sketch result is bit-identical to the
+    exact cascade — even for small C."""
+    X, sp, Q = _toy(n=32, nq=10)
+    eng = fit(MeasureSpec("spdtw", sketch_r=8), X, sp=sp)
+    si = eng.index.sketch
+    nn_e, d_e = eng.knn(Q)
+    for C in (2, 4, 8):
+        q_feats = sketch_embed(Q, si.anchors, bsp=eng.index.bsp,
+                               weights=eng.index.weights)
+        cand, _ = sketch_shortlist(q_feats, si, C)
+        covered = (np.asarray(cand) ==
+                   np.asarray(nn_e)[:, None]).any(axis=1)
+        nn_s, d_s = eng.knn(Q, mode="sketch", top_c=C)
+        assert covered.any(), "toy shortlist never covered the neighbour"
+        assert np.array_equal(np.asarray(nn_s)[covered],
+                              np.asarray(nn_e)[covered])
+        assert np.array_equal(np.asarray(d_s)[covered],
+                              np.asarray(d_e)[covered])
+
+
+def test_sketch_approx_mode_and_stats():
+    X, sp, Q = _toy()
+    eng = fit(MeasureSpec("spdtw", sketch_r=8), X, sp=sp)
+    nn, dist, st = eng.knn(Q, mode="sketch", top_c=4, approx=True,
+                           return_stats=True)
+    # approx returns the sketch-nearest candidate with its TRUE distance
+    d_pair = np.asarray(eng.pairs(Q, np.asarray(X)[np.asarray(nn)]))
+    np.testing.assert_array_equal(np.asarray(dist), d_pair)
+    assert st["mode"] == "approx" and st["dp_pairs"] == len(Q)
+    nn2, _, st2 = eng.knn(Q, mode="sketch", top_c=4, return_stats=True)
+    assert st2["mode"] == "sketch"
+    assert st2["dp_pairs"] <= len(Q) * 4 + len(Q)
+    assert 0.0 <= st2["pre_dp_prune"] <= 1.0
+    assert 0.0 <= st2["shortlist_prune"] <= 1.0
+    for stage in ("embed", "shortlist", "rerank"):
+        assert st2[f"t_{stage}_s"] >= 0.0
+
+
+def test_sketch_mode_requires_sketch():
+    X, sp, Q = _toy()
+    eng = fit(MeasureSpec("spdtw"), X, sp=sp)
+    with pytest.raises(AssertionError):
+        eng.knn(Q, mode="sketch")
+    with pytest.raises(AssertionError):
+        eng.knn(Q, mode="nope")
+
+
+# ------------------------------------------------------------- svm fast path
+def test_svm_rws_series_shapes_and_determinism():
+    from repro.classify import svm_rws_series
+    X, sp, _ = _toy(n=16)
+    Xte = X[:5] + 0.1
+    K1, Kt1 = svm_rws_series(X, Xte, sp=sp, R=6, seed=0)
+    K2, Kt2 = svm_rws_series(X, Xte, sp=sp, R=6, seed=0)
+    assert K1.shape == (16, 16) and Kt1.shape == (5, 16)
+    assert np.array_equal(np.asarray(K1), np.asarray(K2))
+    assert np.array_equal(np.asarray(Kt1), np.asarray(Kt2))
+    # a feature inner product: symmetric PSD with bounded entries
+    K = np.asarray(K1)
+    np.testing.assert_allclose(K, K.T, atol=1e-6)
+    assert np.linalg.eigvalsh(K).min() > -1e-4
+    assert np.isfinite(np.asarray(Kt1)).all()
+
+
+def test_svm_rws_classifies_toy():
+    from repro.classify import svm_error, svm_rws_series
+    rng = np.random.default_rng(0)
+    T, n = 40, 30
+    t = np.linspace(0, 2 * np.pi, T)
+    X, y = [], []
+    for i in range(n):
+        cls = i % 2
+        x = (np.sin(t * (1 + cls)) + 0.2 * rng.normal(size=T))
+        X.append((x - x.mean()) / (x.std() + 1e-8))
+        y.append(cls)
+    X = np.asarray(X, np.float32)
+    y = np.asarray(y)
+    Ktr, Kte = svm_rws_series(X[:20], X[20:], R=16, seed=0)
+    err = svm_error(Ktr, Kte, y[:20], y[20:], 2)
+    assert err <= 0.2, f"RWS linear SVM failed on separable toy: {err}"
+
+
+# ---------------------------------------------------------- serving / stream
+def test_search_engine_sketch_mode_and_latency_percentiles():
+    from repro.launch.search import SearchEngine, stream_search
+    X, sp, Q = _toy(n=32, nq=9)
+    eng = SearchEngine(X, mode="sketch", sp=sp, sketch_r=6, top_c=32)
+    queries = [Q[i] for i in range(len(Q))]
+    results = stream_search(eng, queries, batch=3)
+    exact = SearchEngine(X, sp=sp)
+    nn_e, _ = exact.search(np.stack(queries))
+    # top_c = corpus: served neighbours are the exact ones
+    assert [r.nn for r in results] == nn_e.tolist()
+    st = eng.stats()
+    lat = st["latency_ms"]
+    for stage in ("embed", "shortlist", "rerank", "total"):
+        p = lat[stage]
+        assert 0.0 <= p["p50"] <= p["p95"] <= p["p99"]
+    assert 0.0 <= st["shortlist_prune"] <= 1.0
+    # cascade mode records totals too (the stream_search satellite)
+    st_e = exact.stats()
+    assert set(st_e["latency_ms"]) == {"total"}
+    assert st_e["latency_ms"]["total"]["p50"] > 0.0
+
+
+def test_search_driver_sketch_check():
+    from repro.launch.search import run
+    out = run(dataset="CBF", workload="retrieval", n_queries=8, batch=4,
+              theta=1.0, n_sp_train=10, impl="ref", check=True, n_train=24,
+              sketch_r=4, top_c=8, T=32)
+    assert out["exact_match"]       # covered-exactness at full coverage
+    assert 0.0 <= out["recall_at_1"] <= 1.0
+    assert out["mode"] == "sketch"
+    assert "latency_ms" in out["stats"]
+
+
+# ------------------------------------------------------------------ backends
+def test_anchor_embed_capability_registered():
+    from repro.kernels import backends as bk
+    for name in ("dense", "scan", "pallas"):
+        assert bk.get_backend(name).supports(bk.ANCHOR_EMBED)
+    assert bk.ANCHOR_EMBED in bk.CAPABILITIES
