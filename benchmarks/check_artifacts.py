@@ -49,6 +49,38 @@ SCHEMAS: Dict[str, Dict] = {
             ("workloads/*/exact", lambda v: v is True,
              "cascade exactness flag must be true"),
             ("workloads/*/speedup", lambda v: v > 0, "non-positive speedup"),
+            ("workloads/*/dp_pairs",
+             lambda v: isinstance(v, int) and not isinstance(v, bool),
+             "dp_pairs must be an integral count, not a float"),
+        ],
+    },
+    "BENCH_prune.json": {
+        "required": ["backend", "static_support_frac", "sweep",
+                     "headline_dp_cell_frac", "shrink_monotone", "exact",
+                     "below_static", "cascade_coverage"],
+        "checks": [
+            ("exact", lambda v: v is True,
+             "in-DP prune exactness flag must be true"),
+            ("shrink_monotone", lambda v: v is True,
+             "dp-cell fraction must shrink as thresholds tighten"),
+            ("below_static", lambda v: v is True,
+             "tightest threshold must beat the static support"),
+            ("headline_dp_cell_frac", lambda v: 0.0 < v <= 1.0,
+             "dp-cell fraction out of (0, 1]"),
+            ("sweep/*/exact", lambda v: v is True,
+             "per-alpha exactness flag must be true"),
+            ("sweep/*/dp_cell_frac", lambda v: 0.0 < v <= 1.0,
+             "dp-cell fraction out of (0, 1]"),
+            ("sweep/*/live_tiles_total",
+             lambda v: isinstance(v, int) and not isinstance(v, bool),
+             "live-tile counts must be integral"),
+            ("cascade_coverage/*/cascade", lambda v: v is True,
+             "engine.knn fell back to the full Gram"),
+            ("cascade_coverage/*/exact", lambda v: v is True,
+             "cascade-coverage exactness flag must be true"),
+            ("cascade_coverage/*/dp_pairs",
+             lambda v: isinstance(v, int) and not isinstance(v, bool),
+             "dp_pairs must be an integral count, not a float"),
         ],
     },
     "BENCH_sketch.json": {

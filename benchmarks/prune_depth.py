@@ -1,0 +1,164 @@
+"""In-DP prune depth benchmark: live DP cells vs the static support.
+
+PR 6 abandoned candidate *pairs* once a tile row's running min crossed
+the threshold; the static support still priced every surviving pair at
+``n_active * S^2`` DP cells. The in-DP PrunedDTW sweep (DESIGN.md §14)
+keeps live column boundaries per DP row, so tiles whose incoming edges
+are all above the threshold are skipped outright and per-pair work
+shrinks *below* the static support as thresholds tighten.
+
+This benchmark measures that depth on seeded synthetic-UCR data: it
+sweeps thresholds ``thr = alpha * nn_dist`` (per-query, from the exact
+Gram) over tightening ``alpha`` and records the computed-DP-cell
+fraction of the full T*T grid (live tiles counted by the engine itself,
+``return_tiles=True``), asserting
+
+  * exactness at every alpha >= 1: pruned entries are exact-or-+INF and
+    every row min (the 1-NN distance) is bit-identical,
+  * the fraction shrinks monotonically as alpha tightens,
+  * the headline (alpha = 1.0) lands strictly below the static support
+    fraction ``n_active * S^2 / T^2``,
+
+plus the PR's cascade-coverage acceptance: ``engine.knn`` runs the
+bound cascade (no full-Gram fallback) for a kernel (krdtw) engine and a
+multivariate (T, d) engine, both bit-identical to the exact argmin.
+Results land in ``BENCH_prune.json`` at the repo root (skipped in
+--smoke runs) and in ``artifacts/bench`` via ``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+ALPHAS = (4.0, 2.0, 1.5, 1.1, 1.0)
+INF_CUT = 1e29
+
+
+def _coverage_krdtw(Xtr, Q, nu: float):
+    from repro.core import engine as E
+    from repro.core.spec import MeasureSpec
+    eng = E.fit(MeasureSpec(family="krdtw", nu=nu), np.asarray(Xtr))
+    nn, _, st = eng.knn(Q, return_stats=True)
+    ref = jnp.argmin(-eng.gram_log(Q), axis=1)
+    return {"cascade": eng.index is not None,
+            "exact": bool(np.array_equal(np.asarray(nn), np.asarray(ref))),
+            "dp_pairs": int(st["dp_pairs"])}
+
+
+def _coverage_multivariate(Xtr, Q):
+    from repro.core import engine as E
+    from repro.core.spec import MeasureSpec
+    # second channel: first difference (a real mv series, not a copy)
+    def mv(X):
+        X = np.asarray(X)
+        dX = np.diff(X, axis=1, append=X[:, -1:])
+        return np.stack([X, dX], axis=-1).astype(np.float32)
+    Cm, Qm = mv(Xtr), mv(Q)
+    eng = E.fit(MeasureSpec(family="spdtw"), Cm)
+    nn, _, st = eng.knn(Qm, return_stats=True)
+    ref = jnp.argmin(eng.gram(Qm), axis=1)
+    return {"cascade": eng.index is not None,
+            "exact": bool(np.array_equal(np.asarray(nn), np.asarray(ref))),
+            "dp_pairs": int(st["dp_pairs"])}
+
+
+def run(fast: bool = True, smoke: bool = False, dataset: str = "CBF",
+        theta: float = 8.0):
+    from repro.core import learn_sparse_paths, make_measure
+    from repro.data import load
+    from repro.kernels.gram_block import gram_spdtw_scan
+
+    if smoke:
+        n_train, n_queries, T, n_sp = 24, 8, 32, 12
+    else:
+        n_train, n_queries, T, n_sp = 64, 32, 128, 32
+    ds = load(dataset, n_train=n_train, n_test=max(n_queries, 16), T=T)
+    Xtr = jnp.asarray(ds.X_train)
+    Q = jnp.asarray(ds.X_test[:n_queries])
+    sp = learn_sparse_paths(Xtr[:n_sp], theta=theta)
+    m = make_measure("spdtw", T, sp=sp)
+    index = m.build_index(Xtr)
+    bsp = index.bsp
+    S, n_active = bsp.tile, bsp.n_active
+    n_tiles_grid = (T // S) * (T // S) if T % S == 0 else None
+    static_frac = n_active * S * S / (T * T)
+
+    G0 = gram_spdtw_scan(Q, Xtr, bsp)
+    nn_dist = jnp.min(G0, axis=1)
+    base = np.asarray(G0)
+
+    out = {
+        "backend": jax.default_backend(),
+        "shape": {"corpus": n_train, "queries": n_queries, "T": T,
+                  "theta": theta, "tile": S},
+        "static_support_frac": static_frac,
+        "n_active_tiles": int(n_active),
+        "sweep": [],
+    }
+    prev = None
+    for alpha in ALPHAS:
+        thr = (alpha * nn_dist).astype(jnp.float32)
+        G, tiles = gram_spdtw_scan(Q, Xtr, bsp, thresholds=thr,
+                                   return_tiles=True)
+        got, tl = np.asarray(G), np.asarray(tiles)
+        kept = base <= np.asarray(thr)[:, None]
+        exact = (bool(np.array_equal(got[kept], base[kept])) and
+                 bool(((got == base) | (got >= INF_CUT)).all()) and
+                 bool(np.array_equal(got.min(axis=1), base.min(axis=1))))
+        assert exact, f"in-DP prune diverged from exact at alpha={alpha}"
+        dp_cell_frac = float(tl.mean()) * S * S / (T * T)
+        shrunk = prev is None or dp_cell_frac <= prev + 1e-12
+        assert shrunk, f"dp-cell fraction grew when tightening to {alpha}"
+        prev = dp_cell_frac
+        out["sweep"].append({
+            "alpha": alpha,
+            "dp_cell_frac": dp_cell_frac,
+            "live_tiles_mean": float(tl.mean()),
+            "live_tiles_total": int(tl.sum()),
+            "exact": exact,
+        })
+        print(f"[prune_depth] alpha={alpha:>4}: dp cells "
+              f"{100*dp_cell_frac:.1f}% of grid (static support "
+              f"{100*static_frac:.1f}%), exact", flush=True)
+
+    out["headline_dp_cell_frac"] = out["sweep"][-1]["dp_cell_frac"]
+    out["shrink_monotone"] = True
+    out["exact"] = all(s["exact"] for s in out["sweep"])
+    out["below_static"] = bool(
+        out["headline_dp_cell_frac"] < static_frac)
+    assert out["below_static"], (
+        f"tightest threshold still paid the full static support: "
+        f"{out['headline_dp_cell_frac']:.4f} vs {static_frac:.4f}")
+
+    nu = 0.5 if smoke else 1.0
+    out["cascade_coverage"] = {
+        "krdtw": _coverage_krdtw(Xtr, Q, nu),
+        "multivariate": _coverage_multivariate(Xtr, Q),
+    }
+    for kind, cov in out["cascade_coverage"].items():
+        assert cov["cascade"] and cov["exact"], (kind, cov)
+        print(f"[prune_depth] {kind} cascade: exact 1-NN, "
+              f"dp_pairs={cov['dp_pairs']}", flush=True)
+
+    if n_tiles_grid is not None:
+        out["grid_tiles"] = n_tiles_grid
+    if not smoke:
+        with open(os.path.join(ROOT, "BENCH_prune.json"), "w") as f:
+            json.dump(out, f, indent=1)
+    return out
+
+
+def main(fast: bool = True):
+    out = run(fast=fast)
+    print(json.dumps(out, indent=1))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -147,7 +147,7 @@ def main(argv=None):
         with open(os.path.join(art, f"{name}.json"), "w") as f:
             json.dump(results[name], f, indent=1, default=str)
 
-    from . import search_cascade, sketch_recall
+    from . import prune_depth, search_cascade, sketch_recall
     if smoke:
         # tiny shapes end to end: kernels, fused Gram, cascade, centroid;
         # the paper tables (minutes of meta-parameter search) are skipped
@@ -158,6 +158,8 @@ def main(argv=None):
                   lambda: gram_speedup.run(fast=True, smoke=True))
         run_bench("search_cascade",
                   lambda: search_cascade.run(fast=True, smoke=True))
+        run_bench("prune_depth",
+                  lambda: prune_depth.run(fast=True, smoke=True))
         run_bench("sketch_recall",
                   lambda: sketch_recall.run(fast=True, smoke=True))
         run_bench("centroid_speedup",
@@ -173,6 +175,7 @@ def main(argv=None):
                        table6_speedup)
         run_bench("gram_speedup", lambda: gram_speedup.run(fast=fast))
         run_bench("search_cascade", lambda: search_cascade.run(fast=fast))
+        run_bench("prune_depth", lambda: prune_depth.run(fast=fast))
         run_bench("sketch_recall", lambda: sketch_recall.run(fast=fast))
         run_bench("centroid_speedup", lambda: centroid_speedup.run(fast=fast))
         run_bench("softgrad_speedup", lambda: softgrad_speedup.run(fast=fast))
@@ -216,6 +219,13 @@ def main(argv=None):
             print(f"search/{wl}/pre_dp_prune,"
                   f"{r['cascade_us_per_query']:.1f},"
                   f"{100*r['pre_dp_prune']:.0f}%")
+    if "prune_depth" in results:
+        p = results["prune_depth"]
+        tight = p["sweep"][-1]
+        print(f"prune/dp_cell_frac,{100*tight['dp_cell_frac']:.1f},"
+              f"pct_of_grid_at_alpha{tight['alpha']}")
+        print(f"prune/static_support,{100*p['static_support_frac']:.1f},"
+              f"pct_of_grid")
     if "sketch_recall" in results:
         s = results["sketch_recall"]
         b = s["best"]

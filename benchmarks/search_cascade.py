@@ -79,7 +79,9 @@ def run(fast: bool = True, smoke: bool = False, dataset: str = "CBF",
         exact = bool(np.array_equal(np.asarray(nn_full),
                                     np.asarray(nn_casc)))
         assert exact, f"cascade diverged from full Gram on {workload}"
-        stats = {k: float(v) for k, v in st.items()}
+        # keep counters integral (check_artifacts asserts on it)
+        stats = {k: int(v) if isinstance(v, (int, np.integer))
+                 else float(v) for k, v in st.items()}
         out["workloads"][workload] = {
             "full_s": t_full, "cascade_s": t_casc,
             "speedup": t_full / t_casc, "exact": exact,

@@ -25,7 +25,8 @@ from .softdtw import (soft_alignment, soft_dtw, soft_spdtw, soft_wdtw,
 from .krdtw import (krdtw, local_kernel, log_krdtw, log_krdtw_sc,
                     log_sp_krdtw, normalized_gram)
 from .baselines import corr, corr_dissimilarity, daco, euclidean, znormalize
-from .bounds import (envelopes, lb_keogh_cross, lb_kim_cross,
+from .bounds import (envelopes, krdtw_log_slacks, lb_keogh_cross,
+                     lb_kim_band_cross, lb_kim_cross, lb_log_krdtw,
                      row_min_weights, support_extents)
 from .measures import (ALL_MEASURES, CorpusIndex, Measure,
                        build_corpus_index, make_measure, pairwise)

@@ -14,9 +14,13 @@ heuristics: backend choice is the capability lookup in
 
 Series may be univariate (N, T) or multivariate (N, T, d): the block
 kernels carry (T, d) through the tile-major channel layout
-(``kernels.backends.to_tile_major``); the lower-bound cascade's envelope
-bounds are univariate, so multivariate ``knn`` runs the exact
-block-sparse Gram argmin instead (same neighbours, no bound pruning).
+(``kernels.backends.to_tile_major``), and the lower-bound cascade covers
+both — multivariate indexes carry per-channel envelopes (DESIGN.md §14),
+so mv ``knn`` prunes with the same admissible bounds instead of falling
+back to the full-Gram argmin. The kernel families (krdtw / sp_krdtw) get
+their own log-semiring cascade: a unit-weight index plus the proven
+K1/K2 slack terms turn the min-plus bounds into admissible bounds on
+-log K_rdtw.
 
 The legacy module-level entries (``ops.spdtw_gram`` …) remain as
 deprecated wrappers over the same ``_impl`` bodies the engine calls —
@@ -197,12 +201,13 @@ class SimilarityEngine:
             approx: bool = False):
         """1-NN of each query against the fitted corpus.
 
-        ``mode="exact"`` (default): univariate dissimilarity engines run
-        the lower-bound cascade (DESIGN.md §4; bit-identical to
-        full-Gram argmin, centroid-seeded when a centroid model was
-        fit). Multivariate and kernel engines run the exact Gram argmin
-        on the block-sparse engines (no admissible bounds there — same
-        neighbours, no pruning).
+        ``mode="exact"`` (default): dissimilarity engines — univariate
+        *and* multivariate — run the lower-bound cascade (DESIGN.md §4;
+        bit-identical to full-Gram argmin, centroid-seeded when a
+        centroid model was fit). Kernel engines (krdtw / sp_krdtw) run
+        the log-semiring cascade (DESIGN.md §14) — bit-identical to
+        ``-gram_log`` argmin. Only engines fit without a corpus index
+        fall back to the exact Gram argmin.
 
         ``mode="sketch"`` (DESIGN.md §13; needs a spec fit with
         ``sketch_r > 0``): the Random Warping Series matmul shortlist of
@@ -222,7 +227,11 @@ class SimilarityEngine:
                 "sketch mode needs a spec fit with sketch_r > 0"
             return sketch_knn(Q, self.index, top_c=top_c, approx=approx,
                               impl=impl, return_stats=return_stats)
-        if self.index is not None and Q.ndim == 2:
+        if self.index is not None:
+            if self.index.kind in ("krdtw", "sp_krdtw"):
+                return ops._krdtw_knn_cascade(
+                    Q, self.index, impl=impl, seed_k=seed_k,
+                    prefix_frac=prefix_frac, return_stats=return_stats)
             return ops._knn_cascade(Q, self.index, impl=impl, seed_k=seed_k,
                                     prefix_frac=prefix_frac,
                                     return_stats=return_stats,
@@ -411,7 +420,9 @@ def fit(spec: MeasureSpec, corpus=None, *, labels=None,
             plan = bk.resolve_plan(T=T, tile=spec.tile)
     # ---- corpus-dependent artifacts --------------------------------------
     index = None
-    if corpus is not None and spec.family in _CASCADE_FAMILIES and d == 1:
+    if corpus is not None and spec.family in _CASCADE_FAMILIES:
+        # univariate and multivariate alike: the envelope bounds are
+        # per-channel for (N, T, d) corpora (DESIGN.md §14)
         if w is None and plan is not None and spec.is_sparse:
             # bsp-only fit: reassemble the grid so the cascade's bounds
             # see the real weights, not an all-ones stand-in
@@ -419,7 +430,7 @@ def fit(spec: MeasureSpec, corpus=None, *, labels=None,
             sp = _weights_sp(w)
         iw = w if w is not None else np.ones((T, T), np.float32)
         index = build_corpus_index(corpus, iw, kind=spec.family, bsp=plan)
-        if spec.sketch_r > 0:
+        if spec.sketch_r > 0 and d == 1:
             # sketch tier (DESIGN.md §13): anchors keyed off the spec's
             # seed, corpus embedded through the same block engines
             from .sketch import (ANCHOR_SALT, build_sketch_index,
@@ -430,6 +441,22 @@ def fit(spec: MeasureSpec, corpus=None, *, labels=None,
             si = build_sketch_index(corpus, anchors, bsp=index.bsp,
                                     weights=iw, impl=impl, seed=spec.seed)
             index = dataclasses.replace(index, sketch=si)
+    elif corpus is not None and d == 1 and \
+            spec.family in ("krdtw", "sp_krdtw"):
+        # kernel-measure index (DESIGN.md §14): unit weights over the
+        # support — K_rdtw is support-restricted but unweighted, and the
+        # min-plus bound b1 the log-semiring cascade needs is on the
+        # unit-weight masked path cost. The K1/K2 slack terms are
+        # computed inside build_corpus_index from the same support.
+        if spec.family == "sp_krdtw":
+            assert sp is not None, "sp_krdtw fit did not resolve a support"
+            sup_w = np.asarray(sp.support, np.float32)
+        else:
+            sup_w = np.ones((T, T), np.float32)
+        index = build_corpus_index(
+            corpus, sup_w, kind=spec.family,
+            bsp=bk.resolve_plan(weights=sup_w, tile=spec.tile),
+            nu=spec.nu)
     labels_np = None if labels is None else np.asarray(labels)
     engine = SimilarityEngine(
         spec=spec, T=T, d=d, sp=sp, weights=w, bsp=plan, corpus=corpus,

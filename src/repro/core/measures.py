@@ -114,6 +114,16 @@ class CorpusIndex:
                          Random Warping Series tier (DESIGN.md §13);
                          attached by ``fit`` when the spec asks for
                          sketching (``sketch_r > 0``), None otherwise.
+      nu, log_s1,
+      log_s2:            kernel-measure bound terms (DESIGN.md §14): for
+                         krdtw/sp_krdtw indexes, the kernel bandwidth and
+                         the proven K1/K2 slacks of the log-semiring
+                         lower bound (``bounds.krdtw_log_slacks``); 0.0
+                         for min-plus measures.
+
+    Multivariate corpora ((Nc, T, d)) carry (Nc, T, d) per-channel
+    envelopes; the bound machinery sums channel excesses, matching the
+    dependent-DTW local cost.
     """
     kind: str
     corpus: jnp.ndarray
@@ -130,6 +140,9 @@ class CorpusIndex:
     w00: float
     wTT: float
     sketch: Optional[object] = None
+    nu: float = 0.0
+    log_s1: float = 0.0
+    log_s2: float = 0.0
 
     @property
     def size(self) -> int:
@@ -140,12 +153,17 @@ class CorpusIndex:
 def build_corpus_index(corpus: jnp.ndarray, weights,
                        kind: str = "spdtw",
                        bsp: Optional[BlockSparsePaths] = None,
-                       tile: Optional[int] = None) -> CorpusIndex:
+                       tile: Optional[int] = None,
+                       nu: Optional[float] = None) -> CorpusIndex:
     """Construct the search index for a corpus under a (T, T) weight grid.
 
     ``weights`` must be host-concrete (the tile plan and support windows
     are static data); ``corpus`` may be a traced array — the envelopes are
     pure jnp, so index construction works inside shard_map'd serving jobs.
+    ``corpus`` may be (Nc, T) or multivariate (Nc, T, d) — the envelopes
+    generalize per channel. For kernel kinds (krdtw/sp_krdtw) pass the
+    bandwidth ``nu``: the K1/K2 slack terms of the log-semiring lower
+    bound are computed here, once, from the support.
     """
     w = np.asarray(weights, np.float32)
     T = w.shape[0]
@@ -157,12 +175,18 @@ def build_corpus_index(corpus: jnp.ndarray, weights,
     env_lo, env_hi = bounds.envelopes(corpus, lo, hi)
     if bsp is None:
         bsp = block_sparsify(w, tile=tile or default_tile(T))
+    log_s1 = log_s2 = 0.0
+    if kind in ("krdtw", "sp_krdtw"):
+        assert nu is not None, "kernel indexes need the bandwidth nu"
+        log_s1, log_s2 = bounds.krdtw_log_slacks(
+            support if kind == "sp_krdtw" else None, T=T)
     return CorpusIndex(
         kind=kind, corpus=jnp.asarray(corpus, jnp.float32),
         weights=jnp.asarray(w), bsp=bsp, lo=lo, hi=hi,
         wmin_rows=wmin_rows, env_lo=env_lo, env_hi=env_hi,
         lo_t=lo_t, hi_t=hi_t, wmin_cols=wmin_cols,
-        w00=float(w[0, 0]), wTT=float(w[-1, -1]))
+        w00=float(w[0, 0]), wTT=float(w[-1, -1]),
+        nu=float(nu or 0.0), log_s1=log_s1, log_s2=log_s2)
 
 
 # ---------------------------------------------------------------------------

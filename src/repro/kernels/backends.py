@@ -54,13 +54,17 @@ DIFFERENTIABLE = "differentiable"      # has a gradient path (custom VJP)
 MULTIVARIATE = "multivariate"          # accepts (T, d>1) series, forward
 MULTIVARIATE_GRAD = "multivariate-grad"  # ... and on the backward pass
 EARLY_ABANDON = "early-abandon"        # honours thresholds/alive0 pruning
+PRUNED_DP = "pruned-dp"                # in-DP PrunedDTW row boundaries +
+#                                        boundary-dead tile skips when
+#                                        thresholds are given
+#                                        (DESIGN.md §14)
 TRACED_WEIGHTS = "traced-weights"      # weight grid may be a jax Tracer
 ANCHOR_EMBED = "anchor-embed"          # batched series-vs-anchor Gram
 #                                        (the sketch tier's embedding,
 #                                        DESIGN.md §13)
 
 CAPABILITIES = (DIFFERENTIABLE, MULTIVARIATE, MULTIVARIATE_GRAD,
-                EARLY_ABANDON, TRACED_WEIGHTS, ANCHOR_EMBED)
+                EARLY_ABANDON, PRUNED_DP, TRACED_WEIGHTS, ANCHOR_EMBED)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,14 +120,14 @@ register_backend(Backend(
 register_backend(Backend(
     name="scan",
     caps=frozenset({DIFFERENTIABLE, MULTIVARIATE, MULTIVARIATE_GRAD,
-                    EARLY_ABANDON, ANCHOR_EMBED}),
+                    EARLY_ABANDON, PRUNED_DP, ANCHOR_EMBED}),
     fallback="dense",
     description="lax.scan over the active-tile schedule; CPU/GPU "
                 "production path, work scales with surviving tiles"))
 register_backend(Backend(
     name="pallas",
     caps=frozenset({DIFFERENTIABLE, MULTIVARIATE, EARLY_ABANDON,
-                    ANCHOR_EMBED}),
+                    PRUNED_DP, ANCHOR_EMBED}),
     fallback="scan",
     description="fused Pallas kernels (compiled on TPU, interpret "
                 "elsewhere); the soft backward kernel is univariate, so "

@@ -51,6 +51,18 @@ report +INF. With default (+INF) thresholds the engines are bit-identical
 to the unabandoned path. ``alive0`` lets the 1-NN cascade
 (``ops.knn_cascade``) pre-kill pairs already pruned by the lower-bound
 stages, so the DP only ever runs on the survivors.
+
+In-DP PrunedDTW (DESIGN.md §14). When per-query thresholds are supplied,
+both SP-DTW engines further prune *inside* the DP: after every row of a
+tile sweep, cells above the pair's threshold are snapped to +INF (cell
+costs are non-negative, so such cells can never feed a final value within
+the bound — Herrmann & Webb's PrunedDTW, at lane granularity), and a tile
+whose every incoming edge exceeds the bound is skipped before its cost
+rows are ever formed (``lax.cond`` on the scan path, a ``pl.when`` gate +
+explicit +INF edge publish on the Pallas path). Per-pair live-tile
+counters (``gram_spdtw_scan(..., return_tiles=True)``) expose the work
+actually done — the BENCH_prune artifact tracks it shrinking below the
+static support as cascade thresholds tighten.
 """
 from __future__ import annotations
 
@@ -86,7 +98,7 @@ def _pair_batch(xa: jnp.ndarray, yb: jnp.ndarray, ba: int, bb: int):
 def _gram_spdtw_kernel(meta_ref, a_ref, b_ref, w_ref, thr_ref, alive0_ref,
                        out_ref, row_edge, col_edge, corner_next, d_ri, alive,
                        *, S: int, g_out: int, ri: int, rj: int,
-                       ba: int, bb: int, d: int):
+                       ba: int, bb: int, d: int, prune: bool):
     """One grid step = one active tile for one (A-stripe, B-stripe) block."""
     g = pl.program_id(2)
     bt = ba * bb
@@ -105,54 +117,79 @@ def _gram_spdtw_kernel(meta_ref, a_ref, b_ref, w_ref, thr_ref, alive0_ref,
     # admissible lower bound on every pair's final value (rows past the
     # result tile row are excluded via g <= g_out)
     row_first = meta_ref[g, 6] > 0
+    thr_p = jnp.repeat(thr_ref[...], bb, axis=0)                  # (bt, 1)
 
     @pl.when(row_first & (g > 0) & (g <= g_out))
     def _():
         bound = jnp.min(row_edge[...], axis=1, keepdims=True)     # (bt, 1)
-        thr_p = jnp.repeat(thr_ref[...], bb, axis=0)              # (bt, 1)
         alive[...] = alive[...] * (bound <= thr_p).astype(jnp.float32)
 
-    # the whole tile sweep is skipped once every pair of this block is dead
-    @pl.when(jnp.any(alive[...] > 0))
+    tj = meta_ref[g, 1]
+    top_ok = meta_ref[g, 3] > 0
+    left_ok = meta_ref[g, 4] > 0
+    diag_ok = meta_ref[g, 5] > 0
+
+    # --- gather incoming edges (guarded against inactive neighbours) ---
+    inf_row = jnp.full((bt, S), INF, jnp.float32)
+    top_raw = pl.load(row_edge, (slice(None), pl.dslice(tj * S, S)))
+    top_vec = jnp.where(top_ok, top_raw, inf_row)
+    left_vec = jnp.where(left_ok, col_edge[...], inf_row)
+    c_first = jnp.where(
+        g == 0, jnp.zeros((bt, 1), jnp.float32),
+        jnp.where(diag_ok,
+                  jnp.where(left_ok, corner_next[...],
+                            # guarded: only read when diag_ok (=> tj > 0);
+                            # clamp keeps the untaken branch in-bounds
+                            pl.load(row_edge,
+                                    (slice(None),
+                                     pl.dslice(jnp.maximum(tj * S - 1, 0),
+                                               1)))),
+                  jnp.full((bt, 1), INF, jnp.float32)))
+    new_corner = top_vec[:, S - 1:S]
+
+    if prune:
+        # in-DP PrunedDTW tile skip: a tile whose every incoming edge
+        # exceeds the pair's bound cannot hold any cell <= bound (costs
+        # are non-negative), so its exact pruned sweep is all-+INF rows
+        # — skip the sweep whenever no pair in the block is both alive
+        # and edge-live, and publish those +INF rows below
+        edge_live = ((jnp.min(top_vec, axis=1, keepdims=True) <= thr_p)
+                     | (jnp.min(left_vec, axis=1, keepdims=True) <= thr_p)
+                     | (c_first <= thr_p))
+        do_sweep = jnp.any((alive[...] > 0) & edge_live)
+    else:
+        # the whole tile sweep is skipped once every pair is dead
+        do_sweep = jnp.any(alive[...] > 0)
+
+    @pl.when(do_sweep)
     def _():
         ti = meta_ref[g, 0]
-        tj = meta_ref[g, 1]
-        top_ok = meta_ref[g, 3] > 0
-        left_ok = meta_ref[g, 4] > 0
-        diag_ok = meta_ref[g, 5] > 0
-
         # tile-major layout: tile ti's d channel planes are contiguous
         xa = pl.load(a_ref, (slice(None), pl.dslice(ti * d * S, d * S)))
         yb = pl.load(b_ref, (slice(None), pl.dslice(tj * d * S, d * S)))
         x, y = _pair_batch(xa, yb, ba, bb)                         # (bt, d*S)
         w = w_ref[0]                                               # (S, S)
 
-        # --- gather incoming edges (guarded against inactive neighbours) ---
-        inf_row = jnp.full((bt, S), INF, jnp.float32)
-        top_raw = pl.load(row_edge, (slice(None), pl.dslice(tj * S, S)))
-        top_vec = jnp.where(top_ok, top_raw, inf_row)
-        left_vec = jnp.where(left_ok, col_edge[...], inf_row)
-        c_first = jnp.where(
-            g == 0, jnp.zeros((bt, 1), jnp.float32),
-            jnp.where(diag_ok,
-                      jnp.where(left_ok, corner_next[...],
-                                # guarded: only read when diag_ok (=> tj > 0);
-                                # clamp keeps the untaken branch in-bounds
-                                pl.load(row_edge,
-                                        (slice(None),
-                                         pl.dslice(jnp.maximum(tj * S - 1, 0),
-                                                   1)))),
-                      jnp.full((bt, 1), INF, jnp.float32)))
-        new_corner = top_vec[:, S - 1:S]
-
         d_last, rightcol, dri = tile_sweep(x, y, w, top_vec, left_vec,
-                                           c_first, S=S, ri=ri, d=d)
+                                           c_first, S=S, ri=ri, d=d,
+                                           thr=thr_p if prune else None)
 
         # --- publish edges for downstream tiles of this pair block ---
         corner_next[...] = new_corner
         pl.store(row_edge, (slice(None), pl.dslice(tj * S, S)), d_last)
         col_edge[...] = rightcol
         d_ri[...] = dri
+
+    if prune:
+        @pl.when(~do_sweep)
+        def _():
+            # publish exactly what the pruned sweep would have: all-+INF
+            # rows (never stale state — downstream tiles of this pair
+            # block consume these edges)
+            corner_next[...] = new_corner
+            pl.store(row_edge, (slice(None), pl.dslice(tj * S, S)), inf_row)
+            col_edge[...] = inf_row
+            d_ri[...] = inf_row
 
     # capture at the tile holding the global result cell (NOT the last
     # active tile — the support may be active past the corner, or raw user
@@ -167,9 +204,9 @@ def _gram_spdtw_kernel(meta_ref, a_ref, b_ref, w_ref, thr_ref, alive0_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("S", "n_active", "T_orig", "g_out",
-                                    "ba", "bb", "d", "interpret"))
+                                    "ba", "bb", "d", "prune", "interpret"))
 def _gram_spdtw_call(meta, A, B, blocks, thr, alive0, *, S, n_active, T_orig,
-                     g_out, ba, bb, d, interpret):
+                     g_out, ba, bb, d, prune, interpret):
     Nap, Tw = A.shape
     Nbp = B.shape[0]
     Tp = Tw // d                    # DP grid edge (padded)
@@ -177,7 +214,7 @@ def _gram_spdtw_call(meta, A, B, blocks, thr, alive0, *, S, n_active, T_orig,
     ri, rj = last % S, last % S
     grid = (Nap // ba, Nbp // bb, n_active)
     kernel = functools.partial(_gram_spdtw_kernel, S=S, g_out=g_out,
-                               ri=ri, rj=rj, ba=ba, bb=bb, d=d)
+                               ri=ri, rj=rj, ba=ba, bb=bb, d=d, prune=prune)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
@@ -245,7 +282,10 @@ def gram_spdtw_block(A: jnp.ndarray, B: jnp.ndarray, bsp: BlockSparsePaths,
     the tile batch and sliced back. ``thresholds`` ((Na,), per-A-row) and
     ``alive0`` ((Na, Nb) bool) switch on the early-abandon sweep: pairs
     that start dead or whose running row-min exceeds the threshold report
-    +INF.
+    +INF. Giving thresholds also engages the in-DP PrunedDTW path (live
+    pruned row boundaries + boundary-dead tile skips): entries whose true
+    value exceeds the threshold may report +INF, entries at or below it
+    are bit-identical to the exact sweep.
     """
     from .backends import series_dim, to_tile_major
     Na, T = A.shape[0], A.shape[1]
@@ -265,7 +305,8 @@ def gram_spdtw_block(A: jnp.ndarray, B: jnp.ndarray, bsp: BlockSparsePaths,
         jnp.asarray(meta), to_tile_major(A, bsp.tile, bsp.T, n_to=Nap),
         to_tile_major(B, bsp.tile, bsp.T, n_to=Nbp), jnp.asarray(bsp.blocks),
         thr, alive, S=bsp.tile, n_active=n_active, T_orig=T_orig,
-        g_out=g_out, ba=ba, bb=bb, d=d, interpret=interpret)
+        g_out=g_out, ba=ba, bb=bb, d=d, prune=thresholds is not None,
+        interpret=interpret)
     return out[:Na, :Nb]
 
 
@@ -275,7 +316,7 @@ def gram_spdtw_block(A: jnp.ndarray, B: jnp.ndarray, bsp: BlockSparsePaths,
 
 def _tile_scan(meta, blocks, get_xy, P, Tp, thr_p, alive_p, *, S, g_out, ri,
                sweep=tile_sweep, neutral: float = INF, stash: bool = False,
-               d: int = 1):
+               d: int = 1, prune: bool = False, count: bool = False):
     """Shared lax.scan over the active-tile schedule (DP wavefront order).
 
     ``get_xy(ti, tj) -> ((P, d*S), (P, d*S))`` supplies the per-pair series
@@ -299,13 +340,29 @@ def _tile_scan(meta, blocks, get_xy, P, Tp, thr_p, alive_p, *, S, g_out, ri,
     backward's L-block residual, DESIGN.md §11): the return grows a
     fourth element, Lstash (n_active, P, S*S). DP state dtype follows
     ``blocks`` (f64 for the oracle-grade parity checks).
+
+    ``prune=True`` engages the in-DP PrunedDTW path (DESIGN.md §14): the
+    per-row clamp inside ``tile_sweep`` snaps cells above the per-pair
+    threshold to +INF, and a tile whose every incoming edge exceeds the
+    bound is *skipped entirely* via ``lax.cond`` — its cost rows are
+    never formed, and the all-+INF rows its pruned sweep would have
+    produced are published instead. Min-plus hard sweeps only (asserted
+    off for soft callers). ``count=True`` additionally carries a (P, 1)
+    int32 per-pair live-tile counter (tiles where the pair was alive
+    with at least one live edge — the DP work actually attributable to
+    it) and returns it as a fourth element; incompatible with ``stash``.
     """
+    assert not (stash and (prune or count)), \
+        "prune/count are hard-sweep features; the stash path is soft-only"
     n_active = meta.shape[0]
     dtype = blocks.dtype
     inf_row = jnp.full((P, S), neutral, dtype)
 
     def step(carry, inp):
-        row_edge, col_edge, corner, dri_out, alive = carry
+        if count:
+            row_edge, col_edge, corner, dri_out, alive, tiles = carry
+        else:
+            row_edge, col_edge, corner, dri_out, alive = carry
         k, m = inp
         ti, tj, slot = m[0], m[1], m[2]
         # early-abandon check at the first tile of each new tile row (the
@@ -314,7 +371,6 @@ def _tile_scan(meta, blocks, get_xy, P, Tp, thr_p, alive_p, *, S, g_out, ri,
         check = (m[6] > 0) & (k > 0) & (k <= g_out)
         bound = jnp.min(row_edge, axis=1, keepdims=True)       # (P, 1)
         alive = alive & jnp.where(check, bound <= thr_p, True)
-        x, y = get_xy(ti, tj)
         w = blocks[slot]
         top_raw = jax.lax.dynamic_slice_in_dim(row_edge, tj * S, S, axis=1)
         top_vec = jnp.where(m[3] > 0, top_raw, inf_row)
@@ -326,18 +382,51 @@ def _tile_scan(meta, blocks, get_xy, P, Tp, thr_p, alive_p, *, S, g_out, ri,
             jnp.where(m[5] > 0,
                       jnp.where(m[4] > 0, corner, corner_row),
                       jnp.full((P, 1), neutral, dtype)))
-        out = sweep(x, y, w, top_vec, left_vec, c_first, S=S, ri=ri, d=d)
-        (d_last, rightcol, dri), rest = out[:3], out[3:]
+        if prune:
+            # a tile is live for a pair iff some incoming edge is within
+            # the bound — costs are non-negative, so a boundary-dead
+            # tile's pruned sweep is all-+INF rows; skip cost-row
+            # formation entirely when no pair needs it
+            edge_live = (
+                (jnp.min(top_vec, axis=1, keepdims=True) <= thr_p)
+                | (jnp.min(left_vec, axis=1, keepdims=True) <= thr_p)
+                | (c_first <= thr_p))
+            live = alive & edge_live
+
+            def run_tile(_):
+                x, y = get_xy(ti, tj)
+                return sweep(x, y, w, top_vec, left_vec, c_first,
+                             S=S, ri=ri, d=d, thr=thr_p)[:3]
+
+            d_last, rightcol, dri = jax.lax.cond(
+                jnp.any(live), run_tile,
+                lambda _: (inf_row, inf_row, inf_row), None)
+            rest = ()
+        else:
+            live = alive
+            x, y = get_xy(ti, tj)
+            out = sweep(x, y, w, top_vec, left_vec, c_first, S=S, ri=ri, d=d)
+            (d_last, rightcol, dri), rest = out[:3], out[3:]
         row_edge = jax.lax.dynamic_update_slice_in_dim(row_edge, d_last,
                                                        tj * S, axis=1)
         # keep the dri of the tile holding the global result cell (see
         # ``result_tile_step``), not whatever tile happens to run last
         dri_out = jnp.where(k == g_out, dri, dri_out)
-        carry = (row_edge, rightcol, top_vec[:, S - 1:S], dri_out, alive)
+        if count:
+            tiles = tiles + live.astype(jnp.int32)
+            carry = (row_edge, rightcol, top_vec[:, S - 1:S], dri_out,
+                     alive, tiles)
+        else:
+            carry = (row_edge, rightcol, top_vec[:, S - 1:S], dri_out, alive)
         return carry, (rest[0] if stash else None)
 
     init = (jnp.full((P, Tp), neutral, dtype), inf_row,
             jnp.full((P, 1), neutral, dtype), inf_row, alive_p)
+    if count:
+        init = init + (jnp.zeros((P, 1), jnp.int32),)
+        (row_edge, _, _, dri, alive, tiles), _ = jax.lax.scan(
+            step, init, (jnp.arange(n_active), meta))
+        return row_edge, dri, alive, tiles
     (row_edge, _, _, dri, alive), Lstash = jax.lax.scan(
         step, init, (jnp.arange(n_active), meta))
     if stash:
@@ -345,9 +434,10 @@ def _tile_scan(meta, blocks, get_xy, P, Tp, thr_p, alive_p, *, S, g_out, ri,
     return row_edge, dri, alive
 
 
-@functools.partial(jax.jit, static_argnames=("S", "T_orig", "g_out", "d"))
+@functools.partial(jax.jit, static_argnames=("S", "T_orig", "g_out", "d",
+                                             "prune", "count"))
 def _gram_spdtw_scan_call(meta, A, B, blocks, thr, alive0, *, S, T_orig,
-                          g_out, d):
+                          g_out, d, prune=False, count=False):
     Na = A.shape[0]
     Tp = A.shape[1] // d
     Nb = B.shape[0]
@@ -361,17 +451,23 @@ def _gram_spdtw_scan_call(meta, A, B, blocks, thr, alive0, *, S, T_orig,
         yb = jax.lax.dynamic_slice(B, (0, tj * d * S), (Nb, d * S))
         return _pair_batch(xa, yb, Na, Nb)
 
-    _, dri, alive = _tile_scan(meta, blocks, get_xy, P, Tp, thr_p,
-                               alive0.reshape(P, 1) > 0,
-                               S=S, g_out=g_out, ri=ri, d=d)
+    res = _tile_scan(meta, blocks, get_xy, P, Tp, thr_p,
+                     alive0.reshape(P, 1) > 0,
+                     S=S, g_out=g_out, ri=ri, d=d, prune=prune, count=count)
+    if count:
+        _, dri, alive, tiles = res
+    else:
+        (_, dri, alive), tiles = res, None
     val = jax.lax.dynamic_slice_in_dim(dri, rj, 1, axis=1)
-    return jnp.where(alive, val, INF).reshape(Na, Nb)
+    G = jnp.where(alive, val, INF).reshape(Na, Nb)
+    return (G, tiles.reshape(Na, Nb)) if count else G
 
 
 def gram_spdtw_scan(A: jnp.ndarray, B: jnp.ndarray, bsp: BlockSparsePaths,
                     T_orig: int | None = None, block_a: int = 64,
                     thresholds: jnp.ndarray | None = None,
-                    alive0: jnp.ndarray | None = None) -> jnp.ndarray:
+                    alive0: jnp.ndarray | None = None,
+                    return_tiles: bool = False) -> jnp.ndarray:
     """All-pairs SP-DTW Gram matrix: lax.scan over the active-tile schedule.
 
     A: (Na, T) or (Na, T, d); B likewise. Same schedule, edge dataflow and
@@ -379,10 +475,14 @@ def gram_spdtw_scan(A: jnp.ndarray, B: jnp.ndarray, bsp: BlockSparsePaths,
     is Na*Nb*n_active*S^2 on any backend and the pair batch is broadcast
     per tile, never materialized in HBM at (Na*Nb, T). A rows are chunked
     (``block_a``) to bound the carried edge-state footprint.
-    ``thresholds`` / ``alive0`` drive the same early-abandon sweep as the
-    Pallas kernel (abandoned pairs report +INF; lanes still stream
-    through the vector engine — the wall-clock win on this path comes
-    from the cascade never scheduling pruned pairs).
+    ``thresholds`` / ``alive0`` drive the same early-abandon + in-DP
+    PrunedDTW sweep as the Pallas kernel: entries at or below the
+    threshold are bit-identical to the exact Gram, entries above it may
+    report +INF, and boundary-dead tiles skip cost-row formation outright
+    (``lax.cond``), so per-pair work shrinks below the static support as
+    thresholds tighten. ``return_tiles=True`` additionally returns the
+    (Na, Nb) int32 per-pair live-tile counts (the DP work actually done;
+    n_active everywhere when no thresholds are given).
     """
     from .backends import series_dim, to_tile_major
     Na, T = A.shape[0], A.shape[1]
@@ -392,23 +492,35 @@ def gram_spdtw_scan(A: jnp.ndarray, B: jnp.ndarray, bsp: BlockSparsePaths,
     assert T_orig <= bsp.T
     g_out = result_tile_step(bsp.plan(), bsp.tile, T_orig)
     if g_out < 0:   # corner cell outside the support: no admissible path
-        return jnp.full((Na, Nb), INF, jnp.float32)
+        G = jnp.full((Na, Nb), INF, jnp.float32)
+        return (G, jnp.zeros((Na, Nb), jnp.int32)) if return_tiles else G
     meta = jnp.asarray(bsp.plan())
     blocks = jnp.asarray(bsp.blocks)
     Ap = to_tile_major(A, bsp.tile, bsp.T)
     Bp = to_tile_major(B, bsp.tile, bsp.T)
     thr, alive = _pad_abandon_state(thresholds, alive0, Na, Nb, Na, Nb)
-    rows = []
+    prune = thresholds is not None
+    rows, tile_rows = [], []
     for s in range(0, Na, block_a):
-        rows.append(_gram_spdtw_scan_call(
+        out = _gram_spdtw_scan_call(
             meta, Ap[s:s + block_a], Bp, blocks, thr[s:s + block_a],
             alive[s:s + block_a], S=bsp.tile, T_orig=T_orig, g_out=g_out,
-            d=d))
-    return jnp.concatenate(rows, axis=0)
+            d=d, prune=prune, count=return_tiles)
+        if return_tiles:
+            rows.append(out[0])
+            tile_rows.append(out[1])
+        else:
+            rows.append(out)
+    G = jnp.concatenate(rows, axis=0)
+    if return_tiles:
+        return G, jnp.concatenate(tile_rows, axis=0)
+    return G
 
 
-@functools.partial(jax.jit, static_argnames=("S", "T_orig", "g_out", "d"))
-def _spdtw_paired_scan_call(meta, X, Y, blocks, thr, *, S, T_orig, g_out, d):
+@functools.partial(jax.jit, static_argnames=("S", "T_orig", "g_out", "d",
+                                             "prune"))
+def _spdtw_paired_scan_call(meta, X, Y, blocks, thr, *, S, T_orig, g_out, d,
+                            prune=False):
     P = X.shape[0]
     Tp = X.shape[1] // d
     last = T_orig - 1
@@ -420,7 +532,7 @@ def _spdtw_paired_scan_call(meta, X, Y, blocks, thr, *, S, T_orig, g_out, d):
 
     _, dri, alive = _tile_scan(meta, blocks, get_xy, P, Tp,
                                thr.reshape(P, 1), jnp.ones((P, 1), bool),
-                               S=S, g_out=g_out, ri=ri, d=d)
+                               S=S, g_out=g_out, ri=ri, d=d, prune=prune)
     val = jax.lax.dynamic_slice_in_dim(dri, rj, 1, axis=1)
     return jnp.where(alive, val, INF).reshape(P)
 
@@ -436,8 +548,9 @@ def spdtw_paired_scan(x: jnp.ndarray, y: jnp.ndarray, bsp: BlockSparsePaths,
     B*n_active*S^2: unlike ``ref.wdtw_batch`` this exploits the learned
     sparsity on CPU/GPU too. The cascade's survivor stage runs here after
     gathering the pairs that outlived the bounds. Optional per-pair
-    ``thresholds`` engage the early-abandon sweep (abandoned pairs report
-    +INF).
+    ``thresholds`` engage the early-abandon + in-DP PrunedDTW sweep
+    (values <= threshold exact, above it possibly +INF, boundary-dead
+    tiles skipped outright).
     """
     from .backends import series_dim, to_tile_major
     B, T = x.shape[0], x.shape[1]
@@ -458,7 +571,7 @@ def spdtw_paired_scan(x: jnp.ndarray, y: jnp.ndarray, bsp: BlockSparsePaths,
         outs.append(_spdtw_paired_scan_call(
             meta, xp[s:s + block_p], yp[s:s + block_p], blocks,
             thr[s:s + block_p], S=bsp.tile, T_orig=T_orig, g_out=g_out,
-            d=d))
+            d=d, prune=thresholds is not None))
     return jnp.concatenate(outs, axis=0)
 
 

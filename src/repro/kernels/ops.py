@@ -419,16 +419,19 @@ def _pair_dp(x: jnp.ndarray, y: jnp.ndarray, index: CorpusIndex, impl: str,
                        interpret=not bk.on_tpu())
 
 
+def _stat_int(v):
+    """Cascade counters land as host ints when concrete (BENCH artifacts
+    require integral counts); traced values pass through untouched."""
+    return v if bk.is_traced(v) else int(v)
+
+
 def _knn_cascade(Q: jnp.ndarray, index: CorpusIndex, *, impl: str = "auto",
                  seed_k: int = 2, prefix_frac: float = 0.5,
                  block_a: int = 64, return_stats: bool = False,
                  centroid_model=None):
-    assert Q.ndim == 2, \
-        "the lower-bound cascade is univariate (envelope bounds); " \
-        "multivariate 1-NN routes through engine.knn's exact Gram argmin"
     Q = jnp.asarray(Q, jnp.float32)
     C = index.corpus
-    Nq, T = Q.shape
+    Nq, T = Q.shape[:2]
     Nc = C.shape[0]
     seed_k = min(seed_k, Nc)
     impl_r = bk.resolve(impl).name
@@ -447,8 +450,10 @@ def _knn_cascade(Q: jnp.ndarray, index: CorpusIndex, *, impl: str = "auto",
                         best_c)                                # (Nq,)
         d_cand = _pair_dp(Q, jnp.take(C, cand, axis=0), index, impl_r)
 
-    # --- stage 1: endpoint bound (every path pays both corner cells) ---
-    lb1 = _bounds.lb_kim_cross(Q, C, index.w00, index.wTT)
+    # --- stage 1: banded endpoint bound (exact corners + the pinned
+    # first/last rows under per-row weight floors; DESIGN.md §14) ---
+    lb1 = _bounds.lb_kim_band_cross(Q, C, index.lo, index.hi,
+                                    index.wmin_rows, index.w00, index.wTT)
     # --- stage 2: support-windowed envelopes, both orientations ---
     lb2 = jnp.maximum(lb1, _bounds.lb_keogh_cross(
         Q, index.env_lo, index.env_hi, index.wmin_rows))
@@ -507,8 +512,8 @@ def _knn_cascade(Q: jnp.ndarray, index: CorpusIndex, *, impl: str = "auto",
     if not return_stats:
         return nn, nnd
     total = Nq * Nc
-    dp_pairs = alive.sum() + Nq * (seed_k + (n_centroids + 1
-                                             if cand is not None else 0))
+    dp_pairs = _stat_int(alive.sum()) + Nq * (
+        seed_k + (n_centroids + 1 if cand is not None else 0))
     abandoned = (alive & (D >= 1e29)) if G_ab is None else \
         (alive & (G_ab >= 1e29))
     stats = {
@@ -521,6 +526,110 @@ def _knn_cascade(Q: jnp.ndarray, index: CorpusIndex, *, impl: str = "auto",
         "pre_dp_prune": 1.0 - dp_pairs / total,
         "dp_pairs": dp_pairs,
         "dp_abandoned": jnp.mean(abandoned.astype(jnp.float32)),
+    }
+    return nn, nnd, stats
+
+
+# ---------------------------------------------------------------------------
+# Log-semiring cascade: exact kernel 1-NN for krdtw / sp_krdtw
+# ---------------------------------------------------------------------------
+
+def _krdtw_pair_eval(x: jnp.ndarray, y: jnp.ndarray, index: CorpusIndex,
+                     impl: str) -> jnp.ndarray:
+    """Exact kernel dissimilarity -log K_rdtw for aligned pair batches."""
+    sup = None if index.kind == "krdtw" else (index.weights > 0)
+    return -_log_krdtw_pairs(x, y, index.nu, support=sup, impl=impl)
+
+
+def _krdtw_knn_cascade(Q: jnp.ndarray, index: CorpusIndex, *,
+                       impl: str = "auto", seed_k: int = 2,
+                       prefix_frac: float = 0.5, block_a: int = 64,
+                       return_stats: bool = False):
+    """Exact kernel 1-NN under the dissimilarity -log K_rdtw (DESIGN.md §14).
+
+    Same shape as ``_knn_cascade``, but the bound stage runs in the log
+    semiring: K1/K2 are upper-bounded by their proven slacks times
+    exp(-nu * b) where b is an admissible min-plus bound on the
+    *unit-weight* masked path cost — so the whole Kim/Keogh/prefix
+    machinery is reused verbatim on the kernel index (which is built with
+    unit weights over the support). Thresholds are exact dissimilarities
+    of real candidates and the bound is admissible, so the returned
+    neighbours are bit-identical to -gram_log argmin.
+    """
+    assert Q.ndim == 2, "the kernel measures are univariate"
+    Q = jnp.asarray(Q, jnp.float32)
+    C = index.corpus
+    Nq, T = Q.shape
+    Nc = C.shape[0]
+    seed_k = min(seed_k, Nc)
+    impl_r = bk.resolve(impl).name
+    nu = index.nu
+
+    # --- min-plus bound b1 on the unit-weight masked path cost ---
+    b1 = _bounds.lb_kim_band_cross(Q, C, index.lo, index.hi,
+                                   index.wmin_rows, index.w00, index.wTT)
+    b1 = jnp.maximum(b1, _bounds.lb_keogh_cross(
+        Q, index.env_lo, index.env_hi, index.wmin_rows))
+    q_lo, q_hi = _bounds.envelopes(Q, index.lo_t, index.hi_t)
+    b1 = jnp.maximum(b1, _bounds.lb_keogh_cross(
+        C, q_lo, q_hi, index.wmin_cols).T)
+    # --- b2: every K2 path pays the aligned endpoint factors ---
+    b2 = (Q[:, 0, None] - C[None, :, 0]) ** 2
+    if T > 1:
+        b2 = b2 + (Q[:, -1, None] - C[None, :, -1]) ** 2
+    lb2 = _bounds.lb_log_krdtw(b1, b2, nu, index.log_s1, index.log_s2)
+
+    # --- seed thresholds: exact -log K on the best-bounded candidates ---
+    _, seed_idx = jax.lax.top_k(-lb2, seed_k)                  # (Nq, k)
+    xq = jnp.repeat(Q, seed_k, axis=0)
+    yc = jnp.take(C, seed_idx.reshape(-1), axis=0)
+    seed_d = _krdtw_pair_eval(xq, yc, index, impl_r).reshape(Nq, seed_k)
+    thr = jnp.min(seed_d, axis=1)                              # (Nq,)
+
+    rows = jnp.arange(Nq)[:, None]
+    alive2 = lb2 <= thr[:, None]
+    alive2 = alive2.at[rows, seed_idx].set(False)              # already known
+
+    # --- prefix-DP tightens b1 (min-plus sweep on the unit-weight plan) ---
+    n_prefix = prefix_tile_count(index.bsp, prefix_frac, T)
+    if n_prefix > 0 and impl_r != "dense":
+        b1p = jnp.maximum(b1, gram_prefix_bound(Q, C, index.bsp, n_prefix,
+                                                T_orig=T, block_a=block_a))
+        lb3 = _bounds.lb_log_krdtw(b1p, b2, nu, index.log_s1, index.log_s2)
+        alive = alive2 & (lb3 <= thr[:, None])
+    else:
+        lb3 = lb2
+        alive = alive2
+
+    # --- exact -log K on the survivors ---
+    eager = not (bk.is_traced(Q) or bk.is_traced(C) or bk.is_traced(thr))
+    D = jnp.full((Nq, Nc), INF, jnp.float32).at[rows, seed_idx].set(seed_d)
+    if eager:
+        qi, ci = np.nonzero(np.asarray(alive))
+        if len(qi):
+            d_surv = _krdtw_pair_eval(jnp.take(Q, qi, axis=0),
+                                      jnp.take(C, ci, axis=0), index, impl_r)
+            D = D.at[qi, ci].set(d_surv)
+    else:
+        sup = None if index.kind == "krdtw" else (index.weights > 0)
+        G = -_log_krdtw_gram(Q, C, nu, support=sup, impl=impl,
+                             block_a=block_a)
+        D = jnp.where(alive, G, D)
+    nn = jnp.argmin(D, axis=1).astype(jnp.int32)
+    nnd = jnp.take_along_axis(D, nn[:, None], axis=1)[:, 0]
+    if not return_stats:
+        return nn, nnd
+    dp_pairs = _stat_int(alive.sum()) + Nq * seed_k
+    stats = {
+        "n_queries": Nq, "n_candidates": Nc, "seed_k": seed_k,
+        "n_centroids": 0,
+        "prefix_tiles": n_prefix, "plan_tiles": index.bsp.n_active,
+        "stage1_prune": jnp.mean((lb2 > thr[:, None]).astype(jnp.float32)),
+        "stage2_prune": jnp.mean((lb2 > thr[:, None]).astype(jnp.float32)),
+        "stage3_prune": jnp.mean((lb3 > thr[:, None]).astype(jnp.float32)),
+        "pre_dp_prune": 1.0 - dp_pairs / (Nq * Nc),
+        "dp_pairs": dp_pairs,
+        "dp_abandoned": 0.0,
     }
     return nn, nnd, stats
 
@@ -562,8 +671,11 @@ def knn_cascade(Q: jnp.ndarray, index: CorpusIndex, *, impl: str = "auto",
     with an exact distance of a real candidate, so exactness is
     untouched; the bounds simply prune more.
 
-    Admissible bounds for the log-kernel recursion (K_rdtw) are an open
-    problem; this cascade covers the dissimilarity measures (dtw / spdtw).
+    Covers the dissimilarity measures (dtw / spdtw), univariate and
+    multivariate — (Nq, T, d) queries use the per-channel envelopes of a
+    multivariate index. The kernel measures (krdtw / sp_krdtw) run the
+    log-semiring twin ``_krdtw_knn_cascade`` (DESIGN.md §14), routed by
+    ``engine.knn``.
 
     Deprecated as a module-level entry: use ``engine.knn``.
     """

@@ -86,7 +86,7 @@ def tile_cost_row(x, y, w, t, *, S: int, d: int = 1):
 
 
 def tile_sweep(x, y, w, top_vec, left_vec, c_first, *, S: int, ri: int,
-               d: int = 1):
+               d: int = 1, thr=None):
     """Sweep one S x S tile of the SP-DTW DP for a batch of pairs.
 
     Pure jnp on values (no refs), so it is shared verbatim by the single-pair
@@ -99,6 +99,14 @@ def tile_sweep(x, y, w, top_vec, left_vec, c_first, *, S: int, ri: int,
     top_vec:   (bt, S) bottom edge of the tile above (+INF if inactive).
     left_vec:  (bt, S) right edge of the tile to the left (+INF if inactive).
     c_first:   (bt, 1) D value diagonally above-left of this tile's corner.
+    thr:       optional (bt, 1) per-pair PrunedDTW bound: after each row,
+               cells with D > thr are snapped to +INF. Cell costs are
+               non-negative, so D is non-decreasing along any path — a
+               cell above the bound can never feed a final value <= thr,
+               and pruning it leaves every value <= thr bit-identical
+               (Herrmann & Webb). Pruned cells stop propagating, so the
+               live [lo, hi) span of each DP row shrinks as descendants of
+               pruned cells die; thr=None (or +INF) is the exact sweep.
     Returns (d_last, rightcol, dri): the tile's bottom row, right column,
     and the row at in-tile index ``ri`` (global result-row capture).
     """
@@ -114,7 +122,10 @@ def tile_sweep(x, y, w, top_vec, left_vec, c_first, *, S: int, ri: int,
         # inject the left-tile boundary as a virtual D_{-1}
         u0 = jnp.minimum(u[:, 0:1], left_t + c[:, 0:1])
         u = jnp.concatenate([u0, u[:, 1:]], axis=1)
-        return jnp.minimum(_minplus_scan_lanes(u, c, S), INF)
+        out = jnp.minimum(_minplus_scan_lanes(u, c, S), INF)
+        if thr is not None:
+            out = jnp.where(out <= thr, out, INF)
+        return out
 
     d0 = row_update(0, top_vec, c_first, left_vec[:, 0:1])
 

@@ -181,7 +181,7 @@ def test_multivariate_end_to_end_knn_and_barycenter():
         -base[None] + 0.2 * rng.normal(size=(8, T, d))]).astype(np.float32)
     y = np.repeat([0, 1], 8)
     eng = fit(MeasureSpec("spdtw", gamma=0.1), X, labels=y, sp=sp)
-    assert eng.d == d and eng.index is None   # no univariate cascade
+    assert eng.d == d and eng.index is not None   # mv cascade index
     Q = (X[:4] + 0.05 * rng.normal(size=(4, T, d))).astype(np.float32)
     nn, dist = eng.knn(Q)
     dense = _dense_gram(Q, X, sp.weights)
