@@ -109,6 +109,27 @@ SCHEMAS: Dict[str, Dict] = {
              "nearest-centroid speedup below 2x"),
         ],
     },
+    "BENCH_serving.json": {
+        "required": ["backend", "corpus", "n_shards", "shard_balance",
+                     "exact", "scenarios"],
+        "checks": [
+            ("exact", lambda v: v is True,
+             "sharded top-1 must be bit-identical to the single-host "
+             "cascade"),
+            ("n_shards", lambda v: isinstance(v, int) and v >= 1,
+             "shard count must be a positive integer"),
+            ("shard_balance/pad_frac", lambda v: 0.0 <= v < 1.0,
+             "pad fraction out of [0, 1)"),
+            ("shard_balance/imbalance", lambda v: v >= 1.0,
+             "shard imbalance below 1 (max/mean is >= 1 by definition)"),
+            ("scenarios/*/throughput_qps", lambda v: v > 0,
+             "non-positive scenario throughput"),
+            ("scenarios/*/latency_ms/p50", lambda v: v >= 0,
+             "negative p50 latency"),
+            ("scenarios/*/latency_ms/p99", lambda v: v >= 0,
+             "negative p99 latency"),
+        ],
+    },
     "BENCH_softgrad.json": {
         "required": ["backend", "shapes", "e_parity_f64", "grad_rel_err_f32",
                      "min_bwd_speedup"],

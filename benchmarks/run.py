@@ -123,11 +123,16 @@ def main(argv=None):
                     help="tiny shapes, seconds not minutes (CI sanity)")
     ap.add_argument("--skip", default="",
                     help="comma-separated benches to skip")
+    ap.add_argument("--out", default=None,
+                    help="artifact directory override (CI points smoke "
+                         "runs here so the JSONs can be uploaded as "
+                         "workflow artifacts; default: artifacts/bench, "
+                         "or a fresh tempdir with --smoke)")
     args, _ = ap.parse_known_args(argv)
     fast = not args.full
     smoke = args.smoke
     skip = set(args.skip.split(",")) if args.skip else set()
-    art = ART
+    art = args.out if args.out is not None else ART
     if smoke and os.path.abspath(art) == os.path.abspath(_DEFAULT_ART):
         # repo hygiene: smoke artifacts never land in the tree (CI runs
         # must leave the checkout clean); monkeypatching ART redirects

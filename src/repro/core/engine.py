@@ -332,9 +332,37 @@ class SimilarityEngine:
 
     def with_corpus(self, corpus, labels=None) -> "SimilarityEngine":
         """Re-fit the corpus-dependent artifacts (index) on a new
-        candidate set, reusing the resolved support and plan."""
+        candidate set, reusing the resolved support and plan. Works on
+        corpus *shards* too: the index artifacts (envelopes, sketch) are
+        per-candidate rows, so fitting a shard equals slicing the full
+        index — ``shard`` exploits that equivalence without recompute."""
         return fit(self.spec, corpus, labels=labels, sp=self.sp,
                    bsp=self.bsp, T=self.T)
+
+    def shard(self, n_shards: int) -> Tuple["SimilarityEngine", ...]:
+        """Partition the fitted corpus state into contiguous row shards.
+
+        Returns ``n_shards`` engines (clamped to the corpus size), each
+        carrying a contiguous slice of the corpus, labels and per-corpus
+        index rows; the measure statics (support, weights, tile plan)
+        are shared by reference. Shard s covers global corpus rows
+        ``[offsets[s], offsets[s+1])`` with ``offsets`` as in
+        ``np.array_split`` — sizes differ by at most one. Slicing, not
+        re-fitting: envelopes and sketch rows are row-independent, so
+        each shard engine is bit-identical to ``with_corpus(shard)``
+        (tested). The mesh serving tier stacks these shards into one
+        pytree (``launch/shard_index.py``, DESIGN.md §15)."""
+        assert self.corpus is not None, "shard() needs a fitted corpus"
+        n = self.corpus_size
+        n_shards = max(1, min(int(n_shards), n))
+        out = []
+        for ids in np.array_split(np.arange(n), n_shards):
+            sel = slice(int(ids[0]), int(ids[-1]) + 1)
+            out.append(dataclasses.replace(
+                self, corpus=self.corpus[sel],
+                labels=None if self.labels is None else self.labels[sel],
+                index=None if self.index is None else self.index.take(sel)))
+        return tuple(out)
 
 
 def fit(spec: MeasureSpec, corpus=None, *, labels=None,

@@ -149,6 +149,27 @@ class CorpusIndex:
         """Number of indexed corpus series."""
         return int(self.corpus.shape[0])
 
+    def take(self, sel) -> "CorpusIndex":
+        """Candidate-sliced view of this index (the sharding primitive).
+
+        ``sel`` is any row selector (slice or integer array). The static
+        artifacts — weight grid, tile plan, support windows, endpoint
+        weights, kernel slacks — describe the *measure* and are shared
+        untouched; only the per-candidate rows (corpus, envelopes, and
+        the sketch matrix when present) are sliced. Because the
+        envelopes and sketches are computed row-independently, a sliced
+        index is bit-identical to rebuilding the index on the sliced
+        corpus — the invariant the sharded serving tier
+        (``launch/shard_index.py``, DESIGN.md §15) rests on.
+        """
+        sk = self.sketch
+        if sk is not None:
+            sk = dataclasses.replace(sk, sketch=sk.sketch[sel],
+                                     sq=sk.sq[sel])
+        return dataclasses.replace(
+            self, corpus=self.corpus[sel], env_lo=self.env_lo[sel],
+            env_hi=self.env_hi[sel], sketch=sk)
+
 
 def build_corpus_index(corpus: jnp.ndarray, weights,
                        kind: str = "spdtw",

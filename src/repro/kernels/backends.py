@@ -62,9 +62,15 @@ TRACED_WEIGHTS = "traced-weights"      # weight grid may be a jax Tracer
 ANCHOR_EMBED = "anchor-embed"          # batched series-vs-anchor Gram
 #                                        (the sketch tier's embedding,
 #                                        DESIGN.md §13)
+SHARDED = "sharded"                    # cascade runs fully traced under
+#                                        shard_map with early abandoning
+#                                        (the sharded serving tier,
+#                                        DESIGN.md §15); the dense oracle
+#                                        is host-only for serving
 
 CAPABILITIES = (DIFFERENTIABLE, MULTIVARIATE, MULTIVARIATE_GRAD,
-                EARLY_ABANDON, PRUNED_DP, TRACED_WEIGHTS, ANCHOR_EMBED)
+                EARLY_ABANDON, PRUNED_DP, TRACED_WEIGHTS, ANCHOR_EMBED,
+                SHARDED)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,14 +126,14 @@ register_backend(Backend(
 register_backend(Backend(
     name="scan",
     caps=frozenset({DIFFERENTIABLE, MULTIVARIATE, MULTIVARIATE_GRAD,
-                    EARLY_ABANDON, PRUNED_DP, ANCHOR_EMBED}),
+                    EARLY_ABANDON, PRUNED_DP, ANCHOR_EMBED, SHARDED}),
     fallback="dense",
     description="lax.scan over the active-tile schedule; CPU/GPU "
                 "production path, work scales with surviving tiles"))
 register_backend(Backend(
     name="pallas",
     caps=frozenset({DIFFERENTIABLE, MULTIVARIATE, EARLY_ABANDON,
-                    PRUNED_DP, ANCHOR_EMBED}),
+                    PRUNED_DP, ANCHOR_EMBED, SHARDED}),
     fallback="scan",
     description="fused Pallas kernels (compiled on TPU, interpret "
                 "elsewhere); the soft backward kernel is univariate, so "

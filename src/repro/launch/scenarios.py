@@ -1,0 +1,262 @@
+"""MLPerf-style serving scenarios over the sharded cascade
+(DESIGN.md §15) — the measurement harness for the serving tier.
+
+Modeled on MaxText's ``offline_inference.py``: one fitted engine, one
+sharded index, three load shapes with MLPerf-inference semantics, each
+measured with wall-clock latency percentiles rather than a single mean:
+
+  * **offline** — maximum throughput. All queries are available up
+    front, sorted by series length so every batch is shape-uniform
+    (one compiled cascade per shape; a no-op for fixed-T UCR corpora
+    but the batching rule the harness commits to), then drained in
+    full batches. Metric: throughput_qps.
+  * **server** — seeded Poisson arrivals and continuous batching. The
+    arrival process is drawn from ``MeasureSpec.seed`` (reproducible
+    traffic), the offered rate defaults to half the calibrated offline
+    capacity, and each step drains every query that has arrived by the
+    virtual clock (up to ``batch``). Metric: p50/p95/p99 of per-query
+    latency = completion − arrival.
+  * **single_stream** — one query in flight at a time (batch = 1,
+    sequential). Metric: per-query latency percentiles.
+
+Every run emits ``BENCH_serving.json`` (throughput, per-stage latency
+percentiles, shard-balance stats, and an ``exact`` flag asserting the
+sharded top-1 is bit-identical to the single-host cascade) which
+``benchmarks/check_artifacts.py`` schema-gates; CI runs ``--smoke`` on
+a forced 4-device CPU mesh and gates the artifact.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+      PYTHONPATH=src python -m repro.launch.scenarios --smoke \\
+      --shards 4 --out /tmp/bench-smoke
+  PYTHONPATH=src python -m repro.launch.scenarios --dataset CBF \\
+      --shards 2 --scenario server --rate 200
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import learn_sparse_paths
+from repro.launch.search import SearchEngine, _make_workload, _percentiles
+
+
+def _drain(engine: SearchEngine, queries: np.ndarray,
+           batch: int) -> np.ndarray:
+    """Serve ``queries`` in back-to-back full batches; returns nn ids."""
+    nn_all = []
+    for lo in range(0, len(queries), batch):
+        nn, _ = engine.search(queries[lo:lo + batch])
+        nn_all.append(nn)
+    return np.concatenate(nn_all)
+
+
+def offline_scenario(engine: SearchEngine, queries: np.ndarray,
+                     batch: int) -> Dict[str, float]:
+    """Max-throughput drain: sorted-length batching, full batches,
+    nothing waits on arrivals. The length sort keeps every batch
+    shape-uniform (one compiled cascade per shape)."""
+    order = np.argsort([q.shape[-1] for q in queries], kind="stable")
+    t0 = time.time()
+    _drain(engine, queries[order], batch)
+    wall = time.time() - t0
+    return {"n_queries": len(queries), "batch": batch, "wall_s": wall,
+            "throughput_qps": len(queries) / wall,
+            "latency_ms": _percentiles([wall / max(1, len(queries))] *
+                                       len(queries))}
+
+
+def server_scenario(engine: SearchEngine, queries: np.ndarray,
+                    batch: int, *, rate_qps: Optional[float] = None,
+                    seed: Optional[int] = None) -> Dict[str, float]:
+    """Poisson-arrival continuous batching with per-query latency.
+
+    Arrivals are an exponential inter-arrival process seeded from the
+    engine's ``MeasureSpec.seed`` (reproducible traffic; ``seed``
+    overrides). ``rate_qps=None`` calibrates the offered load to half
+    the measured offline capacity of one warm batch. A virtual clock
+    advances by each batch's measured service time; each step drains
+    every query that has arrived by then (up to ``batch``), and a
+    query's latency is its completion time minus its arrival time —
+    queueing delay included, which is what p99 is for.
+    """
+    n = len(queries)
+    if seed is None:
+        seed = engine.engine.spec.seed
+    rng = np.random.default_rng(seed)
+    # warm + calibrate: one measured batch gives the service capacity
+    t0 = time.time()
+    engine.search(queries[:batch])
+    svc = time.time() - t0
+    if rate_qps is None:
+        rate_qps = 0.5 * batch / max(svc, 1e-9)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_qps, size=n))
+    now = 0.0
+    served = 0
+    lat: List[float] = []
+    n_steps = 0
+    while served < n:
+        ready = int(np.searchsorted(arrivals, now, side="right"))
+        if ready == served:            # idle: jump to the next arrival
+            now = float(arrivals[served])
+            continue
+        take = min(batch, ready - served)
+        # fixed-slot continuous batching: pad the drain to the full
+        # batch shape so every step hits the one compiled cascade
+        # (variable shapes would recompile per step and the queueing
+        # tail would measure the compiler, not the server)
+        Qb = queries[served:served + take]
+        if take < batch:
+            Qb = np.concatenate(
+                [Qb, np.broadcast_to(Qb[-1:], (batch - take,)
+                                     + Qb.shape[1:])])
+        t0 = time.time()
+        engine.search(Qb)
+        now += time.time() - t0
+        lat.extend(now - arrivals[served:served + take])
+        served += take
+        n_steps += 1
+    return {"n_queries": n, "batch": batch, "rate_qps": float(rate_qps),
+            "seed": int(seed), "wall_s": float(now),
+            "throughput_qps": n / max(now, 1e-9),
+            "mean_batch": n / max(n_steps, 1),
+            "latency_ms": _percentiles(lat)}
+
+
+def single_stream_scenario(engine: SearchEngine,
+                           queries: np.ndarray) -> Dict[str, float]:
+    """One query in flight at a time: sequential batch-1 serving, the
+    per-query latency floor."""
+    lat: List[float] = []
+    t0 = time.time()
+    for q in queries:
+        t1 = time.time()
+        engine.search(q[None])
+        lat.append(time.time() - t1)
+    wall = time.time() - t0
+    return {"n_queries": len(queries), "batch": 1, "wall_s": wall,
+            "throughput_qps": len(queries) / wall,
+            "latency_ms": _percentiles(lat)}
+
+
+SCENARIOS = ("offline", "server", "single_stream")
+
+
+def run(dataset: str = "CBF", n_queries: int = 64, batch: int = 16,
+        shards: int = 2, scenario: str = "all", theta: float = 8.0,
+        n_train: int = 128, T: Optional[int] = None, impl: str = "auto",
+        seed: int = 0, rate_qps: Optional[float] = None,
+        n_sp_train: int = 32) -> dict:
+    """Fit one engine, shard it, drive the requested scenarios, and
+    return the ``BENCH_serving.json`` payload. The ``exact`` flag is
+    computed first: the sharded top-1 (ids and distances) must be
+    bit-identical to the single-host cascade over the full query set."""
+    from repro.data import load
+    kw = {} if T is None else {"T": T}
+    ds = load(dataset, n_train=n_train, **kw)
+    Xtr = jnp.asarray(ds.X_train)
+    sp = learn_sparse_paths(Xtr[:n_sp_train], theta=theta)
+    shards = max(1, min(shards, len(ds.X_train)))
+    engine = SearchEngine(Xtr, ds.y_train, sp=sp, impl=impl, seed=seed,
+                          shards=shards)
+    queries = _make_workload(ds, "retrieval", n_queries, seed)
+
+    # exactness gate: sharded vs single-host cascade, bit-identical
+    assert engine.sharded is not None
+    g_sh, d_sh = engine.sharded.knn(queries)
+    nn_one, d_one = engine.engine.knn(jnp.asarray(queries), impl=impl,
+                                      seed_k=engine.seed_k,
+                                      prefix_frac=engine.prefix_frac)
+    exact = bool(np.array_equal(np.asarray(g_sh), np.asarray(nn_one)) and
+                 np.array_equal(np.asarray(d_sh), np.asarray(d_one)))
+
+    wanted = SCENARIOS if scenario == "all" else (scenario,)
+    out_sc: Dict[str, dict] = {}
+    for name in wanted:
+        if name == "offline":
+            out_sc[name] = offline_scenario(engine, queries, batch)
+        elif name == "server":
+            out_sc[name] = server_scenario(engine, queries, batch,
+                                           rate_qps=rate_qps)
+        elif name == "single_stream":
+            out_sc[name] = single_stream_scenario(engine, queries)
+        else:
+            raise ValueError(f"unknown scenario {name!r}")
+    return {
+        "bench": "serving", "backend": jax.default_backend(),
+        "impl": impl, "dataset": dataset, "corpus": engine.index.size,
+        "T": int(ds.T), "n_queries": int(n_queries), "seed": int(seed),
+        "n_shards": engine.sharded.n_shards,
+        "shard_path": engine.sharded.path,
+        "shard_balance": engine.sharded.balance(),
+        "exact": exact,
+        "scenarios": out_sc,
+        "stats": engine.stats(),
+    }
+
+
+def main(argv=None):
+    """CLI entry: ``python -m repro.launch.scenarios [--smoke]
+    [--scenario all|offline|server|single_stream] ...`` — writes
+    ``BENCH_serving.json`` under ``--out`` (DESIGN.md §15)."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="CBF")
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--scenario", default="all",
+                    choices=("all",) + SCENARIOS)
+    ap.add_argument("--theta", type=float, default=8.0)
+    ap.add_argument("--impl", default="auto")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rate", type=float, default=None, dest="rate_qps",
+                    help="server-scenario offered load in qps (default: "
+                         "half the calibrated offline capacity)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for the CI gate (and a tempdir "
+                         "artifact unless --out is given)")
+    ap.add_argument("--out", default=None,
+                    help="artifact directory (default: repo root, or a "
+                         "fresh tempdir with --smoke)")
+    args = ap.parse_args(argv)
+    kw = dict(dataset=args.dataset, n_queries=args.queries,
+              batch=args.batch, shards=args.shards,
+              scenario=args.scenario, theta=args.theta, impl=args.impl,
+              seed=args.seed, rate_qps=args.rate_qps)
+    if args.smoke:
+        kw.update(n_queries=min(args.queries, 24), batch=min(args.batch, 8),
+                  n_train=48, T=32, n_sp_train=16,
+                  shards=max(1, min(args.shards, jax.device_count())))
+    out_dir = args.out
+    if out_dir is None:
+        if args.smoke:
+            import tempfile
+            out_dir = tempfile.mkdtemp(prefix="bench-serving-")
+        else:
+            out_dir = "."
+    res = run(**kw)
+    res["smoke"] = bool(args.smoke)
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "BENCH_serving.json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1, default=float)
+        f.write("\n")
+    print(json.dumps(res, indent=1, default=float))
+    print(f"wrote {path}")
+    for name, sc in res["scenarios"].items():
+        p = sc["latency_ms"]
+        print(f"{name:13s} {sc['throughput_qps']:9.1f} qps  "
+              f"p50={p['p50']:8.2f}ms p95={p['p95']:8.2f}ms "
+              f"p99={p['p99']:8.2f}ms")
+    if not res["exact"]:
+        raise SystemExit("sharded top-1 diverged from single-host cascade")
+
+
+if __name__ == "__main__":
+    main()

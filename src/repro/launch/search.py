@@ -45,8 +45,15 @@ _PCTS = (50, 95, 99)
 
 
 def _percentiles(samples: Sequence[float]) -> Dict[str, float]:
-    """p50/p95/p99 of a latency sample list, in milliseconds."""
+    """p50/p95/p99 of a latency sample list, in milliseconds.
+
+    Degenerate streams clamp instead of propagating NaN into the
+    serving artifacts: an empty sample list reports 0.0 at every
+    percentile (``np.percentile`` of an empty array is NaN), and a
+    single-element list reports that sample everywhere."""
     a = np.asarray(samples, np.float64) * 1e3
+    if a.size == 0:
+        return {f"p{p}": 0.0 for p in _PCTS}
     return {f"p{p}": float(np.percentile(a, p)) for p in _PCTS}
 
 
@@ -90,8 +97,10 @@ class SearchEngine:
                  seed_k: int = 2, prefix_frac: float = 0.5,
                  centroid_model=None, mode: str = "cascade",
                  engine=None, sketch_r: int = 16, top_c: int = 32,
-                 approx: bool = False, seed: int = 0):
+                 approx: bool = False, seed: int = 0, shards: int = 0):
         assert mode in ("cascade", "centroid", "sketch")
+        assert shards <= 1 or mode == "cascade", \
+            "sharded serving is the exact cascade tier (DESIGN.md §15)"
         if mode == "centroid":
             assert centroid_model is not None, \
                 "centroid mode needs a fitted cluster.CentroidModel"
@@ -123,6 +132,12 @@ class SearchEngine:
         self.prefix_frac = prefix_frac
         self.top_c = top_c
         self.approx = approx
+        self.sharded = None
+        if shards > 1:
+            from repro.launch.shard_index import ShardedSearch
+            self.sharded = ShardedSearch(engine, shards, impl=impl,
+                                         seed_k=seed_k,
+                                         prefix_frac=prefix_frac)
         keys = _SKETCH_STAT_KEYS if mode == "sketch" else _STAT_KEYS
         self._stats_acc: Dict[str, float] = {k: 0.0 for k in keys}
         self._lat: Dict[str, List[float]] = {}
@@ -157,6 +172,17 @@ class SearchEngine:
             self._pairs_total += n * self.index.size
             self._pairs_dp += n * self.centroid_model.k
             return idx, dist
+        if self.sharded is not None:
+            # sharded tier: per-shard cascade + global top-k merge
+            # (DESIGN.md §15) — per-stage prune counters live inside the
+            # shard_map trace, so only wall-clock is recorded here
+            nn, dist = self.sharded.knn(Q)
+            nn = np.asarray(jax.block_until_ready(nn))
+            dist = np.asarray(dist)
+            self._record_lat("total", time.time() - t0)
+            self._queries += n
+            self._pairs_total += n * self.index.size
+            return nn, dist
         if self.mode == "sketch":
             nn, dist, st = self.engine.knn(
                 Q, impl=self.impl, mode="sketch", top_c=self.top_c,
@@ -186,13 +212,21 @@ class SearchEngine:
         re-rank; every mode records the total)."""
         if self._queries == 0:
             return {}
-        out = {} if self.mode == "centroid" else \
-            {k: v / self._queries for k, v in self._stats_acc.items()}
+        if self.sharded is not None:
+            # per-stage prune counters live inside the shard_map trace;
+            # reporting the untouched accumulators would read as a
+            # broken cascade, so sharded serving reports the shard story
+            out: Dict[str, float] = {
+                "n_shards": self.sharded.n_shards,
+                "shard_balance": self.sharded.balance()}
+        else:
+            out = {} if self.mode == "centroid" else \
+                {k: v / self._queries for k, v in self._stats_acc.items()}
+            out["pairs_dp"] = self._pairs_dp
+            out["pre_dp_prune_overall"] = 1.0 - self._pairs_dp / max(
+                self._pairs_total, 1)
         out["queries"] = self._queries
         out["pairs_total"] = self._pairs_total
-        out["pairs_dp"] = self._pairs_dp
-        out["pre_dp_prune_overall"] = 1.0 - self._pairs_dp / max(
-            self._pairs_total, 1)
         out["latency_ms"] = {stage: _percentiles(v)
                              for stage, v in self._lat.items()}
         return out
@@ -274,7 +308,7 @@ def run(dataset: str = "CBF", workload: str = "retrieval",
         arrivals_per_step: Optional[int] = None, check: bool = False,
         n_train: int = 128, centroids: int = 0, gamma: float = 0.1,
         fit_steps: int = 60, T: Optional[int] = None, sketch_r: int = 0,
-        top_c: int = 32, approx: bool = False) -> dict:
+        top_c: int = 32, approx: bool = False, shards: int = 0) -> dict:
     """Build an engine over a synthetic-UCR corpus and stream a query
     workload through it; returns throughput / prune-rate / accuracy /
     latency-percentile metrics. ``sketch_r > 0`` serves through the
@@ -302,7 +336,8 @@ def run(dataset: str = "CBF", workload: str = "retrieval",
         ("centroid" if centroids > 0 else "cascade")
     engine = SearchEngine(Xtr, ds.y_train, sp=sp, impl=impl,
                           centroid_model=model, mode=mode, seed=seed,
-                          sketch_r=sketch_r, top_c=top_c, approx=approx)
+                          sketch_r=sketch_r, top_c=top_c, approx=approx,
+                          shards=shards)
     queries, truth = _make_workload(ds, workload, n_queries, seed,
                                     with_labels=True)
 
@@ -388,12 +423,17 @@ def main():
                     help="sketch shortlist size (the recall dial)")
     ap.add_argument("--approx", action="store_true",
                     help="skip the sketch re-rank (fastest, recall-bound)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="shard the corpus index over N mesh shards and "
+                         "serve through the sharded cascade + global "
+                         "top-k merge (0 = single-host; DESIGN.md §15)")
     args = ap.parse_args()
     out = run(args.dataset, args.workload, args.queries, args.batch,
               theta=args.theta, impl=args.impl,
               arrivals_per_step=args.arrivals, check=args.check,
               centroids=args.centroids, gamma=args.gamma,
-              sketch_r=args.sketch_r, top_c=args.top_c, approx=args.approx)
+              sketch_r=args.sketch_r, top_c=args.top_c, approx=args.approx,
+              shards=args.shards)
     print(json.dumps(out, indent=1, default=float))
     lat = out["stats"].get("latency_ms", {})
     for stage in ("embed", "shortlist", "rerank", "total"):

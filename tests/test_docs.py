@@ -33,6 +33,8 @@ API_MODULES = (
     "repro.classify.centroid",
     "repro.classify.crossval",
     "repro.launch.search",
+    "repro.launch.shard_index",
+    "repro.launch.scenarios",
 )
 
 # ---------------------------------------------------------------------------
@@ -75,6 +77,7 @@ ENGINE_SIGNATURES = {
     "barycenter": ("self", "X", "sample_weights", "init", "steps", "lr"),
     "fit_centroids": ("self", "n_per_class", "steps", "lr", "impl", "seed"),
     "with_corpus": ("self", "corpus", "labels"),
+    "shard": ("self", "n_shards"),
 }
 
 

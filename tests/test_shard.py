@@ -1,0 +1,176 @@
+"""Sharded-corpus serving tier (ISSUE 8, DESIGN.md §15).
+
+Acceptance contract: the tree-reduced global top-k over corpus shards
+is bit-identical to the single-host cascade — for shard counts 1/2/4,
+ragged shard sizes (the pad-to-row-0 scheme), and distance ties (the
+smallest-global-id merge rule must match ``argmin``'s first index).
+Also pinned: ``engine.shard`` slices are bit-identical to re-fitting
+``with_corpus`` on the slice (the invariant sharding rests on), and
+the dense oracle is rejected for serving (no SHARDED capability).
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import learn_sparse_paths
+from repro.core.engine import MeasureSpec, fit
+from repro.launch.shard_index import (ShardedSearch, merge_topk,
+                                      shard_corpus_state, shard_offsets)
+
+N_RAGGED = 23     # not divisible by 2 or 4: every split is ragged
+
+
+def _engine(N=N_RAGGED, T=32, seed=0, dup=None):
+    """Fitted spdtw engine over a seeded synthetic corpus; ``dup``
+    copies row dup[0] into row dup[1] to force an exact distance tie."""
+    rng = np.random.default_rng(seed)
+    C = rng.normal(size=(N, T)).astype(np.float32)
+    if dup is not None:
+        C[dup[1]] = C[dup[0]]
+    sp = learn_sparse_paths(jnp.asarray(C[:12]), theta=6.0)
+    return fit(MeasureSpec(family="spdtw", seed=seed), C, sp=sp,
+               impl="scan"), C
+
+
+def _queries(C, B=8, seed=1):
+    rng = np.random.default_rng(seed)
+    return (C[rng.integers(0, len(C), B)]
+            + 0.05 * rng.normal(size=(B, C.shape[1]))).astype(np.float32)
+
+
+# ----------------------------------------------------------- property test
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_sharded_topk_bit_identical_to_single_host(n_shards):
+    """Ragged shards, host path: merged global top-1 == cascade, bitwise
+    (both neighbour ids and distances)."""
+    eng, C = _engine()
+    Q = _queries(C)
+    nn0, d0 = eng.knn(jnp.asarray(Q), impl="scan")
+    sh = ShardedSearch(eng, n_shards, impl="scan", use_mesh=False)
+    g, d = sh.knn(Q)
+    assert np.array_equal(np.asarray(g), np.asarray(nn0))
+    assert np.array_equal(np.asarray(d), np.asarray(d0))
+
+
+def test_sharded_tie_breaks_by_corpus_index():
+    """An exact duplicate placed in a *later* shard must lose the tie:
+    the merge returns the smallest global id, like ``argmin``."""
+    eng, C = _engine(dup=(1, 20))          # rows 1 and 20 identical
+    Q = np.stack([C[1], C[20]])            # both queries hit the tie
+    for n_shards in (2, 4):
+        sh = ShardedSearch(eng, n_shards, impl="scan", use_mesh=False)
+        g, d = sh.knn(Q)
+        assert np.asarray(g).tolist() == [1, 1]
+        dense = np.asarray(eng.measure.cross(jnp.asarray(Q),
+                                             jnp.asarray(C)))
+        assert np.array_equal(np.asarray(g), dense.argmin(1))
+
+
+def test_mesh_path_matches_host_path():
+    """shard_map execution (however many devices this process has) is
+    bitwise identical to the eager host loop."""
+    S = min(4, jax.device_count())
+    eng, C = _engine()
+    Q = _queries(C)
+    host = ShardedSearch(eng, S, impl="scan", use_mesh=False)
+    mesh = ShardedSearch(eng, S, impl="scan", use_mesh=True)
+    assert mesh.path == "mesh" and host.path == "host"
+    gh, dh = host.knn(Q)
+    gm, dm = mesh.knn(Q)
+    assert np.array_equal(np.asarray(gm), np.asarray(gh))
+    assert np.array_equal(np.asarray(dm), np.asarray(dh))
+
+
+def test_sharded_topk_k3_matches_dense_argsort():
+    """k > 1 merged set == the dense Gram's k smallest per row (ids and
+    values; ids resolve ties ascending)."""
+    k = 3
+    eng, C = _engine()
+    Q = _queries(C)
+    dense = np.asarray(eng.measure.cross(jnp.asarray(Q), jnp.asarray(C)))
+    ids0 = np.argsort(dense, axis=1, kind="stable")[:, :k]
+    sh = ShardedSearch(eng, 4, k=k, impl="scan", use_mesh=False)
+    g, d = sh.knn(Q)
+    assert np.array_equal(np.asarray(g), ids0)
+    np.testing.assert_allclose(np.asarray(d),
+                               np.take_along_axis(dense, ids0, axis=1),
+                               rtol=1e-5)
+
+
+def test_merge_topk_lexicographic():
+    """Unit: merge == numpy lexicographic (dist, gid) sort, ties forced."""
+    rng = np.random.default_rng(0)
+    dists = rng.integers(0, 4, size=(5, 12)).astype(np.float32)  # many ties
+    gids = np.stack([rng.permutation(12) for _ in range(5)]).astype(np.int32)
+    g, d = merge_topk(jnp.asarray(dists), jnp.asarray(gids), 4)
+    for r in range(5):
+        order = np.lexsort((gids[r], dists[r]))[:4]
+        assert np.asarray(g)[r].tolist() == gids[r][order].tolist()
+        assert np.asarray(d)[r].tolist() == dists[r][order].tolist()
+
+
+# ----------------------------------------------------- layout invariants
+def test_engine_shard_bit_identical_to_with_corpus():
+    """Slicing the fitted index == re-fitting on the slice, bitwise
+    (corpus rows, envelopes, sketch rows) — the sharding invariant."""
+    spec = MeasureSpec(family="spdtw", seed=0, sketch_r=4)
+    rng = np.random.default_rng(0)
+    C = rng.normal(size=(N_RAGGED, 32)).astype(np.float32)
+    sp = learn_sparse_paths(jnp.asarray(C[:12]), theta=6.0)
+    eng = fit(spec, C, sp=sp, impl="scan")
+    offs = shard_offsets(N_RAGGED, 3)
+    for s, se in enumerate(eng.shard(3)):
+        ref = eng.with_corpus(C[int(offs[s]):int(offs[s + 1])])
+        for fld in ("corpus", "env_lo", "env_hi"):
+            assert np.array_equal(np.asarray(getattr(se.index, fld)),
+                                  np.asarray(getattr(ref.index, fld))), fld
+        assert np.array_equal(np.asarray(se.index.sketch.sketch),
+                              np.asarray(ref.index.sketch.sketch))
+
+
+def test_shard_corpus_state_pads_with_row0():
+    """Equal-block layout: ragged shards pad with global row 0 / gid 0,
+    offsets partition the corpus, balance() is consistent."""
+    eng, C = _engine()
+    shidx = shard_corpus_state(eng, 4)
+    assert shidx.n_total == N_RAGGED
+    assert shidx.offsets.tolist() == shard_offsets(N_RAGGED, 4).tolist()
+    for s in range(4):
+        sz = int(shidx.sizes[s])
+        gid = np.asarray(shidx.gid[s])
+        assert gid[:sz].tolist() == list(range(int(shidx.offsets[s]),
+                                               int(shidx.offsets[s + 1])))
+        assert (gid[sz:] == 0).all()
+        assert np.array_equal(np.asarray(shidx.corpus[s][sz:]),
+                              np.broadcast_to(C[0], (shidx.n_max - sz,)
+                                              + C[0].shape))
+    bal = shidx.balance()
+    assert bal["imbalance"] >= 1.0 and 0.0 <= bal["pad_frac"] < 1.0
+
+
+def test_dense_backend_rejected_for_serving():
+    """The dense oracle lacks the SHARDED capability and has no
+    fallback — serving through it must raise, not silently degrade."""
+    eng, _ = _engine(N=8)
+    with pytest.raises(ValueError, match="sharded"):
+        ShardedSearch(eng, 2, impl="dense", use_mesh=False)
+
+
+# ------------------------------------------------------- serving wiring
+def test_search_engine_shards_wiring():
+    """``SearchEngine(shards=2)`` serves through the sharded tier with
+    unchanged answers, and ``stats()`` reports the shard story instead
+    of the (untracked) per-stage prune counters."""
+    from repro.launch.search import SearchEngine
+    _, C = _engine()
+    labels = np.arange(len(C)) % 3
+    base = SearchEngine(C, labels, kind="spdtw", impl="scan")
+    shrd = SearchEngine(C, labels, kind="spdtw", impl="scan", shards=2)
+    Q = _queries(C)
+    nn0, d0 = base.search(Q)
+    nn1, d1 = shrd.search(Q)
+    assert np.array_equal(nn0, nn1) and np.array_equal(d0, d1)
+    st = shrd.stats()
+    assert st["n_shards"] == 2 and "total" in st["latency_ms"]
+    assert "pre_dp_prune_overall" not in st
