@@ -130,6 +130,32 @@ SCHEMAS: Dict[str, Dict] = {
              "negative p99 latency"),
         ],
     },
+    "BENCH_refresh.json": {
+        "required": ["backend", "corpus_initial", "corpus_final",
+                     "n_snapshots", "versions_monotone", "exact_final",
+                     "server", "server_refresh", "staleness"],
+        "checks": [
+            ("versions_monotone", lambda v: v is True,
+             "published snapshot versions must be monotone"),
+            ("exact_final", lambda v: v is True,
+             "final snapshot must answer bit-identically to a "
+             "from-scratch fit on the final corpus"),
+            ("n_snapshots",
+             lambda v: isinstance(v, int) and not isinstance(v, bool)
+             and v >= 1,
+             "snapshot count must be a positive integer"),
+            ("server/throughput_qps", lambda v: v > 0,
+             "non-positive baseline server throughput"),
+            ("server/latency_ms/p99", lambda v: v >= 0,
+             "negative baseline p99 latency"),
+            ("server_refresh/throughput_qps", lambda v: v > 0,
+             "non-positive under-refresh server throughput"),
+            ("server_refresh/latency_ms/p99", lambda v: v >= 0,
+             "negative under-refresh p99 latency"),
+            ("staleness/max_lag", lambda v: v >= 0,
+             "negative refresh lag"),
+        ],
+    },
     "BENCH_softgrad.json": {
         "required": ["backend", "shapes", "e_parity_f64", "grad_rel_err_f32",
                      "min_bwd_speedup"],

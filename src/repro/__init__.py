@@ -32,13 +32,13 @@ wrappers over the same execute bodies, kept bit-identical for
 back-compat.
 """
 from .core import (
-    ALL_MEASURES, BlockSparsePaths, CorpusIndex, Measure, MeasureSpec,
-    SimilarityEngine, SparsePaths, band_mask, block_sparsify,
-    build_corpus_index, default_tile, dtw, dtw_sc, engine_for, fit,
-    learn_sparse_paths, log_krdtw, log_krdtw_sc, log_sp_krdtw,
-    make_measure, normalize_grid, optimal_path_mask, pairwise,
-    pairwise_path_counts, soft_alignment, soft_dtw, soft_spdtw, soft_wdtw,
-    spdtw, spdtw_pairwise, wdtw,
+    ALL_MEASURES, BlockSparsePaths, CorpusIndex, EngineSnapshot, Measure,
+    MeasureSpec, SimilarityEngine, SnapshotStore, SparsePaths, band_mask,
+    block_sparsify, build_corpus_index, default_tile, dtw, dtw_sc,
+    engine_for, fit, learn_sparse_paths, log_krdtw, log_krdtw_sc,
+    log_sp_krdtw, make_measure, normalize_grid, optimal_path_mask,
+    pairwise, pairwise_path_counts, soft_alignment, soft_dtw, soft_spdtw,
+    soft_wdtw, spdtw, spdtw_pairwise, wdtw,
 )
 from .core import (
     SketchIndex, build_sketch_index, random_anchors, sketch_embed,
@@ -62,6 +62,8 @@ from .classify import (
 __all__ = [
     # fitted-engine API (the supported surface; DESIGN.md §12)
     "MeasureSpec", "SimilarityEngine", "engine_for", "fit",
+    # learner/actor snapshots (DESIGN.md §16)
+    "EngineSnapshot", "SnapshotStore",
     # backend registry
     "Backend", "available_backends", "resolve", "resolve_plan",
     # core: learned sparsification + measures

@@ -11,6 +11,7 @@ Public API:
   make_measure, Measure, CorpusIndex, ALL_MEASURES  (measures.py)
   MeasureSpec                                       (spec.py)
   fit, SimilarityEngine, engine_for                 (engine.py)
+  EngineSnapshot, SnapshotStore                     (snapshot.py)
   SketchIndex, random_anchors, sketch_embed, ...    (sketch.py)
 """
 from .dtw import (INF, band_cells, band_mask, dtw, dtw_matrix, dtw_sc,
@@ -32,5 +33,6 @@ from .measures import (ALL_MEASURES, CorpusIndex, Measure,
                        build_corpus_index, make_measure, pairwise)
 from .spec import MeasureSpec
 from .engine import SimilarityEngine, engine_for, fit
+from .snapshot import EngineSnapshot, SnapshotStore
 from .sketch import (SketchIndex, build_sketch_index, random_anchors,
                      sketch_embed, sketch_knn, sketch_shortlist)

@@ -83,7 +83,12 @@ class SimilarityEngine:
                       fit support-only);
       index           the per-corpus ``CorpusIndex`` of the lower-bound
                       cascade (univariate dissimilarity families only);
-      centroid_model  fitted ``cluster.CentroidModel`` (optional).
+      centroid_model  fitted ``cluster.CentroidModel`` (optional);
+      version         monotone refresh stamp of the learner/actor tier
+                      (DESIGN.md §16): 0 for a fresh ``fit``, bumped by
+                      ``with_corpus`` and restamped at publication by
+                      ``core.snapshot.SnapshotStore`` — serving actors
+                      report it so staleness is observable.
 
     All methods accept ``impl`` = "auto" | "pallas" | "scan" | "dense"
     (+ legacy "ref"), resolved by the capability walk in
@@ -99,6 +104,7 @@ class SimilarityEngine:
     labels: Optional[np.ndarray] = None
     index: Optional[CorpusIndex] = None
     centroid_model: Optional[object] = None
+    version: int = 0
 
     # ---- introspection ---------------------------------------------------
     @property
@@ -335,9 +341,18 @@ class SimilarityEngine:
         candidate set, reusing the resolved support and plan. Works on
         corpus *shards* too: the index artifacts (envelopes, sketch) are
         per-candidate rows, so fitting a shard equals slicing the full
-        index — ``shard`` exploits that equivalence without recompute."""
-        return fit(self.spec, corpus, labels=labels, sp=self.sp,
-                   bsp=self.bsp, T=self.T)
+        index — ``shard`` exploits that equivalence without recompute.
+
+        Deterministic rebuild: every stochastic artifact (sketch
+        anchors, and the corpus embedding against them) is keyed from
+        ``spec.seed``, so ``with_corpus(C)`` is bit-identical to a fresh
+        ``fit(spec, C, sp=..., bsp=...)`` on the same support — the
+        invariant the learner tier (DESIGN.md §16) republishes under.
+        The successor carries ``version + 1`` (monotone refresh lineage;
+        ``SnapshotStore.publish`` restamps at publication)."""
+        eng = fit(self.spec, corpus, labels=labels, sp=self.sp,
+                  bsp=self.bsp, T=self.T)
+        return dataclasses.replace(eng, version=self.version + 1)
 
     def shard(self, n_shards: int) -> Tuple["SimilarityEngine", ...]:
         """Partition the fitted corpus state into contiguous row shards.

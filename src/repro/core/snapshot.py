@@ -1,0 +1,128 @@
+"""Versioned engine snapshots: the learner/actor publication point
+(DESIGN.md §16).
+
+The serving tier through §15 answers from a *frozen* ``SimilarityEngine``
+— every exactness argument in the cascade (admissible bounds, strict
+abandoning, PrunedDTW clamping) assumes the corpus index it reads was
+built in one piece. Continuous fitting behind live serving therefore
+cannot mutate the serving engine: a query that observed half-refreshed
+envelopes next to an old corpus row would void every bound proof at
+once. This module is the seam that keeps the proofs intact:
+
+  * ``EngineSnapshot`` wraps one fully-built engine behind a
+    monotonically increasing integer ``version`` — the unit of
+    publication. A snapshot is immutable; nothing downstream of
+    ``publish`` can ever change it.
+  * ``SnapshotStore`` is the single handoff cell between one background
+    learner (writer) and any number of serving actors (readers).
+    ``publish`` builds the stamped snapshot *first* and then installs it
+    with one reference assignment — atomic under the interpreter, so a
+    concurrent reader sees either the old snapshot or the new one,
+    never a torn mix. ``current()`` is wait-free: one attribute read.
+
+Engines are plain frozen records whose array leaves are immutable
+device buffers, so snapshot publication costs one pointer swap
+regardless of corpus size — no copy, no serialization, no query-stream
+pause. The correctness contract ("every query answered during a refresh
+is bit-identical to one of the two adjacent snapshots, and versions are
+monotone") is property-tested across every possible swap point in
+``tests/test_learner.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import List, Optional
+
+from .engine import SimilarityEngine
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSnapshot:
+    """One published engine state: the unit the learner hands to actors.
+
+    engine:   a fully-fitted frozen ``SimilarityEngine`` (corpus, index,
+              sketch, centroid model all built before publication — a
+              snapshot is never under construction);
+    version:  monotonically increasing publication stamp, equal to
+              ``engine.version`` (the store enforces both);
+    step:     the learner step that produced this snapshot (0 for the
+              initial fit — lets the artifact report snapshot cadence).
+    """
+    engine: SimilarityEngine
+    version: int
+    step: int = 0
+
+    @property
+    def corpus_size(self) -> int:
+        """Number of corpus series in this snapshot's engine."""
+        return self.engine.corpus_size
+
+
+class SnapshotStore:
+    """Atomic, versioned publication cell between learner and actors.
+
+    One writer (the learner) calls ``publish``; any number of readers
+    (serving actors) call ``current``. The store owns the version
+    counter: every publication is restamped ``current.version + 1``, so
+    versions are monotone by construction no matter what version the
+    handed-in engine carries — a learner that raced itself or replayed
+    an old engine still cannot publish a stale stamp. A lock serializes
+    writers; readers never take it (the installed snapshot is one
+    reference, and reference assignment is atomic), so serving latency
+    is independent of refresh activity.
+
+    ``keep_history=True`` retains every published snapshot (including
+    the initial one) in ``history`` — the replay surface of the
+    snapshot-consistency test harness and of the refresh benchmark's
+    exactness check. Serving never reads it.
+    """
+
+    def __init__(self, engine: SimilarityEngine, *,
+                 keep_history: bool = False):
+        v = int(engine.version)
+        snap = EngineSnapshot(engine=engine, version=v, step=0)
+        self._lock = threading.Lock()
+        self._snap = snap
+        self._n_published = 0
+        self._keep_history = bool(keep_history)
+        self.history: List[EngineSnapshot] = [snap] if keep_history else []
+
+    @property
+    def version(self) -> int:
+        """Version stamp of the currently installed snapshot."""
+        return self._snap.version
+
+    @property
+    def n_published(self) -> int:
+        """Number of ``publish`` calls since construction (the initial
+        snapshot does not count)."""
+        return self._n_published
+
+    def current(self) -> EngineSnapshot:
+        """The installed snapshot — wait-free, never torn (a single
+        reference read; the snapshot behind it is immutable)."""
+        return self._snap
+
+    def publish(self, engine: SimilarityEngine, *,
+                step: Optional[int] = None) -> EngineSnapshot:
+        """Install ``engine`` as the next snapshot and return it.
+
+        The engine is restamped ``version = current.version + 1``
+        (monotone by construction) and wrapped *before* the swap; the
+        swap itself is one reference assignment, so readers racing this
+        call observe either the previous snapshot or the finished new
+        one. ``step`` defaults to the previous snapshot's step + 1.
+        """
+        with self._lock:
+            prev = self._snap
+            v = prev.version + 1
+            snap = EngineSnapshot(
+                engine=dataclasses.replace(engine, version=v),
+                version=v,
+                step=prev.step + 1 if step is None else int(step))
+            if self._keep_history:
+                self.history.append(snap)
+            self._n_published += 1
+            self._snap = snap          # the one atomic pointer swap
+        return snap

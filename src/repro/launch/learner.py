@@ -1,0 +1,259 @@
+"""Background learner: continuous fitting behind live serving
+(DESIGN.md §16).
+
+The apex-style learner/actor split: serving actors answer every query
+from a frozen ``SimilarityEngine`` snapshot while this learner consumes
+the arrival stream and produces the *next* snapshot off the serving
+path. One ``Learner.step`` is one refresh:
+
+  1. **Corpus growth** — the next mini-batch of arrivals is appended
+     and ``SimilarityEngine.with_corpus`` rebuilds every per-candidate
+     index artifact (LB_Keogh envelopes, kernel slacks, RWS sketch
+     rows) on the grown corpus. The rebuild is deterministic from
+     ``spec.seed`` — a refreshed sketch is bit-identical to a fresh
+     fit on the same support — so the §13 shortlist-coverage and
+     §4/§14 admissibility arguments hold for the new snapshot exactly
+     as they held for the initial one.
+  2. **Centroid refresh** — when the serving engine carries a
+     ``CentroidModel``, each centroid takes ``centroid_steps``
+     warm-started Adam steps of the soft-SP-DTW barycenter objective
+     (``cluster.barycenter.soft_barycenter``) over its arriving
+     members (grouped by label when the stream is labelled, by hard
+     nearest-centroid assignment otherwise). Mini-batch fitting, not a
+     from-scratch refit: the cost per refresh is bounded by the
+     arrival batch, not the corpus.
+  3. **Support-occupancy update** — optimal-path occupancy counts of
+     the arrival batch accumulate on the learner
+     (``core.occupancy.pairwise_path_counts``); every
+     ``support_every`` steps (opt-in) the support grid is re-learned
+     from the combined counts and the engine is re-fit from the spec —
+     the expensive, rare event, still off the serving path.
+  4. **Swap-on-converge** — only after the new engine is fully built
+     is it handed to ``core.snapshot.SnapshotStore.publish``: one
+     restamped, monotone-versioned pointer swap. Queries never wait
+     and never observe a half-built engine.
+
+Everything a step computes is a pure function of (initial engine,
+arrival stream, config), so a fixed seed reproduces the identical
+snapshot sequence — the property the test harness
+(``tests/test_learner.py``) pins bitwise. ``start()``/``stop()`` wrap
+the same ``step`` loop in a daemon thread for actually-concurrent
+refresh (the ``server+refresh`` scenario measures serving percentiles
+under it); the harness drives ``step`` synchronously instead to
+enumerate interleavings deterministically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import fit
+from repro.core.occupancy import learn_sparse_paths, pairwise_path_counts
+from repro.core.snapshot import EngineSnapshot, SnapshotStore
+
+
+class Learner:
+    """Consumes an arrival stream and publishes versioned engine
+    snapshots to a ``SnapshotStore`` (DESIGN.md §16).
+
+    store:          the publication cell shared with the serving actors
+                    (its current snapshot seeds the first refresh).
+    arrivals:       (Na, T[, d]) stream of arriving series, consumed in
+                    order, ``batch`` at a time.
+    labels:         optional (Na,) labels riding with the arrivals
+                    (required when the initial engine carries labels, so
+                    ``classify`` keeps working across refreshes).
+    batch:          arrivals consumed per ``step`` (the mini-batch).
+    centroid_steps: warm-started Adam steps per centroid refresh (0
+                    disables centroid refresh even when a model is fit).
+    lr:             Adam step size of the centroid refresh.
+    support_every:  re-learn the support grid from accumulated occupancy
+                    counts every N steps (None/0 disables — the default:
+                    support refresh changes the measure itself and is a
+                    deliberate, rare event).
+    impl:           backend for fitting-time evaluation.
+
+    ``step()`` is synchronous and deterministic; ``start()`` runs the
+    same loop in a background thread until the stream drains or
+    ``stop()`` is called. ``snapshots`` records every publication this
+    learner made (the reproducibility surface).
+    """
+
+    def __init__(self, store: SnapshotStore, arrivals, labels=None, *,
+                 batch: int = 8, centroid_steps: int = 4, lr: float = 0.05,
+                 support_every: Optional[int] = None, impl: str = "auto"):
+        self.store = store
+        self.arrivals = np.asarray(arrivals, np.float32)
+        self.labels = None if labels is None else np.asarray(labels)
+        if self.labels is not None:
+            assert len(self.labels) == len(self.arrivals), \
+                "arrival labels must match the arrival stream length"
+        base = store.current().engine
+        if base.labels is not None:
+            assert self.labels is not None, \
+                "the serving engine carries labels; the arrival stream " \
+                "must too (or classify would break on the first refresh)"
+        self.batch = int(batch)
+        assert self.batch > 0, "batch must be positive"
+        self.centroid_steps = int(centroid_steps)
+        self.lr = float(lr)
+        self.support_every = int(support_every) if support_every else 0
+        self.impl = impl
+        self.snapshots: List[EngineSnapshot] = []
+        self._pos = 0
+        self._step_i = 0
+        self._counts = None            # accumulated occupancy counts
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # ---- stream bookkeeping ----------------------------------------------
+    @property
+    def pending(self) -> int:
+        """Arrivals not yet consumed."""
+        return len(self.arrivals) - self._pos
+
+    @property
+    def exhausted(self) -> bool:
+        """True once the whole arrival stream has been consumed."""
+        return self._pos >= len(self.arrivals)
+
+    # ---- one refresh ------------------------------------------------------
+    def _refresh_centroids(self, model, batch: jnp.ndarray,
+                           batch_labels: Optional[np.ndarray]):
+        """Mini-batch centroid refresh: warm-started barycenter steps
+        per centroid over its arriving members (by label when the
+        stream is labelled, by hard nearest-centroid assignment
+        otherwise). Centroids with no arriving members are untouched."""
+        from repro.cluster import nearest_centroid
+        from repro.cluster.barycenter import soft_barycenter
+        if batch_labels is not None and model.labels is not None:
+            owner = np.asarray([
+                int(np.argmax(np.asarray(model.labels) == lab))
+                if (np.asarray(model.labels) == lab).any() else -1
+                for lab in batch_labels])
+        else:
+            idx, _ = nearest_centroid(batch, model, impl=self.impl)
+            owner = np.asarray(idx)
+        Z = np.asarray(model.centroids)
+        for c in range(model.k):
+            members = batch[jnp.asarray(np.nonzero(owner == c)[0])]
+            if members.shape[0] == 0:
+                continue
+            zc, _ = soft_barycenter(members, model.weights, model.gamma,
+                                    init=jnp.asarray(Z[c]),
+                                    steps=self.centroid_steps, lr=self.lr)
+            Z[c] = np.asarray(zc)
+        return dataclasses.replace(model, centroids=jnp.asarray(Z))
+
+    def step(self) -> Optional[EngineSnapshot]:
+        """Consume one arrival mini-batch, build the next engine, and
+        publish it. Returns the published snapshot, or None when the
+        stream is exhausted. Deterministic: the published engine is a
+        pure function of (current snapshot, consumed slice, config)."""
+        if self.exhausted:
+            return None
+        lo, hi = self._pos, min(self._pos + self.batch, len(self.arrivals))
+        self._pos = hi
+        self._step_i += 1
+        batch = jnp.asarray(self.arrivals[lo:hi])
+        blab = None if self.labels is None else self.labels[lo:hi]
+        base = self.store.current().engine
+        assert base.corpus is not None, \
+            "the learner refreshes a fitted corpus; fit one first"
+        corpus2 = jnp.concatenate([base.corpus, batch], axis=0)
+        labels2 = None
+        if base.labels is not None:
+            labels2 = np.concatenate([np.asarray(base.labels), blab])
+        # ---- support-occupancy update (accumulate; refresh when due) ----
+        refresh_support = False
+        if base.spec.support == "learned" and batch.shape[0] > 1:
+            c = pairwise_path_counts(batch)
+            self._counts = c if self._counts is None else self._counts + c
+            refresh_support = (self.support_every > 0 and
+                               self._step_i % self.support_every == 0)
+        if refresh_support:
+            # rare, deliberate: re-threshold the combined occupancy
+            # counts and re-fit from the spec (new support, new plan)
+            base_counts = base.sp.counts if base.sp is not None else 0.0
+            sp2 = learn_sparse_paths(
+                batch, theta=base.spec.theta, gamma=base.spec.weight_gamma,
+                counts=jnp.asarray(base_counts) + self._counts)
+            eng2 = fit(base.spec, corpus2, labels=labels2, sp=sp2,
+                       impl=self.impl)
+            eng2 = dataclasses.replace(eng2, version=base.version + 1)
+        else:
+            eng2 = base.with_corpus(corpus2, labels2)
+        # ---- mini-batch centroid refresh --------------------------------
+        if base.centroid_model is not None and self.centroid_steps > 0:
+            model = self._refresh_centroids(base.centroid_model, batch, blab)
+            eng2 = dataclasses.replace(eng2, centroid_model=model)
+        elif base.centroid_model is not None:
+            eng2 = dataclasses.replace(eng2,
+                                       centroid_model=base.centroid_model)
+        # ---- swap-on-converge: one atomic, restamped publication --------
+        snap = self.store.publish(eng2, step=self._step_i)
+        self.snapshots.append(snap)
+        return snap
+
+    def drain(self, max_steps: Optional[int] = None
+              ) -> List[EngineSnapshot]:
+        """Run ``step`` until the stream is exhausted (or ``max_steps``
+        publications happened); returns the snapshots published by this
+        call."""
+        out: List[EngineSnapshot] = []
+        while not self.exhausted:
+            if max_steps is not None and len(out) >= max_steps:
+                break
+            snap = self.step()
+            if snap is None:
+                break
+            out.append(snap)
+        return out
+
+    # ---- background (threaded) mode --------------------------------------
+    def start(self, interval_s: float = 0.0) -> None:
+        """Run the refresh loop in a daemon thread until the stream
+        drains or ``stop()`` is called; ``interval_s`` sleeps between
+        steps (0 = refresh as fast as fitting allows). Serving actors
+        keep answering from the store's current snapshot throughout —
+        publication is a pointer swap, so there is no query-stream
+        pause."""
+        assert self._thread is None, "learner already started"
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set() and not self.exhausted:
+                self.step()
+                if interval_s > 0:
+                    self._stop.wait(interval_s)
+
+        self._thread = threading.Thread(target=loop, name="repro-learner",
+                                        daemon=True)
+        self._thread.start()
+
+    def stop(self, timeout: float = 60.0) -> None:
+        """Signal the background loop to stop and join it. Idempotent;
+        a no-op when ``start`` was never called."""
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join(timeout)
+        assert not self._thread.is_alive(), "learner thread failed to stop"
+        self._thread = None
+
+    def join(self, timeout: float = 600.0) -> None:
+        """Wait for the background loop to drain the arrival stream
+        (it exits on its own once ``exhausted``)."""
+        if self._thread is None:
+            return
+        t0 = time.time()
+        while self._thread.is_alive() and not self.exhausted:
+            if time.time() - t0 > timeout:
+                raise TimeoutError("learner did not drain in time")
+            time.sleep(0.01)
+        self.stop(timeout=max(1.0, timeout - (time.time() - t0)))

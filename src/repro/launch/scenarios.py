@@ -19,17 +19,31 @@ measured with wall-clock latency percentiles rather than a single mean:
   * **single_stream** — one query in flight at a time (batch = 1,
     sequential). Metric: per-query latency percentiles.
 
+A fourth load shape, **server+refresh** (DESIGN.md §16), measures the
+learner/actor split: the server scenario runs twice at the same offered
+rate — once against a frozen engine, once with a background ``Learner``
+concurrently consuming an arrival stream and publishing versioned
+snapshots that serving adopts at batch boundaries. The delta between
+the two latency distributions is the cost of continuous fitting; the
+payload also reports snapshot cadence, staleness (refresh lag), version
+monotonicity, and an ``exact_final`` flag asserting the last published
+snapshot answers bit-identically to a from-scratch fit on the final
+corpus.
+
 Every run emits ``BENCH_serving.json`` (throughput, per-stage latency
 percentiles, shard-balance stats, and an ``exact`` flag asserting the
 sharded top-1 is bit-identical to the single-host cascade) which
-``benchmarks/check_artifacts.py`` schema-gates; CI runs ``--smoke`` on
-a forced 4-device CPU mesh and gates the artifact.
+``benchmarks/check_artifacts.py`` schema-gates; the refresh shape emits
+``BENCH_refresh.json`` instead, gated the same way. CI runs ``--smoke``
+on a forced 4-device CPU mesh and gates both artifacts.
 
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
       PYTHONPATH=src python -m repro.launch.scenarios --smoke \\
       --shards 4 --out /tmp/bench-smoke
   PYTHONPATH=src python -m repro.launch.scenarios --dataset CBF \\
       --shards 2 --scenario server --rate 200
+  PYTHONPATH=src python -m repro.launch.scenarios --smoke \\
+      --scenario server+refresh --out /tmp/bench-refresh
 """
 from __future__ import annotations
 
@@ -74,7 +88,8 @@ def offline_scenario(engine: SearchEngine, queries: np.ndarray,
 
 def server_scenario(engine: SearchEngine, queries: np.ndarray,
                     batch: int, *, rate_qps: Optional[float] = None,
-                    seed: Optional[int] = None) -> Dict[str, float]:
+                    seed: Optional[int] = None,
+                    on_step=None) -> Dict[str, float]:
     """Poisson-arrival continuous batching with per-query latency.
 
     Arrivals are an exponential inter-arrival process seeded from the
@@ -85,6 +100,11 @@ def server_scenario(engine: SearchEngine, queries: np.ndarray,
     every query that has arrived by then (up to ``batch``), and a
     query's latency is its completion time minus its arrival time —
     queueing delay included, which is what p99 is for.
+
+    ``on_step`` (optional) is called with the step index after each
+    served batch — the deterministic-interleaving hook the refresh
+    shape uses to step a learner synchronously between batches when it
+    is not running one in a background thread.
     """
     n = len(queries)
     if seed is None:
@@ -122,6 +142,8 @@ def server_scenario(engine: SearchEngine, queries: np.ndarray,
         lat.extend(now - arrivals[served:served + take])
         served += take
         n_steps += 1
+        if on_step is not None:
+            on_step(n_steps)
     return {"n_queries": n, "batch": batch, "rate_qps": float(rate_qps),
             "seed": int(seed), "wall_s": float(now),
             "throughput_qps": n / max(now, 1e-9),
@@ -201,17 +223,121 @@ def run(dataset: str = "CBF", n_queries: int = 64, batch: int = 16,
     }
 
 
+def refresh_run(dataset: str = "CBF", n_queries: int = 64,
+                batch: int = 16, theta: float = 8.0, n_train: int = 128,
+                T: Optional[int] = None, impl: str = "auto", seed: int = 0,
+                rate_qps: Optional[float] = None, n_sp_train: int = 32,
+                arrival_frac: float = 0.25, learner_batch: int = 8,
+                threaded: bool = True) -> dict:
+    """The ``server+refresh`` load shape (DESIGN.md §16): serving
+    percentiles with and without a concurrent background learner.
+
+    The training pool is split: the first ``1 - arrival_frac`` of it is
+    the initially-fitted corpus, the rest becomes the learner's arrival
+    stream (labels ride along). The server scenario then runs twice at
+    the *same* offered rate — first against the frozen initial engine
+    (the baseline the calibration comes from), then with a ``Learner``
+    publishing a new snapshot per consumed mini-batch while serving
+    adopts each one at the next batch boundary. ``threaded=True`` runs
+    the learner in its own thread (real concurrency, the no-pause
+    claim); ``threaded=False`` steps it synchronously between serving
+    steps via the ``on_step`` hook (deterministic, used by tests).
+
+    Returns the ``BENCH_refresh.json`` payload: both latency
+    distributions, snapshot count/cadence, staleness (refresh lag),
+    ``versions_monotone``, and ``exact_final`` — the last published
+    snapshot must answer the query set bit-identically to a
+    from-scratch fit on the final corpus (the invariant that makes the
+    whole refresh loop exact rather than approximate)."""
+    from repro.core.engine import fit
+    from repro.core.snapshot import SnapshotStore
+    from repro.data import load
+    from repro.launch.learner import Learner
+    kw = {} if T is None else {"T": T}
+    ds = load(dataset, n_train=n_train, **kw)
+    n_arr = max(1, int(len(ds.X_train) * arrival_frac))
+    n0 = len(ds.X_train) - n_arr
+    assert n0 >= 2, "arrival_frac leaves too small an initial corpus"
+    X0, Xarr = ds.X_train[:n0], ds.X_train[n0:]
+    y0, yarr = ds.y_train[:n0], ds.y_train[n0:]
+    sp = learn_sparse_paths(jnp.asarray(X0[:n_sp_train]), theta=theta)
+    queries = _make_workload(ds, "retrieval", n_queries, seed)
+
+    # pass 1: frozen engine — the baseline (also calibrates the rate)
+    base_engine = SearchEngine(jnp.asarray(X0), y0, sp=sp, impl=impl,
+                               seed=seed)
+    base = server_scenario(base_engine, queries, batch, rate_qps=rate_qps,
+                           seed=seed)
+
+    # pass 2: same initial engine behind a store, learner refreshing it
+    store = SnapshotStore(base_engine.engine, keep_history=True)
+    serve_engine = SearchEngine(None, engine=None, refresh=store, impl=impl)
+    learner = Learner(store, Xarr, labels=yarr, batch=learner_batch,
+                      impl=impl)
+    t0 = time.time()
+    if threaded:
+        learner.start()
+        refreshed = server_scenario(serve_engine, queries, batch,
+                                    rate_qps=base["rate_qps"], seed=seed)
+        learner.join()
+    else:
+        refreshed = server_scenario(
+            serve_engine, queries, batch, rate_qps=base["rate_qps"],
+            seed=seed, on_step=lambda i: learner.step())
+        learner.drain()
+    learner_wall = time.time() - t0
+    stats = serve_engine.stats()
+
+    versions = [s.version for s in store.history]
+    monotone = all(b == a + 1 for a, b in zip(versions, versions[1:]))
+
+    # exactness of the final snapshot: bit-identical answers to a
+    # from-scratch fit on the final corpus (same sp / bsp / T)
+    eng_f = store.current().engine
+    fresh = fit(eng_f.spec, eng_f.corpus, labels=eng_f.labels,
+                sp=eng_f.sp, bsp=eng_f.bsp, T=eng_f.T)
+    Q = jnp.asarray(queries)
+    nn_a, d_a = eng_f.knn(Q, impl=impl)
+    nn_b, d_b = fresh.knn(Q, impl=impl)
+    exact_final = bool(np.array_equal(np.asarray(nn_a), np.asarray(nn_b))
+                       and np.array_equal(np.asarray(d_a),
+                                          np.asarray(d_b)))
+
+    return {
+        "bench": "refresh", "backend": jax.default_backend(),
+        "impl": impl, "dataset": dataset, "T": int(ds.T),
+        "n_queries": int(n_queries), "seed": int(seed),
+        "threaded": bool(threaded),
+        "corpus_initial": int(n0), "corpus_final": int(eng_f.corpus_size),
+        "n_arrivals": int(n_arr), "learner_batch": int(learner_batch),
+        "n_snapshots": int(store.n_published),
+        "final_version": int(store.version),
+        "versions_monotone": bool(monotone),
+        "snapshot_cadence_s": learner_wall / max(store.n_published, 1),
+        "exact_final": exact_final,
+        "server": base, "server_refresh": refreshed,
+        "staleness": {
+            "published_version": int(store.version),
+            "served_version": int(stats.get("version", 0)),
+            "n_refreshes": int(stats["refresh"]["n_refreshes"]),
+            "mean_lag": float(stats["refresh"]["mean_lag"]),
+            "max_lag": int(stats["refresh"]["max_lag"]),
+        },
+    }
+
+
 def main(argv=None):
     """CLI entry: ``python -m repro.launch.scenarios [--smoke]
-    [--scenario all|offline|server|single_stream] ...`` — writes
-    ``BENCH_serving.json`` under ``--out`` (DESIGN.md §15)."""
+    [--scenario all|offline|server|single_stream|server+refresh] ...``
+    — writes ``BENCH_serving.json`` (or ``BENCH_refresh.json`` for the
+    refresh shape) under ``--out`` (DESIGN.md §15, §16)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="CBF")
     ap.add_argument("--queries", type=int, default=64)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--shards", type=int, default=2)
     ap.add_argument("--scenario", default="all",
-                    choices=("all",) + SCENARIOS)
+                    choices=("all",) + SCENARIOS + ("server+refresh",))
     ap.add_argument("--theta", type=float, default=8.0)
     ap.add_argument("--impl", default="auto")
     ap.add_argument("--seed", type=int, default=0)
@@ -225,14 +351,25 @@ def main(argv=None):
                     help="artifact directory (default: repo root, or a "
                          "fresh tempdir with --smoke)")
     args = ap.parse_args(argv)
-    kw = dict(dataset=args.dataset, n_queries=args.queries,
-              batch=args.batch, shards=args.shards,
-              scenario=args.scenario, theta=args.theta, impl=args.impl,
-              seed=args.seed, rate_qps=args.rate_qps)
-    if args.smoke:
-        kw.update(n_queries=min(args.queries, 24), batch=min(args.batch, 8),
-                  n_train=48, T=32, n_sp_train=16,
-                  shards=max(1, min(args.shards, jax.device_count())))
+    refresh = args.scenario == "server+refresh"
+    if refresh:
+        kw = dict(dataset=args.dataset, n_queries=args.queries,
+                  batch=args.batch, theta=args.theta, impl=args.impl,
+                  seed=args.seed, rate_qps=args.rate_qps)
+        if args.smoke:
+            kw.update(n_queries=min(args.queries, 24),
+                      batch=min(args.batch, 8), n_train=48, T=32,
+                      n_sp_train=16, learner_batch=4)
+    else:
+        kw = dict(dataset=args.dataset, n_queries=args.queries,
+                  batch=args.batch, shards=args.shards,
+                  scenario=args.scenario, theta=args.theta, impl=args.impl,
+                  seed=args.seed, rate_qps=args.rate_qps)
+        if args.smoke:
+            kw.update(n_queries=min(args.queries, 24),
+                      batch=min(args.batch, 8), n_train=48, T=32,
+                      n_sp_train=16,
+                      shards=max(1, min(args.shards, jax.device_count())))
     out_dir = args.out
     if out_dir is None:
         if args.smoke:
@@ -240,15 +377,32 @@ def main(argv=None):
             out_dir = tempfile.mkdtemp(prefix="bench-serving-")
         else:
             out_dir = "."
-    res = run(**kw)
+    res = refresh_run(**kw) if refresh else run(**kw)
     res["smoke"] = bool(args.smoke)
     os.makedirs(out_dir, exist_ok=True)
-    path = os.path.join(out_dir, "BENCH_serving.json")
+    name = "BENCH_refresh.json" if refresh else "BENCH_serving.json"
+    path = os.path.join(out_dir, name)
     with open(path, "w") as f:
         json.dump(res, f, indent=1, default=float)
         f.write("\n")
     print(json.dumps(res, indent=1, default=float))
     print(f"wrote {path}")
+    if refresh:
+        for name, sc in (("server", res["server"]),
+                         ("server+refresh", res["server_refresh"])):
+            p = sc["latency_ms"]
+            print(f"{name:15s} {sc['throughput_qps']:9.1f} qps  "
+                  f"p50={p['p50']:8.2f}ms p95={p['p95']:8.2f}ms "
+                  f"p99={p['p99']:8.2f}ms")
+        print(f"snapshots={res['n_snapshots']} "
+              f"cadence={res['snapshot_cadence_s']:.3f}s "
+              f"max_lag={res['staleness']['max_lag']}")
+        if not res["exact_final"]:
+            raise SystemExit("final snapshot diverged from a from-scratch "
+                             "fit on the final corpus")
+        if not res["versions_monotone"]:
+            raise SystemExit("published versions were not monotone")
+        return
     for name, sc in res["scenarios"].items():
         p = sc["latency_ms"]
         print(f"{name:13s} {sc['throughput_qps']:9.1f} qps  "

@@ -90,6 +90,14 @@ class SearchEngine:
     DP cost, exact whenever the shortlist covers the true neighbour.
     Every mode records per-batch, per-stage wall-clock; ``stats()``
     reports p50/p95/p99.
+
+    ``refresh`` accepts a ``core.snapshot.SnapshotStore`` (DESIGN.md
+    §16): before each batch the engine adopts the store's current
+    snapshot if a background learner published a newer one — one
+    wait-free read, swap at the batch boundary, so every query in a
+    batch is answered by exactly one fully-built snapshot. ``stats()``
+    then reports the serving ``version`` plus refresh lag (how far
+    serving trailed publication).
     """
 
     def __init__(self, corpus, labels=None, *, kind: str = "spdtw",
@@ -97,13 +105,16 @@ class SearchEngine:
                  seed_k: int = 2, prefix_frac: float = 0.5,
                  centroid_model=None, mode: str = "cascade",
                  engine=None, sketch_r: int = 16, top_c: int = 32,
-                 approx: bool = False, seed: int = 0, shards: int = 0):
+                 approx: bool = False, seed: int = 0, shards: int = 0,
+                 refresh=None):
         assert mode in ("cascade", "centroid", "sketch")
         assert shards <= 1 or mode == "cascade", \
             "sharded serving is the exact cascade tier (DESIGN.md §15)"
         if mode == "centroid":
             assert centroid_model is not None, \
                 "centroid mode needs a fitted cluster.CentroidModel"
+        if engine is None and refresh is not None:
+            engine = refresh.current().engine
         if engine is None:
             spec = MeasureSpec(family=kind, seed=seed,
                                sketch_r=sketch_r if mode == "sketch" else 0)
@@ -113,37 +124,79 @@ class SearchEngine:
                 engine.index.sketch is not None, \
                 "sketch mode needs an engine fit with sketch_r > 0"
         if centroid_model is not None:
-            import dataclasses as _dc
-            engine = _dc.replace(engine, centroid_model=centroid_model)
-        self.engine = engine
-        self.index = engine.index
+            engine = dataclasses.replace(engine,
+                                         centroid_model=centroid_model)
         self.mode = mode
-        self.centroid_model = engine.centroid_model
-        if mode == "centroid":
-            # unsupervised models (soft_kmeans) have labels=None: serve
-            # centroid ids with label=None rather than crashing the loop
-            self.labels = None if centroid_model.labels is None else \
-                np.asarray(centroid_model.labels)
-        else:
-            self.labels = None if engine.labels is None else \
-                np.asarray(engine.labels)
         self.impl = impl
         self.seed_k = seed_k
         self.prefix_frac = prefix_frac
         self.top_c = top_c
         self.approx = approx
+        self.shards = int(shards)
+        self.store = refresh
+        self._bind_engine(engine)
+        self.reset_stats()
+
+    def _bind_engine(self, engine) -> None:
+        """(Re)bind serving state to a fitted engine — the refresh seam.
+
+        Everything queries read (index, centroid model, label map,
+        sharded fan-out) is derived here from the one engine record, so
+        adopting a new snapshot between batches re-derives all of it
+        atomically from the serving loop's point of view: no query ever
+        sees a new corpus next to an old label map."""
+        self.engine = engine
+        self.index = engine.index
+        self.centroid_model = engine.centroid_model
+        if self.mode == "centroid":
+            # unsupervised models (soft_kmeans) have labels=None: serve
+            # centroid ids with label=None rather than crashing the loop
+            self.labels = None if engine.centroid_model.labels is None \
+                else np.asarray(engine.centroid_model.labels)
+        else:
+            self.labels = None if engine.labels is None else \
+                np.asarray(engine.labels)
         self.sharded = None
-        if shards > 1:
+        if self.shards > 1:
             from repro.launch.shard_index import ShardedSearch
-            self.sharded = ShardedSearch(engine, shards, impl=impl,
-                                         seed_k=seed_k,
-                                         prefix_frac=prefix_frac)
-        keys = _SKETCH_STAT_KEYS if mode == "sketch" else _STAT_KEYS
+            self.sharded = ShardedSearch(engine, self.shards,
+                                         impl=self.impl,
+                                         seed_k=self.seed_k,
+                                         prefix_frac=self.prefix_frac)
+
+    def _maybe_refresh(self) -> None:
+        """Adopt the store's current snapshot when a newer one has been
+        published (one wait-free ``current()`` read). Refresh lag — how
+        many publications serving trailed by when this batch arrived —
+        is recorded *before* the swap, so ``stats()`` reports the
+        staleness queries actually experienced."""
+        if self.store is None:
+            return
+        snap = self.store.current()
+        lag = int(snap.version) - int(self.engine.version)
+        self._lag_sum += max(lag, 0)
+        self._lag_max = max(self._lag_max, lag)
+        self._lag_n += 1
+        if lag > 0:
+            self._bind_engine(snap.engine)
+            self._n_refreshes += 1
+
+    def reset_stats(self) -> None:
+        """Zero every serving accumulator: prune counters, latency
+        samples, pair/query totals, refresh-lag bookkeeping. Call
+        between streams so each reports independent stats — without
+        this, a second ``stream_search`` pass folds the first pass's
+        counters into its rates and percentiles."""
+        keys = _SKETCH_STAT_KEYS if self.mode == "sketch" else _STAT_KEYS
         self._stats_acc: Dict[str, float] = {k: 0.0 for k in keys}
         self._lat: Dict[str, List[float]] = {}
         self._pairs_total = 0
         self._pairs_dp = 0
         self._queries = 0
+        self._n_refreshes = 0
+        self._lag_sum = 0
+        self._lag_max = 0
+        self._lag_n = 0
 
     def _record_lat(self, stage: str, seconds: float) -> None:
         self._lat.setdefault(stage, []).append(seconds)
@@ -159,6 +212,7 @@ class SearchEngine:
 
         In centroid mode ``nn_idx`` indexes the centroid set (k DPs per
         query, counted as such in the pair stats)."""
+        self._maybe_refresh()
         Q = jnp.asarray(queries, jnp.float32)
         n = Q.shape[0]
         t0 = time.time()
@@ -227,6 +281,13 @@ class SearchEngine:
                 self._pairs_total, 1)
         out["queries"] = self._queries
         out["pairs_total"] = self._pairs_total
+        out["version"] = int(self.engine.version)
+        if self.store is not None:
+            out["refresh"] = {
+                "published_version": int(self.store.version),
+                "n_refreshes": self._n_refreshes,
+                "mean_lag": self._lag_sum / max(self._lag_n, 1),
+                "max_lag": int(self._lag_max)}
         out["latency_ms"] = {stage: _percentiles(v)
                              for stage, v in self._lat.items()}
         return out

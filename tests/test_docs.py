@@ -18,6 +18,7 @@ ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 API_MODULES = (
     "repro.core.spec",
     "repro.core.engine",
+    "repro.core.snapshot",
     "repro.core.measures",
     "repro.core.sketch",
     "repro.core.softdtw",
@@ -35,6 +36,7 @@ API_MODULES = (
     "repro.launch.search",
     "repro.launch.shard_index",
     "repro.launch.scenarios",
+    "repro.launch.learner",
 )
 
 # ---------------------------------------------------------------------------
@@ -45,9 +47,9 @@ API_MODULES = (
 
 EXPECTED_ALL = [
     "ALL_MEASURES", "Backend", "BlockSparsePaths", "CentroidModel",
-    "CorpusIndex", "Measure", "MeasureSpec", "SimilarityEngine",
-    "SketchIndex", "SparsePaths", "available_backends", "band_mask",
-    "block_sparsify",
+    "CorpusIndex", "EngineSnapshot", "Measure", "MeasureSpec",
+    "SimilarityEngine", "SketchIndex", "SnapshotStore", "SparsePaths",
+    "available_backends", "band_mask", "block_sparsify",
     "build_corpus_index", "build_sketch_index", "centroid_error_series",
     "default_tile", "dtw", "dtw_gram", "dtw_pairs", "dtw_sc", "engine_for",
     "fit", "fit_class_centroids", "knn_cascade", "knn_error",

@@ -268,3 +268,51 @@ def test_with_corpus_rebuilds_index_and_sketch():
     nn_s, d_s = eng2.knn(Q, mode="sketch", top_c=len(keep))
     assert np.array_equal(np.asarray(nn_s), np.asarray(nn2))
     assert np.array_equal(np.asarray(d_s), np.asarray(d2))
+
+
+# ------------------------------------------- rebuild determinism (ISSUE 9)
+@pytest.mark.parametrize("spec_kw,shape", [
+    (dict(family="spdtw", sketch_r=6), (12, 48)),
+    (dict(family="krdtw", nu=0.5), (12, 48)),
+    (dict(family="sp_krdtw", nu=0.5, sketch_r=6), (12, 48)),
+    (dict(family="spdtw"), (12, 48, 3)),
+], ids=["spdtw+sketch", "krdtw", "sp_krdtw+sketch", "spdtw-multivariate"])
+def test_with_corpus_bit_identical_to_fresh_fit(spec_kw, shape):
+    """The invariant the background learner rests on (DESIGN.md §16):
+    ``with_corpus`` on a grown corpus is bit-identical to a fresh
+    ``fit`` on the same spec seed and support — every per-candidate
+    index artifact (envelopes, kernel slacks, sketch rows) and every
+    query answer. Covers the kernel and multivariate index paths, whose
+    per-candidate state goes beyond the univariate envelopes."""
+    rng = np.random.default_rng(5)
+    X = rng.normal(size=shape).astype(np.float32)
+    grown = np.concatenate(
+        [X, rng.normal(size=(4,) + shape[1:]).astype(np.float32)])
+    Q = jnp.asarray(rng.normal(size=(5,) + shape[1:]).astype(np.float32))
+    sp = learn_sparse_paths(jnp.asarray(X[:8]), theta=6.0)
+    eng = fit(MeasureSpec(seed=4, **spec_kw), X, sp=sp, impl="scan")
+    eng2 = eng.with_corpus(grown)
+    fresh = fit(eng.spec, grown, sp=eng.sp, bsp=eng.bsp, T=eng.T,
+                impl="scan")
+    assert eng2.version == eng.version + 1
+    ia, ib = eng2.index, fresh.index
+    for fld in ("corpus", "env_lo", "env_hi", "log_s1", "log_s2"):
+        a, b = getattr(ia, fld), getattr(ib, fld)
+        assert (a is None) == (b is None), fld
+        if a is not None:
+            assert np.array_equal(np.asarray(a), np.asarray(b)), fld
+    assert (ia.sketch is None) == (ib.sketch is None)
+    if ia.sketch is not None:
+        assert np.array_equal(np.asarray(ia.sketch.anchors),
+                              np.asarray(ib.sketch.anchors))
+        assert np.array_equal(np.asarray(ia.sketch.sketch),
+                              np.asarray(ib.sketch.sketch))
+    nn_a, d_a = eng2.knn(Q, impl="scan")
+    nn_b, d_b = fresh.knn(Q, impl="scan")
+    assert np.array_equal(np.asarray(nn_a), np.asarray(nn_b))
+    assert np.array_equal(np.asarray(d_a), np.asarray(d_b))
+    if ia.sketch is not None:
+        nn_s, d_s = eng2.knn(Q, impl="scan", mode="sketch", top_c=4)
+        nn_t, d_t = fresh.knn(Q, impl="scan", mode="sketch", top_c=4)
+        assert np.array_equal(np.asarray(nn_s), np.asarray(nn_t))
+        assert np.array_equal(np.asarray(d_s), np.asarray(d_t))

@@ -1,0 +1,236 @@
+"""Learner/actor split: snapshot-consistency test harness (ISSUE 9).
+
+The correctness contract of continuous fitting behind live serving
+(DESIGN.md §16), pinned bitwise:
+
+  * ``SnapshotStore`` publication is monotone and restamped — no input
+    engine, however stale its own version stamp, can publish backwards.
+  * The learner's snapshot sequence is a pure function of (initial
+    engine, arrival stream, config): same seed, identical snapshots,
+    bit for bit.
+  * **Every possible swap point**: a seeded arrival stream is replayed
+    against every (first swap, second swap) position in a query
+    stream, and each query's answer must be bit-identical to the
+    answer of the snapshot published when it was served — i.e. to one
+    of the two snapshots adjacent to the swap, never a torn mix.
+  * The same holds under a real background thread (smoke), and the
+    ``server+refresh`` scenario emits a schema-valid
+    ``BENCH_refresh.json`` whose exactness flag is true.
+"""
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.check_artifacts import check_file
+from repro.core import MeasureSpec, SnapshotStore, fit, learn_sparse_paths
+from repro.launch.learner import Learner
+from repro.launch.search import SearchEngine
+
+_N0, _NA, _T, _LB, _NQ = 14, 8, 24, 4, 6     # corpus/arrivals/len/batch/queries
+
+
+def _knn(engine, Q):
+    nn, d = engine.knn(jnp.asarray(Q), impl="scan")
+    return np.asarray(nn), np.asarray(d)
+
+
+@pytest.fixture(scope="module")
+def world():
+    """One seeded universe shared by the harness tests: an initial
+    engine, an arrival stream, a query set, the reference snapshot
+    sequence (initial + one per learner step), and each snapshot's
+    bit-exact answers to the query set."""
+    rng = np.random.default_rng(7)
+    X = rng.normal(size=(_N0 + _NA, _T)).astype(np.float32)
+    Q = rng.normal(size=(_NQ, _T)).astype(np.float32)
+    sp = learn_sparse_paths(jnp.asarray(X[:8]), theta=6.0)
+    base = fit(MeasureSpec("spdtw", seed=3), jnp.asarray(X[:_N0]), sp=sp,
+               impl="scan")
+    store = SnapshotStore(base, keep_history=True)
+    Learner(store, X[_N0:], batch=_LB, impl="scan").drain()
+    answers = {s.version: _knn(s.engine, Q) for s in store.history}
+    return dict(X=X, Q=Q, base=base, history=store.history,
+                answers=answers)
+
+
+# --------------------------------------------------------- SnapshotStore
+def test_snapshot_store_restamps_monotone(world):
+    """Every publication is restamped current+1 — even an engine
+    carrying a stale or inflated version stamp cannot publish
+    backwards; the snapshot and its engine always agree."""
+    base = world["base"]
+    store = SnapshotStore(base, keep_history=True)
+    assert store.version == 0 and store.n_published == 0
+    stale = dataclasses.replace(base, version=99)
+    for expect in (1, 2, 3):
+        snap = store.publish(stale)
+        assert snap.version == expect
+        assert int(snap.engine.version) == expect
+        assert store.current() is snap
+    assert store.n_published == 3
+    assert [s.version for s in store.history] == [0, 1, 2, 3]
+
+
+def test_snapshot_store_current_is_wait_free_identity(world):
+    """``current()`` returns the installed snapshot object itself (one
+    reference read, nothing constructed per call) and publication never
+    mutates a previously returned snapshot."""
+    store = SnapshotStore(world["base"])
+    before = store.current()
+    assert store.current() is before
+    store.publish(world["base"])
+    assert before.version == 0            # old snapshot untouched
+    assert store.current().version == 1
+
+
+# ------------------------------------------------- learner determinism
+def test_learner_snapshot_sequence_is_seed_deterministic(world):
+    """Replaying the same arrival stream from the same initial engine
+    reproduces the reference snapshot sequence bit for bit — corpus,
+    envelopes, and sketchless index artifacts alike. The swap-point
+    harness below leans on this to precompute per-version answers."""
+    X = world["X"]
+    store = SnapshotStore(world["base"], keep_history=True)
+    Learner(store, X[_N0:], batch=_LB, impl="scan").drain()
+    ref = world["history"]
+    assert [s.version for s in store.history] == [s.version for s in ref]
+    for got, want in zip(store.history, ref):
+        assert got.corpus_size == want.corpus_size
+        ia, ib = got.engine.index, want.engine.index
+        for field in ("corpus", "env_lo", "env_hi"):
+            a, b = getattr(ia, field), getattr(ib, field)
+            assert a is b or np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_learner_versions_monotone_and_exhaustion(world):
+    """Versions climb by exactly one per step; a drained learner's
+    ``step`` is a no-op returning None."""
+    versions = [s.version for s in world["history"]]
+    assert versions == list(range(len(versions)))
+    lr = Learner(SnapshotStore(world["base"]), world["X"][_N0:],
+                 batch=_LB, impl="scan")
+    lr.drain()
+    assert lr.exhausted and lr.pending == 0
+    assert lr.step() is None
+
+
+# --------------------------------------- every-swap-point replay harness
+def test_every_swap_point_answers_bit_identical(world):
+    """The headline property. The query stream is served one query at a
+    time while the learner's two steps are injected before positions
+    (i, j) for **every** 0 <= i <= j < n_queries (i == j publishes
+    twice back to back). At each replay, every query's answer must be
+    bit-identical to the precomputed answer of the snapshot that was
+    published when it was served — one of the two snapshots adjacent
+    to the swap — and the served version sequence must be monotone."""
+    X, Q, answers = world["X"], world["Q"], world["answers"]
+    for i in range(_NQ):
+        for j in range(i, _NQ):
+            store = SnapshotStore(world["base"])
+            serve = SearchEngine(None, refresh=store, impl="scan")
+            lr = Learner(store, X[_N0:], batch=_LB, impl="scan")
+            served_versions = []
+            for q in range(_NQ):
+                if q == i:
+                    lr.step()
+                if q == j:
+                    lr.step()
+                nn, d = serve.search(Q[q:q + 1])
+                v = int(serve.engine.version)
+                served_versions.append(v)
+                want_nn, want_d = answers[v]
+                assert nn[0] == want_nn[q], (i, j, q, v)
+                assert d[0] == want_d[q], (i, j, q, v)
+            assert served_versions == sorted(served_versions), (i, j)
+            assert served_versions[-1] == store.version
+
+
+def test_refresh_lag_recorded_before_swap(world):
+    """Serving stats report the staleness queries actually saw: two
+    publications between batches show up as lag 2 on the next batch,
+    then the engine catches up and lag returns to 0."""
+    store = SnapshotStore(world["base"])
+    serve = SearchEngine(None, refresh=store, impl="scan")
+    lr = Learner(store, world["X"][_N0:], batch=_LB, impl="scan")
+    serve.search(world["Q"][:2])
+    lr.step()
+    lr.step()
+    serve.search(world["Q"][:2])
+    st = serve.stats()
+    assert st["version"] == 2
+    assert st["refresh"]["n_refreshes"] == 1
+    assert st["refresh"]["max_lag"] == 2
+    serve.reset_stats()
+    serve.search(world["Q"][:2])
+    st2 = serve.stats()
+    assert st2["refresh"]["n_refreshes"] == 0
+    assert st2["refresh"]["max_lag"] == 0
+
+
+# ------------------------------------------------------- threaded smoke
+def test_threaded_learner_answers_match_some_snapshot(world):
+    """Real concurrency: with the learner free-running in its own
+    thread, every batch served is still answered bit-identically by
+    whichever published snapshot the engine had adopted — determinism
+    of the snapshot sequence means the precomputed per-version answers
+    cover every possible interleaving."""
+    X, Q, answers = world["X"], world["Q"], world["answers"]
+    store = SnapshotStore(world["base"], keep_history=True)
+    serve = SearchEngine(None, refresh=store, impl="scan")
+    lr = Learner(store, X[_N0:], batch=_LB, impl="scan")
+    lr.start(interval_s=0.002)
+    try:
+        for q in range(_NQ):
+            nn, d = serve.search(Q[q:q + 1])
+            v = int(serve.engine.version)
+            want_nn, want_d = answers[v]
+            assert nn[0] == want_nn[q] and d[0] == want_d[q]
+        lr.join()
+    finally:
+        lr.stop()
+    assert store.version == len(world["history"]) - 1
+    assert [s.version for s in store.history] == \
+        [s.version for s in world["history"]]
+
+
+# ------------------------------------------- scenario payload + CI gate
+@pytest.fixture(scope="module")
+def refresh_payload():
+    """One tiny synchronous ``server+refresh`` run shared by the
+    payload/schema tests (threaded=False: the deterministic on_step
+    interleaving; the threaded path is exercised above and by the CI
+    smoke)."""
+    from repro.launch import scenarios
+    return scenarios.refresh_run(dataset="CBF", n_queries=8, batch=4,
+                                 n_train=20, T=24, n_sp_train=10,
+                                 impl="scan", seed=3, learner_batch=3,
+                                 rate_qps=500.0, threaded=False)
+
+
+def test_refresh_payload_exact_and_monotone(refresh_payload):
+    p = refresh_payload
+    assert p["bench"] == "refresh"
+    assert p["versions_monotone"] is True
+    assert p["exact_final"] is True
+    assert p["n_snapshots"] >= 1
+    assert p["corpus_final"] == p["corpus_initial"] + p["n_arrivals"]
+    assert p["staleness"]["max_lag"] >= 0
+    for key in ("server", "server_refresh"):
+        assert p[key]["throughput_qps"] > 0
+        assert all(np.isfinite(v) for v in p[key]["latency_ms"].values())
+
+
+def test_refresh_artifact_passes_schema_gate(refresh_payload, tmp_path):
+    path = tmp_path / "BENCH_refresh.json"
+    path.write_text(json.dumps(refresh_payload, default=float))
+    assert check_file(str(path)) == []
+
+
+def test_refresh_schema_rejects_inexact(refresh_payload, tmp_path):
+    bad = dict(refresh_payload, exact_final=False)
+    path = tmp_path / "BENCH_refresh.json"
+    path.write_text(json.dumps(bad, default=float))
+    assert any("from-scratch" in e for e in check_file(str(path)))

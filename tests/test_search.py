@@ -122,6 +122,38 @@ def test_search_engine_stream_matches_batch():
     assert all(r.label == int(ds.y_train[r.nn]) for r in results)
 
 
+def test_search_engine_reset_stats_no_carryover():
+    """Counter-carryover regression (ISSUE 9): two identical streams
+    separated by ``reset_stats()`` must report identical stats — the
+    accumulators (prune counters, latency lists, pair/query totals)
+    start from zero each time instead of folding the first stream's
+    counts into the second's rates."""
+    from repro.launch.search import SearchEngine, stream_search
+    ds, Xtr, sp = _setup(n_test=9)
+    engine = SearchEngine(Xtr, ds.y_train, sp=sp, impl="ref")
+    queries = [ds.X_test[i] for i in range(9)]
+
+    def one_stream():
+        results = stream_search(engine, queries, batch=4,
+                                arrivals_per_step=3)
+        st = engine.stats()
+        return results, st
+
+    r1, st1 = one_stream()
+    # without a reset the second stream would double every counter
+    assert st1["queries"] == 9
+    engine.reset_stats()
+    assert engine.stats() == {}            # fully zeroed, not partially
+    r2, st2 = one_stream()
+    assert [r.nn for r in r1] == [r.nn for r in r2]
+    assert st2["queries"] == 9
+    for key in ("queries", "pairs_total", "pairs_dp",
+                "pre_dp_prune_overall", "stage1_prune", "dp_abandoned"):
+        assert st1[key] == st2[key], key
+    # latency lists restart too: same sample count, not doubled
+    assert st1["latency_ms"].keys() == st2["latency_ms"].keys()
+
+
 def test_search_driver_end_to_end_exact():
     from repro.launch.search import run
     out = run(dataset="CBF", workload="retrieval", n_queries=8, batch=4,

@@ -149,6 +149,70 @@ def test_shard_corpus_state_pads_with_row0():
     assert bal["imbalance"] >= 1.0 and 0.0 <= bal["pad_frac"] < 1.0
 
 
+def _assert_index_bitwise(got, want):
+    """Per-candidate index rows (corpus, envelopes, sketch) bitwise."""
+    for fld in ("corpus", "env_lo", "env_hi"):
+        assert np.array_equal(np.asarray(getattr(got, fld)),
+                              np.asarray(getattr(want, fld))), fld
+    assert (got.sketch is None) == (want.sketch is None)
+    if got.sketch is not None:
+        assert np.array_equal(np.asarray(got.sketch.sketch),
+                              np.asarray(want.sketch.sketch))
+        assert np.array_equal(np.asarray(got.sketch.sq),
+                              np.asarray(want.sketch.sq))
+
+
+def test_take_single_row_corpus_matches_refit():
+    """N = 1 edge: a one-row corpus still fits, shards (clamped to one
+    shard), and slices bit-identically to re-fitting on the row."""
+    rng = np.random.default_rng(2)
+    Xsp = rng.normal(size=(10, 32)).astype(np.float32)
+    C = rng.normal(size=(1, 32)).astype(np.float32)
+    sp = learn_sparse_paths(jnp.asarray(Xsp), theta=6.0)
+    eng = fit(MeasureSpec(family="spdtw", seed=2, sketch_r=4), C, sp=sp,
+              impl="scan")
+    shards = eng.shard(3)
+    assert len(shards) == 1                      # clamped to corpus size
+    _assert_index_bitwise(shards[0].index,
+                          eng.with_corpus(C).index)
+    _assert_index_bitwise(eng.index.take(slice(0, 1)),
+                          eng.with_corpus(C).index)
+
+
+def test_shard_count_exceeding_corpus_clamps_and_stays_exact():
+    """More shards than rows: ``shard`` clamps to one row per shard,
+    each bit-identical to a re-fit on its row, and the serving tier
+    still merges to the single-host answer bitwise."""
+    eng, C = _engine(N=5)
+    shards = eng.shard(8)
+    assert len(shards) == 5
+    for s, se in enumerate(shards):
+        assert se.corpus_size == 1
+        _assert_index_bitwise(se.index,
+                              eng.with_corpus(C[s:s + 1]).index)
+    Q = _queries(C, B=4)
+    nn0, d0 = eng.knn(jnp.asarray(Q), impl="scan")
+    sh = ShardedSearch(eng, 8, impl="scan", use_mesh=False)
+    assert sh.n_shards == 5
+    g, d = sh.knn(Q)
+    assert np.array_equal(np.asarray(g), np.asarray(nn0))
+    assert np.array_equal(np.asarray(d), np.asarray(d0))
+
+
+def test_take_with_repeated_indices_matches_refit():
+    """Gather semantics: ``take`` with a repeating integer selector
+    duplicates per-candidate rows exactly as re-fitting on the
+    duplicated corpus would (row-independent artifacts)."""
+    spec = MeasureSpec(family="spdtw", seed=0, sketch_r=4)
+    rng = np.random.default_rng(0)
+    C = rng.normal(size=(9, 32)).astype(np.float32)
+    sp = learn_sparse_paths(jnp.asarray(C), theta=6.0)
+    eng = fit(spec, C, sp=sp, impl="scan")
+    sel = np.array([2, 2, 5, 0, 5])
+    _assert_index_bitwise(eng.index.take(sel),
+                          eng.with_corpus(C[sel]).index)
+
+
 def test_dense_backend_rejected_for_serving():
     """The dense oracle lacks the SHARDED capability and has no
     fallback — serving through it must raise, not silently degrade."""
