@@ -1,0 +1,78 @@
+"""Streaming-analytics benchmark: anomaly ROC, escalation economy,
+monitoring overhead, and the dataset embedding map (DESIGN.md §17).
+
+The monitor tier's claim: sketch-space k-NN scores separate seeded
+off-manifold outliers from the corpus family (ROC-AUC >= 0.9), the
+escalated flag/clean decisions at the calibrated threshold stay
+bit-identical to exact-cascade scoring, and the whole analytics pass —
+R embedding DPs + two matmuls per batch, exact DPs only for the
+borderline band — rides on the server scenario at a bounded p99 cost.
+This benchmark drives ``repro.launch.scenarios.anomaly_run`` (seeded
+outlier injection into the Poisson stream, monitor-off vs monitor-on
+at the same offered rate, drift silence/fire checks) and splits the
+payload into the two committed artifacts: ``BENCH_anomaly.json`` and
+the PCA dataset map ``BENCH_embed.json`` (skipped in --smoke runs so
+tiny-shape numbers never clobber the committed files).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run(fast: bool = True, smoke: bool = False, dataset: str = "CBF",
+        theta: float = 8.0):
+    from repro.launch import scenarios
+
+    if smoke:
+        kw = dict(n_queries=16, batch=8, n_train=24, T=32, n_sp_train=12,
+                  sketch_r=4, n_cal=16, window=8, n_perm=100)
+    elif fast:
+        kw = dict(n_queries=96, batch=16, n_train=256, T=96, n_sp_train=32,
+                  sketch_r=8, n_cal=64, window=24, n_perm=200)
+    else:
+        kw = dict(n_queries=128, batch=16, n_train=512, T=128,
+                  n_sp_train=32, sketch_r=16, n_cal=96, window=32,
+                  n_perm=400)
+    out = scenarios.anomaly_run(dataset=dataset, theta=theta, seed=0, **kw)
+
+    # the acceptance headline (ISSUE 10): detection quality with the
+    # exactness invariant intact, at every shape including smoke
+    assert out["roc_auc"] >= 0.9, \
+        f"sketch-score ROC-AUC {out['roc_auc']:.3f} below 0.9"
+    assert out["decisions_exact"], \
+        "escalated decisions diverged from exact-cascade scoring"
+    assert out["drift"]["silent_on_iid"] and out["drift"]["fires_on_shift"], \
+        f"drift monitor mis-triggered: {out['drift']}"
+    print(f"[anomaly_roc] roc_auc={out['roc_auc']:.3f} "
+          f"escalation={out['escalation_rate']:.3f} "
+          f"flag_rate={out['flag_rate']:.3f} "
+          f"p99_overhead={out['p99_overhead_ms']:+.2f}ms "
+          f"({out['p99_overhead_ratio']:.2f}x)", flush=True)
+    ev = out["embed_map"]["explained_var"]
+    print(f"[anomaly_roc] embed: {out['embed_map']['n_series']} series, "
+          f"explained_var={np.round(ev, 3).tolist()}", flush=True)
+
+    if not smoke:
+        emb = out.pop("embed_map")
+        with open(os.path.join(ROOT, "BENCH_embed.json"), "w") as f:
+            json.dump(emb, f, indent=1)
+            f.write("\n")
+        with open(os.path.join(ROOT, "BENCH_anomaly.json"), "w") as f:
+            json.dump(out, f, indent=1)
+            f.write("\n")
+    return out
+
+
+def main(fast: bool = True):
+    out = run(fast=fast)
+    print(json.dumps(out, indent=1, default=float))
+    return out
+
+
+if __name__ == "__main__":
+    main()

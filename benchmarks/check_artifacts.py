@@ -156,6 +156,61 @@ SCHEMAS: Dict[str, Dict] = {
              "negative refresh lag"),
         ],
     },
+    "BENCH_anomaly.json": {
+        "required": ["backend", "corpus", "n_outliers", "tau", "roc_auc",
+                     "decisions_exact", "escalation_rate", "server",
+                     "server_monitor", "p99_overhead_ms",
+                     "p99_overhead_ratio", "monitor", "drift"],
+        "checks": [
+            ("roc_auc", lambda v: v >= 0.9,
+             "sketch-score ROC-AUC below 0.9 on seeded outliers"),
+            ("decisions_exact", lambda v: v is True,
+             "escalated anomaly decisions must be bit-identical to "
+             "exact-cascade scoring"),
+            ("escalation_rate", lambda v: 0.0 <= v <= 1.0,
+             "escalation rate out of [0, 1]"),
+            ("flag_rate", lambda v: 0.0 <= v <= 1.0,
+             "flag rate out of [0, 1]"),
+            ("n_outliers",
+             lambda v: isinstance(v, int) and not isinstance(v, bool)
+             and v >= 1,
+             "outlier count must be a positive integer"),
+            ("tau", lambda v: v > 0,
+             "calibrated threshold must be positive"),
+            ("server/latency_ms/p99", lambda v: v >= 0,
+             "negative monitor-off p99 latency"),
+            ("server_monitor/latency_ms/p99", lambda v: v >= 0,
+             "negative monitor-on p99 latency"),
+            ("p99_overhead_ratio", lambda v: v > 0,
+             "non-positive p99 overhead ratio"),
+            ("drift/silent_on_iid", lambda v: v is True,
+             "drift monitor fired on the i.i.d. stream"),
+            ("drift/fires_on_shift", lambda v: v is True,
+             "drift monitor stayed silent on the shifted stream"),
+        ],
+    },
+    "BENCH_embed.json": {
+        "required": ["n_series", "R", "n_components", "explained_var",
+                     "orthonormal_err", "coords", "classes", "seed"],
+        "checks": [
+            ("n_components",
+             lambda v: isinstance(v, int) and not isinstance(v, bool)
+             and v >= 2,
+             "dataset map needs at least two components"),
+            ("orthonormal_err", lambda v: v <= 1e-6,
+             "recovered principal axes must be orthonormal"),
+            ("explained_var/*", lambda v: 0.0 <= v <= 1.0 + 1e-9,
+             "explained-variance ratio out of [0, 1]"),
+            ("n_series",
+             lambda v: isinstance(v, int) and not isinstance(v, bool)
+             and v >= 2,
+             "dataset map needs at least two series"),
+            ("classes/*/n",
+             lambda v: isinstance(v, int) and not isinstance(v, bool)
+             and v >= 1,
+             "class overlay counts must be positive integers"),
+        ],
+    },
     "BENCH_softgrad.json": {
         "required": ["backend", "shapes", "e_parity_f64", "grad_rel_err_f32",
                      "min_bwd_speedup"],

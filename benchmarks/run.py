@@ -152,7 +152,7 @@ def main(argv=None):
         with open(os.path.join(art, f"{name}.json"), "w") as f:
             json.dump(results[name], f, indent=1, default=str)
 
-    from . import prune_depth, search_cascade, sketch_recall
+    from . import anomaly_roc, prune_depth, search_cascade, sketch_recall
     if smoke:
         # tiny shapes end to end: kernels, fused Gram, cascade, centroid;
         # the paper tables (minutes of meta-parameter search) are skipped
@@ -167,6 +167,8 @@ def main(argv=None):
                   lambda: prune_depth.run(fast=True, smoke=True))
         run_bench("sketch_recall",
                   lambda: sketch_recall.run(fast=True, smoke=True))
+        run_bench("anomaly_roc",
+                  lambda: anomaly_roc.run(fast=True, smoke=True))
         run_bench("centroid_speedup",
                   lambda: centroid_speedup.run(fast=True, smoke=True))
         run_bench("softgrad_speedup",
@@ -182,6 +184,7 @@ def main(argv=None):
         run_bench("search_cascade", lambda: search_cascade.run(fast=fast))
         run_bench("prune_depth", lambda: prune_depth.run(fast=fast))
         run_bench("sketch_recall", lambda: sketch_recall.run(fast=fast))
+        run_bench("anomaly_roc", lambda: anomaly_roc.run(fast=fast))
         run_bench("centroid_speedup", lambda: centroid_speedup.run(fast=fast))
         run_bench("softgrad_speedup", lambda: softgrad_speedup.run(fast=fast))
         run_bench("table6_speedup", lambda: table6_speedup.run(fast=fast))
@@ -238,6 +241,14 @@ def main(argv=None):
               f"us_per_query")
         print(f"sketch/best,{b['us_per_query']:.1f},"
               f"{b['speedup']:.2f}x_recall{b['recall_at_1']:.2f}")
+    if "anomaly_roc" in results:
+        a = results["anomaly_roc"]
+        print(f"anomaly/roc_auc,{timings.get('anomaly_roc', 0)*1e6:.0f},"
+              f"{a['roc_auc']:.3f}")
+        print(f"anomaly/escalation,{timings.get('anomaly_roc', 0)*1e6:.0f},"
+              f"{100*a['escalation_rate']:.0f}%")
+        print(f"anomaly/p99_overhead,{1e3*a['p99_overhead_ms']:.0f},"
+              f"{a['p99_overhead_ratio']:.2f}x")
     if "centroid_speedup" in results:
         for fam, r in results["centroid_speedup"]["families"].items():
             print(f"centroid/{fam},{r['centroid_us_per_query']:.1f},"

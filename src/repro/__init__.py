@@ -14,6 +14,8 @@ Layer map (one directory per layer; see README.md and DESIGN.md):
              (block-sparse schedule §3, cascade bounds §4, soft §10-§11)
   cluster/   soft-SP-DTW barycenters, k-means, centroid models (§10)
   classify/  1-NN / SVM / nearest-centroid evaluation harness
+  monitor/   streaming corpus analytics over the sketch tier — anomaly
+             scoring, drift detection, embedding map (§17)
   launch/    serving drivers and sharded jobs (SearchEngine, Gram,
              centroid fitting; §8)
   data/      offline synthetic-UCR datasets (§7.1)
@@ -58,6 +60,11 @@ from .classify import (
     centroid_error_series, knn_error, knn_error_series, svm_error,
     svm_gram_series, svm_rws_series,
 )
+from .monitor import (
+    AnomalyScorer, DriftMonitor, Monitor, fit_anomaly_scorer,
+    fit_drift_monitor, fit_monitor, power_iteration_pca, roc_auc,
+    sketch_map,
+)
 
 __all__ = [
     # fitted-engine API (the supported surface; DESIGN.md §12)
@@ -88,4 +95,8 @@ __all__ = [
     # classify: evaluation harness
     "centroid_error_series", "knn_error", "knn_error_series", "svm_error",
     "svm_gram_series", "svm_rws_series",
+    # monitor: streaming corpus analytics (DESIGN.md §17)
+    "AnomalyScorer", "DriftMonitor", "Monitor", "fit_anomaly_scorer",
+    "fit_drift_monitor", "fit_monitor", "power_iteration_pca", "roc_auc",
+    "sketch_map",
 ]

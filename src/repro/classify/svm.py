@@ -102,7 +102,6 @@ def svm_rws_series(X_train, X_test, *, sp=None, R: int = 32,
     ``svm_predict``.
     """
     from repro.core.engine import fit as _fit
-    from repro.core.sketch import sketch_embed
     from repro.core.spec import MeasureSpec
     Xtr = jnp.asarray(X_train, jnp.float32)
     Xte = jnp.asarray(X_test, jnp.float32)
@@ -110,8 +109,7 @@ def svm_rws_series(X_train, X_test, *, sp=None, R: int = 32,
     eng = _fit(spec, Xtr, sp=sp, impl=impl)
     si = eng.index.sketch
     D_tr = si.sketch                                      # (N_tr, R)
-    D_te = sketch_embed(Xte, si.anchors, bsp=eng.bsp,
-                        weights=eng.weights, impl=impl)   # (N_te, R)
+    D_te = eng.sketch_embed(Xte, impl=impl)               # (N_te, R)
     if bandwidth is None:
         bandwidth = float(jnp.sqrt(jnp.median(D_tr) + 1e-8))
     phi = lambda D: jnp.exp(-D / (2.0 * bandwidth * bandwidth)) / \

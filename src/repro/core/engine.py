@@ -252,6 +252,23 @@ class SimilarityEngine:
                          "pre_dp_prune": 0.0, "dp_pairs": Q.shape[0] *
                          self.corpus_size}
 
+    def sketch_embed(self, X, *, impl: str = "auto") -> jnp.ndarray:
+        """Project series into the engine's (R,) RWS sketch space
+        (DESIGN.md §13): (B, T) -> (B, R), one masked DP per (series,
+        anchor) pair under the fitted banded support and weights — the
+        same features ``mode="sketch"`` retrieval shortlists on. This
+        is the public seam for sketch-space consumers (``classify.svm``
+        feature maps, the ``repro.monitor`` analytics tier); it needs a
+        spec fit with ``sketch_r > 0``.
+        """
+        from .sketch import sketch_embed as _sketch_embed
+        assert self.index is not None and self.index.sketch is not None, \
+            "sketch_embed needs a spec fit with sketch_r > 0"
+        si = self.index.sketch
+        return _sketch_embed(jnp.asarray(X, jnp.float32), si.anchors,
+                             bsp=self.index.bsp, weights=self.index.weights,
+                             gamma=si.gamma, impl=impl)
+
     def classify(self, Q, *, impl: str = "auto",
                  via: str = "auto") -> np.ndarray:
         """Predicted labels for queries ``Q``: nearest-centroid when a

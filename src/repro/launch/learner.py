@@ -27,7 +27,12 @@ path. One ``Learner.step`` is one refresh:
      (``core.occupancy.pairwise_path_counts``); every
      ``support_every`` steps (opt-in) the support grid is re-learned
      from the combined counts and the engine is re-fit from the spec —
-     the expensive, rare event, still off the serving path.
+     the expensive, rare event, still off the serving path. With a
+     ``drift_monitor`` (DESIGN.md §17) the re-learn is *evidence-
+     triggered* instead of (or on top of) the fixed cadence: each
+     arrival batch's sketch features feed the monitor's sliding
+     window, and a calibrated shift trigger forces the support refresh
+     on the step that detected it.
   4. **Swap-on-converge** — only after the new engine is fully built
      is it handed to ``core.snapshot.SnapshotStore.publish``: one
      restamped, monotone-versioned pointer swap. Queries never wait
@@ -76,6 +81,14 @@ class Learner:
                     counts every N steps (None/0 disables — the default:
                     support refresh changes the measure itself and is a
                     deliberate, rare event).
+    drift_monitor:  optional ``repro.monitor.DriftMonitor`` (DESIGN.md
+                    §17): each consumed batch's sketch features update
+                    its sliding window, and a trigger forces the
+                    support re-learn on that step — drift-triggered
+                    refresh instead of a fixed cadence (combine with
+                    ``support_every`` for a cadence floor).
+                    ``n_support_refreshes`` counts how often either
+                    trigger actually re-learned.
     impl:           backend for fitting-time evaluation.
 
     ``step()`` is synchronous and deterministic; ``start()`` runs the
@@ -86,7 +99,8 @@ class Learner:
 
     def __init__(self, store: SnapshotStore, arrivals, labels=None, *,
                  batch: int = 8, centroid_steps: int = 4, lr: float = 0.05,
-                 support_every: Optional[int] = None, impl: str = "auto"):
+                 support_every: Optional[int] = None, drift_monitor=None,
+                 impl: str = "auto"):
         self.store = store
         self.arrivals = np.asarray(arrivals, np.float32)
         self.labels = None if labels is None else np.asarray(labels)
@@ -103,6 +117,8 @@ class Learner:
         self.centroid_steps = int(centroid_steps)
         self.lr = float(lr)
         self.support_every = int(support_every) if support_every else 0
+        self.drift = drift_monitor
+        self.n_support_refreshes = 0
         self.impl = impl
         self.snapshots: List[EngineSnapshot] = []
         self._pos = 0
@@ -169,14 +185,23 @@ class Learner:
         labels2 = None
         if base.labels is not None:
             labels2 = np.concatenate([np.asarray(base.labels), blab])
+        # ---- drift trigger (DESIGN.md §17): sketch the arrival batch
+        # and let a calibrated shift force the support re-learn ----------
+        drift_fired = False
+        if self.drift is not None and base.index is not None and \
+                base.index.sketch is not None:
+            feats = base.sketch_embed(batch, impl=self.impl)
+            drift_fired = bool(self.drift.update(np.asarray(feats)))
         # ---- support-occupancy update (accumulate; refresh when due) ----
         refresh_support = False
         if base.spec.support == "learned" and batch.shape[0] > 1:
             c = pairwise_path_counts(batch)
             self._counts = c if self._counts is None else self._counts + c
             refresh_support = (self.support_every > 0 and
-                               self._step_i % self.support_every == 0)
+                               self._step_i % self.support_every == 0) or \
+                drift_fired
         if refresh_support:
+            self.n_support_refreshes += 1
             # rare, deliberate: re-threshold the combined occupancy
             # counts and re-fit from the spec (new support, new plan)
             base_counts = base.sp.counts if base.sp is not None else 0.0

@@ -30,6 +30,18 @@ monotonicity, and an ``exact_final`` flag asserting the last published
 snapshot answers bit-identically to a from-scratch fit on the final
 corpus.
 
+A fifth load shape, **anomaly** (DESIGN.md §17), measures the streaming
+corpus-analytics tier: seeded outliers are injected into the Poisson
+arrival stream and the server scenario runs twice at the same offered
+rate — monitor off, then with a fitted ``repro.monitor.Monitor``
+scoring every batch. The payload (``BENCH_anomaly.json``) reports the
+sketch-score ROC-AUC over the injected outliers, the escalation rate
+(the borderline band that paid the exact cascade), the p99 overhead of
+monitoring, a ``decisions_exact`` flag (escalated decisions bit-equal
+to exact-distance scoring at the calibrated threshold), and the drift
+monitor's behaviour on i.i.d. vs shifted streams; the corpus embedding
+map rides along as ``BENCH_embed.json``.
+
 Every run emits ``BENCH_serving.json`` (throughput, per-stage latency
 percentiles, shard-balance stats, and an ``exact`` flag asserting the
 sharded top-1 is bit-identical to the single-host cascade) which
@@ -58,7 +70,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import learn_sparse_paths
-from repro.launch.search import SearchEngine, _make_workload, _percentiles
+from repro.launch.search import SearchEngine, _make_workload
+from repro.launch.stats import percentiles
 
 
 def _drain(engine: SearchEngine, queries: np.ndarray,
@@ -82,7 +95,7 @@ def offline_scenario(engine: SearchEngine, queries: np.ndarray,
     wall = time.time() - t0
     return {"n_queries": len(queries), "batch": batch, "wall_s": wall,
             "throughput_qps": len(queries) / wall,
-            "latency_ms": _percentiles([wall / max(1, len(queries))] *
+            "latency_ms": percentiles([wall / max(1, len(queries))] *
                                        len(queries))}
 
 
@@ -148,7 +161,7 @@ def server_scenario(engine: SearchEngine, queries: np.ndarray,
             "seed": int(seed), "wall_s": float(now),
             "throughput_qps": n / max(now, 1e-9),
             "mean_batch": n / max(n_steps, 1),
-            "latency_ms": _percentiles(lat)}
+            "latency_ms": percentiles(lat)}
 
 
 def single_stream_scenario(engine: SearchEngine,
@@ -164,7 +177,7 @@ def single_stream_scenario(engine: SearchEngine,
     wall = time.time() - t0
     return {"n_queries": len(queries), "batch": 1, "wall_s": wall,
             "throughput_qps": len(queries) / wall,
-            "latency_ms": _percentiles(lat)}
+            "latency_ms": percentiles(lat)}
 
 
 SCENARIOS = ("offline", "server", "single_stream")
@@ -326,18 +339,149 @@ def refresh_run(dataset: str = "CBF", n_queries: int = 64,
     }
 
 
+def _inject_outliers(queries: np.ndarray, frac: float,
+                     seed: int) -> tuple:
+    """Replace a seeded ``frac`` of the query stream with z-normalized
+    random walks — off-manifold series no corpus family generates.
+    Returns (queries, truth) with truth[i] = 1 on injected rows."""
+    rng = np.random.default_rng([int(seed), 0xBAD5])
+    q = np.array(queries, np.float32, copy=True)
+    n, T = q.shape[0], q.shape[-1]
+    n_out = max(1, int(round(frac * n)))
+    idx = np.sort(rng.permutation(n)[:n_out])
+    walks = np.cumsum(rng.normal(size=(n_out, T)), axis=1)
+    walks = (walks - walks.mean(1, keepdims=True)) / \
+        (walks.std(1, keepdims=True) + 1e-8)
+    q[idx] = walks.astype(np.float32)
+    truth = np.zeros(n, np.int32)
+    truth[idx] = 1
+    return q, truth
+
+
+def anomaly_run(dataset: str = "CBF", n_queries: int = 96,
+                batch: int = 16, theta: float = 8.0, n_train: int = 128,
+                T: Optional[int] = None, impl: str = "auto", seed: int = 0,
+                rate_qps: Optional[float] = None, n_sp_train: int = 32,
+                outlier_frac: float = 0.25, sketch_r: int = 8,
+                k: int = 3, quantile: float = 0.95, n_cal: int = 64,
+                window: int = 24, alpha: float = 0.01,
+                n_perm: int = 200) -> dict:
+    """The ``anomaly`` load shape (DESIGN.md §17): the server scenario
+    with a fitted ``repro.monitor.Monitor`` scoring every batch, seeded
+    outliers injected into the Poisson arrival stream.
+
+    Four measurements make the ``BENCH_anomaly.json`` payload:
+
+      * detection quality — sketch-score ROC-AUC over the injected
+        outliers, plus a ``decisions_exact`` flag asserting the
+        escalated flag/clean decisions are bit-identical to scoring
+        every query with the exact cascade at the calibrated ``tau``;
+      * serving cost — the server scenario runs twice at the *same*
+        offered rate (monitor off, then on); the p99 delta/ratio is
+        the streaming-analytics overhead, and the monitor's own stage
+        percentiles ride in ``stats.latency_ms.monitor``;
+      * escalation economy — what fraction of the stream actually paid
+        the exact cascade (the borderline band around ``tau``);
+      * drift behaviour — a fresh ``DriftMonitor`` per stream must stay
+        silent on an i.i.d. resample of the corpus and fire on an
+        amplitude-shifted copy of the same stream, deterministically
+        under the spec seed.
+    """
+    from repro.core.engine import MeasureSpec, fit
+    from repro.data import load
+    from repro.monitor import fit_drift_monitor, fit_monitor, roc_auc, \
+        sketch_map
+    kw = {} if T is None else {"T": T}
+    ds = load(dataset, n_train=n_train, **kw)
+    Xtr = jnp.asarray(ds.X_train)
+    sp = learn_sparse_paths(Xtr[:n_sp_train], theta=theta)
+    spec = MeasureSpec("spdtw", theta=theta, seed=seed, sketch_r=sketch_r)
+    eng = fit(spec, Xtr, labels=ds.y_train, sp=sp, impl=impl)
+    mon = fit_monitor(eng, k=k, quantile=quantile, n_cal=n_cal,
+                      window=window, alpha=alpha, n_perm=n_perm, impl=impl)
+    clean_q = _make_workload(ds, "retrieval", n_queries, seed)
+    queries, truth = _inject_outliers(clean_q, outlier_frac, seed)
+
+    # detection quality, off the serving clock: one batched decision
+    # pass over the full stream + the exact-cascade oracle
+    flags, scores, dstats = mon.anomaly.decide(queries, impl=impl,
+                                               return_stats=True)
+    flags_x, _ = mon.anomaly.decide_exact(queries, impl=impl)
+    decisions_exact = bool(np.array_equal(flags, flags_x))
+    auc = roc_auc(scores, truth)
+
+    # serving cost: same offered rate, monitor off then on
+    off_engine = SearchEngine(None, engine=eng, impl=impl, seed=seed)
+    base = server_scenario(off_engine, queries, batch, rate_qps=rate_qps,
+                           seed=seed)
+    mon.reset()
+    on_engine = SearchEngine(None, engine=eng, impl=impl, seed=seed,
+                             monitor=mon)
+    refreshed = server_scenario(on_engine, queries, batch,
+                                rate_qps=base["rate_qps"], seed=seed)
+    stats = on_engine.stats()
+    p99_off = base["latency_ms"]["p99"]
+    p99_on = refreshed["latency_ms"]["p99"]
+
+    # drift behaviour: fresh monitors, i.i.d. vs amplitude-shifted
+    rng = np.random.default_rng([int(seed), 0xD1FF])
+    iid = np.asarray(ds.X_train)[rng.integers(0, len(ds.X_train),
+                                              size=n_queries)]
+    shifted = 2.0 * iid + 0.5
+    dm_iid = fit_drift_monitor(eng, window=window, alpha=alpha,
+                               n_perm=n_perm)
+    dm_shift = fit_drift_monitor(eng, window=window, alpha=alpha,
+                                 n_perm=n_perm)
+    for lo in range(0, n_queries, batch):
+        dm_iid.update(np.asarray(eng.sketch_embed(iid[lo:lo + batch],
+                                                  impl=impl)))
+        dm_shift.update(np.asarray(eng.sketch_embed(shifted[lo:lo + batch],
+                                                    impl=impl)))
+
+    return {
+        "bench": "anomaly", "backend": jax.default_backend(),
+        "impl": impl, "dataset": dataset, "T": int(ds.T),
+        "corpus": int(eng.index.size), "n_queries": int(n_queries),
+        "seed": int(seed), "theta": theta,
+        "sketch_r": int(sketch_r), "k": int(k),
+        "outlier_frac": float(outlier_frac),
+        "n_outliers": int(truth.sum()),
+        "quantile": float(quantile), "tau": float(mon.anomaly.tau),
+        "roc_auc": float(auc),
+        "decisions_exact": decisions_exact,
+        "flag_rate": float(np.mean(flags)),
+        "escalation_rate": float(dstats["escalation_rate"]),
+        "n_escalated": int(dstats["n_escalated"]),
+        "server": base, "server_monitor": refreshed,
+        "p99_overhead_ms": float(p99_on - p99_off),
+        "p99_overhead_ratio": float(p99_on / max(p99_off, 1e-9)),
+        "monitor": stats["monitor"],
+        "drift": {
+            "window": int(window), "alpha": float(alpha),
+            "n_perm": int(n_perm),
+            "events_iid": len(dm_iid.events),
+            "events_shift": len(dm_shift.events),
+            "silent_on_iid": len(dm_iid.events) == 0,
+            "fires_on_shift": len(dm_shift.events) > 0,
+        },
+        "embed_map": sketch_map(eng),
+    }
+
+
 def main(argv=None):
     """CLI entry: ``python -m repro.launch.scenarios [--smoke]
-    [--scenario all|offline|server|single_stream|server+refresh] ...``
-    — writes ``BENCH_serving.json`` (or ``BENCH_refresh.json`` for the
-    refresh shape) under ``--out`` (DESIGN.md §15, §16)."""
+    [--scenario all|offline|server|single_stream|server+refresh|anomaly]
+    ...`` — writes ``BENCH_serving.json`` (``BENCH_refresh.json`` for
+    the refresh shape; ``BENCH_anomaly.json`` + ``BENCH_embed.json``
+    for the anomaly shape) under ``--out`` (DESIGN.md §15, §16, §17)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="CBF")
     ap.add_argument("--queries", type=int, default=64)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--shards", type=int, default=2)
     ap.add_argument("--scenario", default="all",
-                    choices=("all",) + SCENARIOS + ("server+refresh",))
+                    choices=("all",) + SCENARIOS +
+                    ("server+refresh", "anomaly"))
     ap.add_argument("--theta", type=float, default=8.0)
     ap.add_argument("--impl", default="auto")
     ap.add_argument("--seed", type=int, default=0)
@@ -352,7 +496,17 @@ def main(argv=None):
                          "fresh tempdir with --smoke)")
     args = ap.parse_args(argv)
     refresh = args.scenario == "server+refresh"
-    if refresh:
+    anomaly = args.scenario == "anomaly"
+    if anomaly:
+        kw = dict(dataset=args.dataset, n_queries=args.queries,
+                  batch=args.batch, theta=args.theta, impl=args.impl,
+                  seed=args.seed, rate_qps=args.rate_qps)
+        if args.smoke:
+            kw.update(n_queries=min(args.queries, 24),
+                      batch=min(args.batch, 8), n_train=48, T=32,
+                      n_sp_train=16, sketch_r=4, n_cal=32, window=8,
+                      n_perm=100)
+    elif refresh:
         kw = dict(dataset=args.dataset, n_queries=args.queries,
                   batch=args.batch, theta=args.theta, impl=args.impl,
                   seed=args.seed, rate_qps=args.rate_qps)
@@ -377,16 +531,48 @@ def main(argv=None):
             out_dir = tempfile.mkdtemp(prefix="bench-serving-")
         else:
             out_dir = "."
-    res = refresh_run(**kw) if refresh else run(**kw)
+    if anomaly:
+        res = anomaly_run(**kw)
+    elif refresh:
+        res = refresh_run(**kw)
+    else:
+        res = run(**kw)
     res["smoke"] = bool(args.smoke)
     os.makedirs(out_dir, exist_ok=True)
-    name = "BENCH_refresh.json" if refresh else "BENCH_serving.json"
+    name = "BENCH_anomaly.json" if anomaly else (
+        "BENCH_refresh.json" if refresh else "BENCH_serving.json")
     path = os.path.join(out_dir, name)
+    if anomaly:
+        # the dataset map is its own schema-gated artifact
+        emb = dict(res.pop("embed_map"), smoke=bool(args.smoke))
+        epath = os.path.join(out_dir, "BENCH_embed.json")
+        with open(epath, "w") as f:
+            json.dump(emb, f, indent=1, default=float)
+            f.write("\n")
     with open(path, "w") as f:
         json.dump(res, f, indent=1, default=float)
         f.write("\n")
     print(json.dumps(res, indent=1, default=float))
     print(f"wrote {path}")
+    if anomaly:
+        print(f"wrote {epath}")
+        for nm, sc in (("server", res["server"]),
+                       ("server+monitor", res["server_monitor"])):
+            p = sc["latency_ms"]
+            print(f"{nm:15s} {sc['throughput_qps']:9.1f} qps  "
+                  f"p50={p['p50']:8.2f}ms p95={p['p95']:8.2f}ms "
+                  f"p99={p['p99']:8.2f}ms")
+        print(f"roc_auc={res['roc_auc']:.3f} "
+              f"escalation_rate={res['escalation_rate']:.3f} "
+              f"p99_overhead={res['p99_overhead_ms']:+.2f}ms")
+        if not res["decisions_exact"]:
+            raise SystemExit("escalated anomaly decisions diverged from "
+                             "exact-cascade scoring")
+        if not (res["drift"]["silent_on_iid"] and
+                res["drift"]["fires_on_shift"]):
+            raise SystemExit("drift monitor mis-triggered (fired on iid "
+                             "or stayed silent on shift)")
+        return
     if refresh:
         for name, sc in (("server", res["server"]),
                          ("server+refresh", res["server_refresh"])):

@@ -37,24 +37,15 @@ import numpy as np
 
 from repro.core import SparsePaths, learn_sparse_paths
 from repro.core.engine import MeasureSpec, fit
+from repro.launch.stats import percentiles
 
 _STAT_KEYS = ("stage1_prune", "stage2_prune", "stage3_prune",
               "pre_dp_prune", "dp_abandoned")
 _SKETCH_STAT_KEYS = ("shortlist_prune", "bound_prune", "pre_dp_prune")
-_PCTS = (50, 95, 99)
 
-
-def _percentiles(samples: Sequence[float]) -> Dict[str, float]:
-    """p50/p95/p99 of a latency sample list, in milliseconds.
-
-    Degenerate streams clamp instead of propagating NaN into the
-    serving artifacts: an empty sample list reports 0.0 at every
-    percentile (``np.percentile`` of an empty array is NaN), and a
-    single-element list reports that sample everywhere."""
-    a = np.asarray(samples, np.float64) * 1e3
-    if a.size == 0:
-        return {f"p{p}": 0.0 for p in _PCTS}
-    return {f"p{p}": float(np.percentile(a, p)) for p in _PCTS}
+# legacy alias — the percentile helper moved to ``launch/stats.py`` so
+# search, the scenario harness and the monitor counters share one clamp
+_percentiles = percentiles
 
 
 @dataclasses.dataclass
@@ -98,6 +89,13 @@ class SearchEngine:
     batch is answered by exactly one fully-built snapshot. ``stats()``
     then reports the serving ``version`` plus refresh lag (how far
     serving trailed publication).
+
+    ``monitor`` accepts a fitted ``repro.monitor.Monitor`` (DESIGN.md
+    §17): every served batch is scored before serving — anomaly
+    decisions (exact-escalated) and the drift window — timed as its own
+    ``monitor`` latency stage, and ``stats()`` gains the cumulative
+    anomaly/drift counters. The monitor keeps its own calibration
+    engine, so snapshot refreshes never silently move the threshold.
     """
 
     def __init__(self, corpus, labels=None, *, kind: str = "spdtw",
@@ -106,7 +104,7 @@ class SearchEngine:
                  centroid_model=None, mode: str = "cascade",
                  engine=None, sketch_r: int = 16, top_c: int = 32,
                  approx: bool = False, seed: int = 0, shards: int = 0,
-                 refresh=None):
+                 refresh=None, monitor=None):
         assert mode in ("cascade", "centroid", "sketch")
         assert shards <= 1 or mode == "cascade", \
             "sharded serving is the exact cascade tier (DESIGN.md §15)"
@@ -134,6 +132,12 @@ class SearchEngine:
         self.approx = approx
         self.shards = int(shards)
         self.store = refresh
+        if monitor is not None:
+            assert monitor.engine.index is not None and \
+                monitor.engine.index.sketch is not None, \
+                "monitoring reads the sketch tier: fit the monitor's " \
+                "engine with sketch_r > 0 (repro.monitor.fit_monitor)"
+        self.monitor = monitor
         self._bind_engine(engine)
         self.reset_stats()
 
@@ -215,6 +219,12 @@ class SearchEngine:
         self._maybe_refresh()
         Q = jnp.asarray(queries, jnp.float32)
         n = Q.shape[0]
+        if self.monitor is not None:
+            # corpus analytics tier (DESIGN.md §17): anomaly decisions +
+            # drift window on this batch, timed as its own serving stage
+            t_m = time.time()
+            self.monitor.observe(Q, impl=self.impl)
+            self._record_lat("monitor", time.time() - t_m)
         t0 = time.time()
         if self.mode == "centroid":
             from repro.cluster import nearest_centroid
@@ -288,7 +298,9 @@ class SearchEngine:
                 "n_refreshes": self._n_refreshes,
                 "mean_lag": self._lag_sum / max(self._lag_n, 1),
                 "max_lag": int(self._lag_max)}
-        out["latency_ms"] = {stage: _percentiles(v)
+        if self.monitor is not None:
+            out["monitor"] = self.monitor.counters()
+        out["latency_ms"] = {stage: percentiles(v)
                              for stage, v in self._lat.items()}
         return out
 

@@ -17,7 +17,8 @@ def test_committed_artifacts_clean():
     names = {os.path.basename(p) for p in paths}
     # the headline artifacts must exist, not just validate when present
     assert {"BENCH_gram.json", "BENCH_search.json",
-            "BENCH_centroid.json", "BENCH_sketch.json"} <= names
+            "BENCH_centroid.json", "BENCH_sketch.json",
+            "BENCH_anomaly.json", "BENCH_embed.json"} <= names
     for p in paths:
         assert ca.check_file(p) == [], p
     assert ca.main(["--root", ROOT]) == 0
@@ -65,6 +66,52 @@ def test_gate_rejects_schema_violations(tmp_path):
     assert any("exactness flag" in e for e in errs4)
 
 
+def test_gate_rejects_anomaly_violations(tmp_path):
+    """The monitor-tier contract (ISSUE 10): ROC-AUC >= 0.9, escalated
+    decisions bit-identical to the exact cascade, sane drift behaviour
+    and the monitor-on p99 overhead all gated."""
+    base = {
+        "backend": "cpu", "corpus": 24, "n_outliers": 4, "tau": 1.5,
+        "roc_auc": 0.97, "decisions_exact": True, "flag_rate": 0.2,
+        "escalation_rate": 0.3,
+        "server": {"latency_ms": {"p99": 5.0}},
+        "server_monitor": {"latency_ms": {"p99": 6.0}},
+        "p99_overhead_ms": 1.0, "p99_overhead_ratio": 1.2,
+        "monitor": {"n_scored": 24},
+        "drift": {"silent_on_iid": True, "fires_on_shift": True}}
+    f = tmp_path / "BENCH_anomaly.json"
+    f.write_text(json.dumps(base))
+    assert ca.check_file(str(f)) == []
+    bad = dict(base, roc_auc=0.6, decisions_exact=False,
+               drift={"silent_on_iid": False, "fires_on_shift": False})
+    f.write_text(json.dumps(bad))
+    errs = ca.check_file(str(f))
+    assert any("ROC-AUC" in e for e in errs)
+    assert any("bit-identical" in e for e in errs)
+    assert any("i.i.d." in e for e in errs)
+    assert any("shifted stream" in e for e in errs)
+    f.write_text(json.dumps({"backend": "cpu"}))
+    assert any("missing required key" in e for e in ca.check_file(str(f)))
+
+
+def test_gate_rejects_embed_violations(tmp_path):
+    good = {
+        "n_series": 24, "R": 4, "n_components": 2, "seed": 0,
+        "explained_var": [0.7, 0.2], "orthonormal_err": 1e-9,
+        "coords": [[0.0, 1.0]] * 24,
+        "classes": [{"label": 0, "n": 24, "centroid": [0.0, 1.0]}]}
+    f = tmp_path / "BENCH_embed.json"
+    f.write_text(json.dumps(good))
+    assert ca.check_file(str(f)) == []
+    bad = dict(good, orthonormal_err=0.5, explained_var=[1.7, 0.2],
+               n_components=1)
+    f.write_text(json.dumps(bad))
+    errs = ca.check_file(str(f))
+    assert any("orthonormal" in e for e in errs)
+    assert any("explained_var" in e for e in errs)
+    assert any("n_components" in e for e in errs)
+
+
 def test_gate_rejects_unreadable_json(tmp_path):
     f = tmp_path / "BENCH_gram.json"
     f.write_text("{not json")
@@ -101,6 +148,8 @@ def test_ci_workflow_encodes_the_gate():
     assert "actions/upload-artifact@v4" in text
     assert "retention-days: 14" in text
     assert "0.4.30" in text and "tests/test_compat.py" in text
+    # ISSUE 10 monitor gate: the anomaly scenario smoke must stay wired
+    assert "--scenario anomaly" in text
 
 
 def test_gitignore_covers_scratch():

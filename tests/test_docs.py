@@ -37,6 +37,11 @@ API_MODULES = (
     "repro.launch.shard_index",
     "repro.launch.scenarios",
     "repro.launch.learner",
+    "repro.launch.stats",
+    "repro.monitor",
+    "repro.monitor.anomaly",
+    "repro.monitor.drift",
+    "repro.monitor.embed",
 )
 
 # ---------------------------------------------------------------------------
@@ -46,18 +51,21 @@ API_MODULES = (
 # ---------------------------------------------------------------------------
 
 EXPECTED_ALL = [
-    "ALL_MEASURES", "Backend", "BlockSparsePaths", "CentroidModel",
-    "CorpusIndex", "EngineSnapshot", "Measure", "MeasureSpec",
-    "SimilarityEngine", "SketchIndex", "SnapshotStore", "SparsePaths",
+    "ALL_MEASURES", "AnomalyScorer", "Backend", "BlockSparsePaths",
+    "CentroidModel", "CorpusIndex", "DriftMonitor", "EngineSnapshot",
+    "Measure", "MeasureSpec", "Monitor", "SimilarityEngine", "SketchIndex",
+    "SnapshotStore", "SparsePaths",
     "available_backends", "band_mask", "block_sparsify",
     "build_corpus_index", "build_sketch_index", "centroid_error_series",
     "default_tile", "dtw", "dtw_gram", "dtw_pairs", "dtw_sc", "engine_for",
-    "fit", "fit_class_centroids", "knn_cascade", "knn_error",
+    "fit", "fit_anomaly_scorer", "fit_class_centroids", "fit_drift_monitor",
+    "fit_monitor", "knn_cascade", "knn_error",
     "knn_error_series", "learn_sparse_paths", "log_krdtw", "log_krdtw_gram",
     "log_krdtw_pairs", "log_krdtw_sc", "log_sp_krdtw", "make_measure",
     "normalize_grid", "optimal_path_mask", "pairwise",
-    "pairwise_path_counts", "random_anchors", "resolve", "resolve_plan",
-    "sketch_embed", "soft_alignment", "soft_alignment_pairs",
+    "pairwise_path_counts", "power_iteration_pca", "random_anchors",
+    "resolve", "resolve_plan", "roc_auc",
+    "sketch_embed", "sketch_map", "soft_alignment", "soft_alignment_pairs",
     "soft_barycenter", "soft_dtw", "soft_kmeans", "soft_spdtw",
     "soft_spdtw_batch", "soft_spdtw_gram", "soft_spdtw_gram_batch",
     "soft_spdtw_pairs", "soft_wdtw", "spdtw", "spdtw_gram", "spdtw_pairs",
@@ -80,6 +88,7 @@ ENGINE_SIGNATURES = {
     "fit_centroids": ("self", "n_per_class", "steps", "lr", "impl", "seed"),
     "with_corpus": ("self", "corpus", "labels"),
     "shard": ("self", "n_shards"),
+    "sketch_embed": ("self", "X", "impl"),
 }
 
 

@@ -1,0 +1,305 @@
+"""Streaming corpus analytics (DESIGN.md §17): anomaly exactness, drift
+triggering, embedding map, serving/learner integration.
+
+Acceptance contract (ISSUE 10):
+  (a) anomaly flag/clean decisions at the calibrated threshold are
+      bit-identical to exact-cascade distance scoring on a seeded
+      stream;
+  (b) the drift trigger fires on an injected distribution shift and
+      stays silent on an i.i.d. stream, deterministically under
+      ``MeasureSpec.seed``;
+  (c) the ``BENCH_anomaly.json`` payload is schema-gated with
+      ROC-AUC >= 0.9 on seeded synthetic outliers and reports the
+      monitor-on p99 overhead.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import learn_sparse_paths
+from repro.core.engine import fit
+from repro.core.spec import MeasureSpec
+from repro.monitor import (AnomalyScorer, DriftMonitor, Monitor,
+                           fit_anomaly_scorer, fit_drift_monitor,
+                           fit_monitor, power_iteration_pca, roc_auc,
+                           sketch_map)
+
+
+def _toy_engine(T=40, n=28, seed=0, sketch_r=6, labels=True):
+    """Sinusoid-family corpus + fitted sketch-carrying engine."""
+    rng = np.random.default_rng(seed)
+    base = np.sin(np.linspace(0, 3 * np.pi, T))
+    X = (base[None] + 0.3 * rng.normal(size=(n, T))).astype(np.float32)
+    sp = learn_sparse_paths(jnp.asarray(X[:16]), theta=1.0)
+    y = (np.arange(n) % 3) if labels else None
+    eng = fit(MeasureSpec("spdtw", theta=1.0, seed=seed,
+                          sketch_r=sketch_r), X, labels=y, sp=sp)
+    return X, sp, eng
+
+
+def _stream(X, nq=18, n_out=5, seed=1):
+    """Seeded query stream: jittered corpus entries with the first
+    ``n_out`` rows replaced by z-normalized random walks (off-manifold
+    outliers). Returns (queries, truth)."""
+    rng = np.random.default_rng(seed)
+    n, T = X.shape
+    Q = X[rng.integers(0, n, nq)] + \
+        0.05 * rng.normal(size=(nq, T)).astype(np.float32)
+    walks = np.cumsum(rng.normal(size=(n_out, T)), axis=1)
+    walks = (walks - walks.mean(1, keepdims=True)) / \
+        (walks.std(1, keepdims=True) + 1e-8)
+    Q[:n_out] = walks
+    truth = np.zeros(nq, np.int32)
+    truth[:n_out] = 1
+    return Q.astype(np.float32), truth
+
+
+# ------------------------------------------------------- (a) anomaly exactness
+def test_anomaly_decisions_bit_identical_to_exact():
+    """The acceptance property: ``decide`` (upper-bound fast path +
+    admissible-lower-bound fast path + exact-cascade escalation) must
+    match the brute-force oracle ``decide_exact`` flag for flag."""
+    X, _, eng = _toy_engine()
+    scorer = fit_anomaly_scorer(eng, k=3, quantile=0.8, n_cal=20)
+    Q, truth = _stream(X)
+    flags, scores, st = scorer.decide(Q, return_stats=True)
+    flags_x, d_exact = scorer.decide_exact(Q)
+    assert np.array_equal(flags, flags_x)
+    # the threshold semantics: flagged iff exact 1-NN distance > tau
+    assert np.array_equal(flags_x, d_exact > np.float32(scorer.tau))
+    # off-manifold walks land far above the calibrated threshold
+    assert flags[truth == 1].all()
+    # fast paths + escalations partition the stream
+    assert st["n_clean_fast"] + st["n_flag_fast"] + st["n_escalated"] \
+        == len(Q)
+    assert st["n_flagged"] == int(flags.sum())
+    # the sketch statistic separates the outliers cleanly
+    assert roc_auc(scores, truth) >= 0.9
+
+
+def test_anomaly_scorer_seeded_and_deterministic():
+    X, _, eng = _toy_engine(seed=3)
+    s1 = fit_anomaly_scorer(eng, k=2, quantile=0.9, n_cal=16)
+    s2 = fit_anomaly_scorer(eng, k=2, quantile=0.9, n_cal=16)
+    assert s1.tau == s2.tau
+    assert np.array_equal(s1.cal_dists, s2.cal_dists)
+    assert np.array_equal(s1.cal_scores, s2.cal_scores)
+    Q, _ = _stream(X, nq=8, n_out=2)
+    f1, sc1 = s1.decide(Q)
+    f2, sc2 = s2.decide(Q)
+    assert np.array_equal(f1, f2) and np.array_equal(sc1, sc2)
+    # calibrated severities are corpus quantiles in [0, 1], monotone in
+    # the raw score
+    cal = s1.calibrated(sc1)
+    assert ((0.0 <= cal) & (cal <= 1.0)).all()
+    order = np.argsort(sc1)
+    assert (np.diff(cal[order]) >= 0).all()
+    # tau is the requested quantile of the exact LOO calibration dists
+    assert s1.tau == float(np.quantile(s1.cal_dists, 0.9))
+
+
+def test_anomaly_scorer_requires_sketch():
+    X, sp, _ = _toy_engine()[0], None, None
+    rng = np.random.default_rng(0)
+    sp = learn_sparse_paths(jnp.asarray(X[:12]), theta=1.0)
+    plain = fit(MeasureSpec("spdtw", theta=1.0), X, sp=sp)
+    with pytest.raises(AssertionError):
+        fit_anomaly_scorer(plain)
+
+
+def test_roc_auc_rank_statistic():
+    # perfect separation, perfect reversal, chance with ties
+    assert roc_auc([1, 2, 3, 10, 11], [0, 0, 0, 1, 1]) == 1.0
+    assert roc_auc([1, 2, 10, 11, 12], [1, 1, 0, 0, 0]) == 0.0
+    assert roc_auc([5, 5, 5, 5], [0, 1, 0, 1]) == 0.5
+    with pytest.raises(AssertionError):
+        roc_auc([1, 2], [1, 1])
+
+
+# ------------------------------------------------------------- (b) drift
+def test_drift_fires_on_shift_and_stays_silent_on_iid():
+    """The acceptance property, deterministically under the spec seed:
+    i.i.d. corpus resamples never trigger; an amplitude shift does."""
+    X, _, eng = _toy_engine(seed=5)
+    rng = np.random.default_rng(7)
+    iid = X[rng.integers(0, len(X), 32)]
+    shifted = 2.0 * iid + 0.5
+
+    def drive(stream):
+        dm = fit_drift_monitor(eng, window=8, alpha=0.01, n_perm=100)
+        for lo in range(0, len(stream), 8):
+            dm.update(np.asarray(eng.sketch_embed(stream[lo:lo + 8])))
+        return dm
+
+    assert drive(iid).events == []
+    ev = drive(shifted).events
+    assert len(ev) >= 1
+    # deterministic: same seeds, same trigger positions, same thresholds
+    assert drive(shifted).events == ev
+    d1 = fit_drift_monitor(eng, window=8, alpha=0.01, n_perm=100)
+    d2 = fit_drift_monitor(eng, window=8, alpha=0.01, n_perm=100)
+    assert d1.thresholds == d2.thresholds
+
+
+def test_drift_monitor_state_machine():
+    X, _, eng = _toy_engine()
+    dm = fit_drift_monitor(eng, window=6, alpha=0.05, n_perm=50)
+    feats = np.asarray(eng.sketch_embed(X[:4]))
+    assert dm.update(feats) is False          # window not yet full
+    assert dm.n_seen == 4 and dm.n_windows == 0
+    dm.update(feats)                          # fills the window
+    assert dm.n_windows == 1 and dm.last_stats is not None
+    c = dm.counters()
+    assert c["n_seen"] == 8 and c["window"] == 6
+    assert set(c["thresholds"]) == {"mean_shift", "quantile_shift"}
+    dm.reset()
+    assert dm.n_seen == 0 and dm.events == [] and dm.last_stats is None
+    with pytest.raises(AssertionError):
+        dm.update(feats[:, :2])               # wrong feature width
+
+
+def test_learner_relearns_support_on_drift_trigger():
+    """The fitting-side integration: a ``Learner`` given a drift
+    monitor re-learns support occupancy when the trigger fires, with no
+    fixed ``support_every`` cadence; an i.i.d. stream leaves the
+    support untouched."""
+    from repro.core.snapshot import SnapshotStore
+    from repro.launch.learner import Learner
+    X, _, eng = _toy_engine(labels=False)
+    rng = np.random.default_rng(11)
+    iid = X[rng.integers(0, len(X), 16)]
+    shifted = (2.0 * iid + 0.5).astype(np.float32)
+
+    def drive(arrivals):
+        store = SnapshotStore(eng, keep_history=True)
+        dm = fit_drift_monitor(eng, window=8, alpha=0.01, n_perm=100)
+        learner = Learner(store, arrivals, batch=8, support_every=0,
+                          drift_monitor=dm)
+        learner.drain()
+        return learner, store
+
+    l_iid, _ = drive(iid)
+    assert l_iid.n_support_refreshes == 0
+    l_sh, store = drive(shifted)
+    assert l_sh.n_support_refreshes >= 1
+    # the re-learned support actually moved: the published engine's
+    # weight grid differs from the frozen one it started from
+    w_new = np.asarray(store.current().engine.weights)
+    assert not np.array_equal(w_new, np.asarray(eng.weights))
+
+
+# ----------------------------------------------------------- embedding map
+def test_power_iteration_pca_matches_eigh():
+    rng = np.random.default_rng(0)
+    M = rng.normal(size=(40, 7)) @ np.diag([3.0, 2.0, 1.0, .5, .3, .2, .1])
+    comps, coords, ev = power_iteration_pca(M, 3, seed=0)
+    Mc = M - M.mean(0)
+    w, V = np.linalg.eigh(Mc.T @ Mc / (len(M) - 1))
+    lam = ev * (Mc * Mc).sum() / (len(M) - 1)
+    np.testing.assert_allclose(np.sort(lam)[::-1], w[::-1][:3], rtol=1e-6)
+    for j in range(3):
+        assert abs(float(comps[j] @ V[:, -1 - j])) > 1.0 - 1e-6
+    assert coords.shape == (40, 3)
+    assert (np.diff(ev) <= 1e-12).all()       # variance-sorted
+    # deterministic, including the sign convention
+    comps2, coords2, _ = power_iteration_pca(M, 3, seed=0)
+    assert np.array_equal(comps, comps2) and np.array_equal(coords, coords2)
+
+
+def test_sketch_map_payload():
+    X, _, eng = _toy_engine()
+    m = sketch_map(eng)
+    assert m["n_series"] == len(X) and m["n_components"] == 2
+    assert m["orthonormal_err"] <= 1e-6
+    assert len(m["coords"]) == len(X) and len(m["coords"][0]) == 2
+    assert not m["coords_truncated"]
+    assert sum(c["n"] for c in m["classes"]) == len(X)
+    labs = sorted(c["label"] for c in m["classes"])
+    assert labs == [0, 1, 2]                  # engine labels: arange % 3
+    # per-class centroids are the mean of that class's coords
+    coords = np.asarray(m["coords"])
+    y = np.asarray(eng.labels)
+    for c in m["classes"]:
+        np.testing.assert_allclose(
+            c["centroid"], coords[y == c["label"]].mean(0), atol=1e-5)
+    # truncation is recorded
+    m2 = sketch_map(eng, max_points=10)
+    assert len(m2["coords"]) == 10 and m2["coords_truncated"]
+
+
+# ------------------------------------------------- serving-side integration
+def test_monitor_rides_search_engine_stats():
+    from repro.launch.search import SearchEngine
+    X, _, eng = _toy_engine()
+    mon = fit_monitor(eng, k=3, quantile=0.8, n_cal=16, window=8,
+                      alpha=0.01, n_perm=100)
+    serve = SearchEngine(None, engine=eng, monitor=mon)
+    Q, truth = _stream(X, nq=16, n_out=4)
+    for lo in range(0, 16, 8):
+        serve.search(Q[lo:lo + 8])
+    st = serve.stats()
+    assert st["monitor"]["n_scored"] == 16
+    assert st["monitor"]["n_batches"] == 2
+    # every injected walk was flagged on the stream
+    assert st["monitor"]["n_flagged"] >= int(truth.sum())
+    assert 0.0 <= st["monitor"]["escalation_rate"] <= 1.0
+    assert st["monitor"]["tau"] == mon.anomaly.tau
+    assert st["monitor"]["drift"]["n_seen"] == 16
+    # the monitor pass is its own latency stage
+    p = st["latency_ms"]["monitor"]
+    assert 0.0 <= p["p50"] <= p["p95"] <= p["p99"]
+    # serving answers are untouched by monitoring
+    nn_m, d_m = serve.search(Q)
+    nn_p, d_p = SearchEngine(None, engine=eng).search(Q)
+    assert np.array_equal(nn_m, nn_p) and np.array_equal(d_m, d_p)
+    # counters reset with the drift window; fitted state survives
+    mon.reset()
+    assert mon.n_scored == 0 and mon.drift.n_seen == 0
+    assert mon.anomaly.tau == st["monitor"]["tau"]
+
+
+def test_monitor_requires_sketch_engine():
+    from repro.launch.search import SearchEngine
+    X, sp, _ = _toy_engine()[0], None, None
+    sp = learn_sparse_paths(jnp.asarray(X[:12]), theta=1.0)
+    plain = fit(MeasureSpec("spdtw", theta=1.0), X, sp=sp)
+    with pytest.raises(AssertionError):
+        SearchEngine(None, engine=plain,
+                     monitor=Monitor(engine=plain))
+    with pytest.raises(AssertionError):
+        fit_monitor(plain)
+
+
+# ------------------------------------------------------ (c) scenario artifact
+def test_anomaly_scenario_payload_and_schema(tmp_path):
+    """Drive the anomaly load shape at smoke shapes and gate both
+    emitted artifacts with the real schema checker: ROC-AUC >= 0.9 on
+    the seeded outliers, exact escalated decisions, drift behaviour,
+    and the monitor-on p99 overhead all reported."""
+    import json
+    from benchmarks.check_artifacts import check_file
+    from repro.launch import scenarios
+    out = scenarios.anomaly_run(
+        n_queries=12, batch=6, n_train=24, T=32, n_sp_train=12,
+        sketch_r=4, n_cal=16, window=6, alpha=0.01, n_perm=100, seed=0)
+    assert out["roc_auc"] >= 0.9
+    assert out["decisions_exact"] is True
+    assert out["drift"]["silent_on_iid"] and out["drift"]["fires_on_shift"]
+    assert out["p99_overhead_ratio"] > 0
+    assert "p99" in out["server_monitor"]["latency_ms"]
+    assert out["monitor"]["n_scored"] >= out["n_queries"]
+    emb = out.pop("embed_map")
+    a_path = tmp_path / "BENCH_anomaly.json"
+    e_path = tmp_path / "BENCH_embed.json"
+    a_path.write_text(json.dumps(out, indent=1, default=float))
+    e_path.write_text(json.dumps(emb, indent=1, default=float))
+    assert check_file(str(a_path)) == []
+    assert check_file(str(e_path)) == []
+    # the gate actually rejects the failure modes it exists for
+    bad = dict(out, roc_auc=0.5, decisions_exact=False)
+    bad_path = tmp_path / "bad" / "BENCH_anomaly.json"
+    bad_path.parent.mkdir()
+    bad_path.write_text(json.dumps(bad, indent=1, default=float))
+    errs = check_file(str(bad_path))
+    assert any("ROC-AUC" in e for e in errs)
+    assert any("bit-identical" in e for e in errs)

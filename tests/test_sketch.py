@@ -154,6 +154,87 @@ def test_sketch_mode_requires_sketch():
         eng.knn(Q, mode="nope")
 
 
+# ------------------------------------------------- monitor-facing edge cases
+def test_sketch_knn_single_query_batch():
+    """B=1 batches (the single_stream serving shape and the monitor's
+    smallest escalation unit) must work and stay bit-identical to exact
+    mode at full coverage."""
+    X, sp, Q = _toy()
+    eng = fit(MeasureSpec("spdtw", sketch_r=6), X, sp=sp)
+    q1 = Q[:1]
+    nn_e, d_e = eng.knn(q1)
+    nn_s, d_s, st = eng.knn(q1, mode="sketch", top_c=len(X),
+                            return_stats=True)
+    assert np.asarray(nn_s).shape == (1,) and np.asarray(d_s).shape == (1,)
+    assert np.array_equal(np.asarray(nn_e), np.asarray(nn_s))
+    assert np.array_equal(np.asarray(d_e), np.asarray(d_s))
+    assert st["n_queries"] == 1
+
+
+def test_sketch_knn_top_c_clamps_to_corpus():
+    """top_c >= N clamps to the corpus size: same answers as top_c = N,
+    a full shortlist (zero shortlist prune), and no out-of-range
+    candidate indices."""
+    X, sp, Q = _toy()
+    n = len(X)
+    eng = fit(MeasureSpec("spdtw", sketch_r=6), X, sp=sp)
+    nn_n, d_n = eng.knn(Q, mode="sketch", top_c=n)
+    nn_big, d_big, st = eng.knn(Q, mode="sketch", top_c=10 * n,
+                                return_stats=True)
+    assert np.array_equal(np.asarray(nn_n), np.asarray(nn_big))
+    assert np.array_equal(np.asarray(d_n), np.asarray(d_big))
+    assert st["shortlist_c"] == n and st["shortlist_prune"] == 0.0
+    si = eng.index.sketch
+    feats = eng.sketch_embed(Q)
+    cand, _ = sketch_shortlist(feats, si, 10 * n)
+    assert cand.shape == (len(Q), n)
+    assert (np.asarray(cand) >= 0).all() and (np.asarray(cand) < n).all()
+
+
+def test_sketch_knn_approx_distance_is_true_pair_distance():
+    """approx=True returns the sketch-nearest candidate with its TRUE
+    exact distance (one DP per query) — including at B=1."""
+    X, sp, Q = _toy(n=20, nq=5)
+    eng = fit(MeasureSpec("spdtw", sketch_r=8), X, sp=sp)
+    for q in (Q, Q[:1]):
+        nn, dist = eng.knn(q, mode="sketch", top_c=3, approx=True)
+        d_pair = np.asarray(eng.pairs(q, np.asarray(X)[np.asarray(nn)]))
+        np.testing.assert_array_equal(np.asarray(dist), d_pair)
+
+
+def test_sketch_knn_corpus_smaller_than_top_c():
+    """A corpus smaller than the default/requested shortlist must serve
+    (shortlist covers everything, so the result is exact)."""
+    X, sp, Q = _toy(n=24, nq=4)
+    Xs = X[:5]
+    eng = fit(MeasureSpec("spdtw", sketch_r=4), Xs, sp=sp)
+    nn_e, d_e = eng.knn(Q)
+    nn_s, d_s, st = eng.knn(Q, mode="sketch", top_c=16, return_stats=True)
+    assert st["shortlist_c"] == 5 and st["n_candidates"] == 5
+    assert np.array_equal(np.asarray(nn_e), np.asarray(nn_s))
+    assert np.array_equal(np.asarray(d_e), np.asarray(d_s))
+
+
+def test_engine_sketch_embed_public_method():
+    """``SimilarityEngine.sketch_embed`` is the public seam for sketch
+    features: equal to the module-level embedding against the fitted
+    anchors, and refused on engines fit without a sketch."""
+    X, sp, Q = _toy()
+    eng = fit(MeasureSpec("spdtw", sketch_r=6), X, sp=sp)
+    si = eng.index.sketch
+    F = eng.sketch_embed(Q)
+    F2 = sketch_embed(Q, si.anchors, bsp=eng.index.bsp,
+                      weights=eng.index.weights)
+    assert F.shape == (len(Q), si.R)
+    assert np.array_equal(np.asarray(F), np.asarray(F2))
+    # corpus rows embed back to the stored sketch matrix
+    assert np.array_equal(np.asarray(eng.sketch_embed(X)),
+                          np.asarray(si.sketch))
+    plain = fit(MeasureSpec("spdtw"), X, sp=sp)
+    with pytest.raises(AssertionError):
+        plain.sketch_embed(Q)
+
+
 # ------------------------------------------------------------- svm fast path
 def test_svm_rws_series_shapes_and_determinism():
     from repro.classify import svm_rws_series
